@@ -1,0 +1,75 @@
+"""Ablations over the paper's knobs (App. E.5 discussions):
+
+* p sweep      — "On the choice of p": oracle vs communication tradeoff.
+* bucket sweep — s ∈ {1,2,4}: Alg. 2's robustness/variance tradeoff
+                 (paper recommends s=2).
+* batch sweep  — "On the batchsizes": gains saturate once
+                 b ≳ max{∛(cδm²), √m}.
+* IS vs US     — Example E.2: importance sampling reaches the target in
+                 fewer rounds when 𝓛±(IS) ≪ 𝓛±(US).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_logreg_problem
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_init, make_step, theory)
+from repro.data import corrupt_labels_logreg, init_logreg_params
+
+KEY = jax.random.PRNGKey(5)
+DIM = 30
+
+
+def _final_gap(data, loss_fn, full, f_star, cfg, iters=400, sampler=None):
+    step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+    anchor = data.stacked()
+    state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
+        init_logreg_params(DIM), anchor, KEY)
+    k = KEY
+    for it in range(iters):
+        k, k1, k2 = jax.random.split(k, 3)
+        mb = sampler(k1) if sampler else data.sample_batches(k1, 32)
+        state, _ = step(state, mb, anchor, k2)
+    return float(loss_fn(state["params"], full)) - f_star
+
+
+def run():
+    data, loss_fn, full, f_star = make_logreg_problem(KEY, dim=DIM)
+    base = dict(n_workers=5, n_byz=1, lr=0.5,
+                aggregator=get_aggregator("cm", bucket_size=2),
+                attack=get_attack("ALIE"))
+
+    for p in [0.02, 0.1, 0.5]:
+        cfg = ByzVRMarinaConfig(p=p, **base)
+        gap = _final_gap(data, loss_fn, full, f_star, cfg)
+        emit(f"ablate/p{p}", 0.0, f"gap={gap:.2e}")
+
+    for s in [1, 2, 4]:
+        kw = dict(base)
+        kw["aggregator"] = get_aggregator("cm", bucket_size=s)
+        cfg = ByzVRMarinaConfig(p=0.1, **kw)
+        gap = _final_gap(data, loss_fn, full, f_star, cfg)
+        emit(f"ablate/bucket{s}", 0.0, f"gap={gap:.2e}")
+
+    for b in [8, 32, 128]:
+        cfg = ByzVRMarinaConfig(p=0.1, **base)
+        gap = _final_gap(data, loss_fn, full, f_star, cfg, iters=300,
+                         sampler=lambda k: data.sample_batches(k, b))
+        emit(f"ablate/batch{b}", 0.0, f"gap={gap:.2e}")
+
+    # importance vs uniform sampling (Example E.2)
+    probs, lbar = theory.importance_weights(data.features, 0.01)
+    pc = theory.logreg_constants(data.features, 0.01, n_workers=5)
+    cfg = ByzVRMarinaConfig(p=0.1, **base)
+    gap_us = _final_gap(data, loss_fn, full, f_star, cfg, iters=250)
+    gap_is = _final_gap(
+        data, loss_fn, full, f_star, cfg, iters=250,
+        sampler=lambda k: data.sample_batches_importance(k, 32, probs))
+    emit("ablate/sampling-uniform", 0.0,
+         f"gap={gap_us:.2e};calL={pc.calL_pm:.2f}")
+    emit("ablate/sampling-importance", 0.0,
+         f"gap={gap_is:.2e};calL={lbar:.2f}")
+
+
+if __name__ == "__main__":
+    run()

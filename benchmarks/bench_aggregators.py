@@ -1,0 +1,40 @@
+"""Server-side aggregation throughput: jnp reference vs Pallas kernel
+(interpret mode on CPU — on TPU the kernel path is the compiled one), across
+worker counts and dimensions. One row per (impl, rule, n, d)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.aggregators import get_aggregator
+from repro.kernels import ref
+from repro.kernels.robust_agg import robust_agg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    for n in [16, 32]:
+        for d in [1 << 16, 1 << 20]:
+            x = jax.random.normal(KEY, (n, d))
+            for rule, kernel_rule in [("cm", "median"), ("tm", "trimmed")]:
+                agg = get_aggregator(rule, bucket_size=2)
+                jref = jax.jit(lambda k, a: agg(k, a))
+                us = time_fn(jref, KEY, x)
+                emit(f"agg/jnp/{rule}/n{n}/d{d}", us,
+                     f"GBps={n*d*4/us/1e3:.2f}")
+                kern = jax.jit(lambda a: robust_agg(
+                    a, bucket_size=2, rule=kernel_rule, interpret=True))
+                us_k = time_fn(kern, x, iters=3)
+                emit(f"agg/pallas-interp/{kernel_rule}/n{n}/d{d}", us_k,
+                     f"GBps={n*d*4/us_k/1e3:.2f}")
+    # norm-based rules (tree path)
+    for rule in ["rfa", "krum"]:
+        x = jax.random.normal(KEY, (16, 1 << 18))
+        agg = get_aggregator(rule, bucket_size=2)
+        jref = jax.jit(lambda k, a: agg(k, a))
+        us = time_fn(jref, KEY, x)
+        emit(f"agg/jnp/{rule}/n16/d{1<<18}", us, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Compressor throughput + realized wire compression (Def. 2.2 operators and
+the Pallas block quantizer). One row per (compressor, d)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.compressors import get_compressor
+from repro.kernels.quantize import block_quantize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    for d in [1 << 16, 1 << 20]:
+        x = jax.random.normal(KEY, (d,))
+        for name, kw in [("randk", {"ratio": 0.1}), ("dither", {"levels": 4}),
+                         ("natural", {})]:
+            comp = get_compressor(name, **kw)
+            f = jax.jit(lambda k, a: comp.compress(k, a))
+            us = time_fn(f, KEY, x)
+            ratio = 32 * d / comp.bits_per_vector(d)
+            emit(f"compress/{comp.name}/d{d}", us,
+                 f"wire_compression={ratio:.1f}x;omega={comp.omega(d):.3g}")
+        u = jax.random.uniform(KEY, (d,))
+        fq = jax.jit(lambda a, uu: block_quantize(a, uu, levels=4, block=256,
+                                                  interpret=True))
+        us = time_fn(fq, x, u, iters=3)
+        emit(f"compress/pallas-blockquant/d{d}", us,
+             "wire_compression=~8x(4b+block norms)")
+
+
+if __name__ == "__main__":
+    run()

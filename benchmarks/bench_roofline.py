@@ -1,0 +1,40 @@
+"""§Roofline source: reads experiments/dryrun/*.json (produced by
+launch/dryrun.py) and emits the three-term roofline table per
+(arch, shape, mesh). Run the dry-run sweep first."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/NO-DRYRUN-DATA", 0.0,
+             "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        extra = "__".join(os.path.basename(f).split("__")[3:]).replace(
+            ".json", "")
+        if extra:
+            tag += "/" + extra
+        if not rec.get("ok"):
+            emit(f"roofline/{tag}", 0.0, f"FAILED={rec.get('error')}")
+            continue
+        r = rec["roofline"]
+        emit(f"roofline/{tag}", r["compute_s"] * 1e6,
+             (f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+              f"collective={r['collective_s']:.3e}s;"
+              f"dominant={r['dominant'].replace('_s','')};"
+              f"useful_flops={r['useful_flop_ratio']:.3f}" if
+              r['useful_flop_ratio'] else
+              f"dominant={r['dominant']}"))
+
+
+if __name__ == "__main__":
+    run()

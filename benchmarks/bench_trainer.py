@@ -1,0 +1,65 @@
+"""System throughput: wall-clock steps/s of the full Byz-VR-MARINA trainer
+on this host (single device; the distributed step is the same code jitted
+onto the mesh). One row per (model, aggregator, compressor) with tokens/s.
+"""
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_init, make_step)
+from repro.data import TokenStream, corrupt_labels_lm
+from repro.models import init_params, loss_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    n, bw, s = 4, 2, 64
+    for arch in ["qwen3-1.7b", "mamba2-130m", "phi3.5-moe-42b-a6.6b"]:
+        cfg = get_config(arch).reduced()
+        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=s,
+                             n_workers=n, per_worker_batch=bw,
+                             num_codebooks=cfg.num_codebooks,
+                             frontend_tokens=cfg.frontend_tokens,
+                             d_model=cfg.d_model)
+
+        def loss(params, batch, key):
+            return loss_fn(params, cfg, batch)
+
+        for agg_name, comp_name in [("mean", "identity"),
+                                    ("cm", "identity"),
+                                    ("cm", "randk"),
+                                    ("rfa", "identity")]:
+            comp = (get_compressor("randk", ratio=0.25)
+                    if comp_name == "randk" else get_compressor("identity"))
+            bcfg = ByzVRMarinaConfig(
+                n_workers=n, n_byz=1, p=0.25, lr=1e-2,
+                aggregator=get_aggregator(agg_name,
+                                          bucket_size=0 if agg_name == "mean"
+                                          else 2),
+                compressor=comp, attack=get_attack("ALIE"))
+            step = jax.jit(make_step(bcfg, loss, corrupt_labels_lm))
+            state = make_init(bcfg, loss, corrupt_labels_lm)(
+                init_params(KEY, cfg), stream.anchor(0), KEY)
+            # warmup (compile)
+            state, _ = step(state, stream.minibatch(0), stream.anchor(0),
+                            KEY)
+            jax.block_until_ready(state["g"])
+            iters = 8
+            t0 = time.perf_counter()
+            for it in range(iters):
+                state, m = step(state, stream.minibatch(it),
+                                stream.anchor(it),
+                                jax.random.fold_in(KEY, it))
+            jax.block_until_ready(state["g"])
+            dt = (time.perf_counter() - t0) / iters
+            toks = n * bw * s
+            emit(f"trainer/{arch}/{agg_name}+{comp_name}", dt * 1e6,
+                 f"tokens_per_s={toks/dt:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Shared benchmark harness utilities."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn, *args, warmup=2, iters=10):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def make_logreg_problem(key, *, dim=30, n_samples=400, n_workers=5,
+                        homogeneous=True, lam=0.01):
+    from repro.data import make_logreg_data, logreg_loss, init_logreg_params
+    data = make_logreg_data(key, n_samples=n_samples, dim=dim,
+                            n_workers=n_workers, homogeneous=homogeneous)
+    loss_fn = logreg_loss(lam)
+    full = {"x": data.features, "y": data.labels}
+    p = init_logreg_params(dim)
+    gd = jax.jit(lambda q: jax.tree.map(
+        lambda a, g: a - 0.5 * g, q, jax.grad(loss_fn)(q, full)))
+    for _ in range(2500):
+        p = gd(p)
+    return data, loss_fn, full, float(loss_fn(p, full))

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1      Fig. 1  — 3 aggregators x 5 attacks optimality gaps (+ RandK)
+  table2    Tbl. 2  — rounds-to-epsilon, Byz-VR-MARINA vs baselines
+  fig8      Fig. 8  — optimality gap vs transmitted bits
+  agg       (system) server-side aggregation throughput, jnp vs Pallas
+  compress  (system) compressor throughput + wire compression
+  roofline  §Roofline terms from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV. Select a subset with argv, e.g.
+``python -m benchmarks.run fig1 roofline``.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ablations, bench_aggregators,
+                            bench_compressors, bench_fig1, bench_fig8,
+                            bench_roofline, bench_table2, bench_trainer)
+    suites = {
+        "ablate": bench_ablations.run,
+        "trainer": bench_trainer.run,
+        "agg": bench_aggregators.run,
+        "compress": bench_compressors.run,
+        "fig1": bench_fig1.run,
+        "table2": bench_table2.run,
+        "fig8": bench_fig8.run,
+        "roofline": bench_roofline.run,
+    }
+    chosen = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in chosen:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001 — a broken suite must not
+            traceback.print_exc()  # silence the others
+            print(f"{name}/SUITE-FAILED,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper App. B.3.1 (Fig. 2/3): heterogeneous data — 15 workers with a
+disjoint sequential split, 5 of them Byzantine, robust aggregation with
+bucketing. Demonstrates Thm. 2.1's two regimes:
+
+  * robust aggregators converge to the O(cδζ²/p) neighbourhood of the good
+    workers' optimum (the Karimireddy et al. lower-bound floor — no
+    algorithm can do better under heterogeneity);
+  * plain averaging is dragged arbitrarily far by ALIE/IPM.
+
+  PYTHONPATH=src python examples/heterogeneous.py [--iters 500]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_init, make_step, theory)
+from repro.data import (corrupt_labels_logreg, init_logreg_params,
+                        logreg_loss, make_logreg_data)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--iters", type=int, default=500)
+ap.add_argument("--randk", type=float, default=1.0)
+args = ap.parse_args()
+
+DIM = 30
+N, NBYZ = 15, 5
+key = jax.random.PRNGKey(0)
+data = make_logreg_data(key, n_samples=1500, dim=DIM, n_workers=N,
+                        homogeneous=False)
+loss_fn = logreg_loss(0.01)
+
+# f* over the GOOD workers' pooled data (workers 0..NBYZ-1 are byzantine)
+goods = [data.worker_slice(i) for i in range(NBYZ, N)]
+full = {"x": jnp.concatenate([g[0] for g in goods]),
+        "y": jnp.concatenate([g[1] for g in goods])}
+p_star = init_logreg_params(DIM)
+gd = jax.jit(lambda p: jax.tree.map(
+    lambda a, g: a - 0.5 * g, p, jax.grad(loss_fn)(p, full)))
+for _ in range(3000):
+    p_star = gd(p_star)
+f_star = float(loss_fn(p_star, full))
+
+# empirical ζ² at x* (As. 2.2) and the theoretical floor
+grads = [jax.grad(loss_fn)(p_star, {"x": g[0], "y": g[1]}) for g in goods]
+gbar = jax.tree.map(lambda *x: sum(x) / len(x), *grads)
+zeta_sq = float(sum(
+    sum(jnp.sum((a - b) ** 2) for a, b in
+        zip(jax.tree.leaves(g), jax.tree.leaves(gbar)))
+    for g in grads) / len(grads))
+floor = theory.error_floor(delta=NBYZ / N, c=6.0, p=0.1, zeta_sq=zeta_sq,
+                           mu=0.02)
+print(f"heterogeneous split: ζ² = {zeta_sq:.4f}  "
+      f"theory floor O(cδζ²/pμ) = {floor:.3f}  f* = {f_star:.4f}")
+
+comp = (get_compressor("randk", ratio=args.randk) if args.randk < 1
+        else get_compressor("identity"))
+for attack in ["NA", "LF", "BF", "ALIE", "IPM"]:
+    row = []
+    for agg_label, rule, bucket in [("AVG", "mean", 0), ("CM", "cm", 2),
+                                    ("RFA", "rfa", 2)]:
+        cfg = ByzVRMarinaConfig(
+            n_workers=N, n_byz=NBYZ, p=0.1, lr=0.2,
+            aggregator=get_aggregator(rule, bucket_size=bucket),
+            compressor=comp, attack=get_attack(attack))
+        step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+        anchor = data.stacked()
+        state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
+            init_logreg_params(DIM), anchor, key)
+        k = jax.random.PRNGKey(1)
+        for it in range(args.iters):
+            k, k1, k2 = jax.random.split(k, 3)
+            state, _ = step(state, data.sample_batches(k1, 32), anchor, k2)
+        gap = float(loss_fn(state["params"], full)) - f_star
+        row.append(f"{agg_label}:{gap:9.2e}")
+    print(f"{attack:>5} | " + "  ".join(row))
+print("\nAll methods plateau at an O(δζ²)-scale gap — the heterogeneous "
+      "lower bound of Karimireddy et al. (2022) binds every algorithm; "
+      "the theory floor above is the (loose) Thm. 2.1 constant. Compare "
+      "the clean-data example (quickstart.py) where the same attacks are "
+      "driven to f* exactly. This mirrors the paper's Fig. 2 plateaus.")

@@ -1,0 +1,67 @@
+"""Quickstart: Byzantine-robust training in ~40 lines (paper Fig. 1 setup).
+
+Four good workers + one Byzantine running the ALIE attack on ℓ2-regularized
+logistic regression. Byz-VR-MARINA with CM∘bucketing converges linearly to
+the optimum; try --agg mean to watch plain averaging get poisoned.
+
+  PYTHONPATH=src python examples/quickstart.py [--attack ALIE] [--agg cm]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_init, make_step)
+from repro.data import (corrupt_labels_logreg, init_logreg_params,
+                        logreg_loss, make_logreg_data)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--attack", default="ALIE",
+                choices=["NA", "LF", "BF", "ALIE", "IPM"])
+ap.add_argument("--agg", default="cm", choices=["mean", "cm", "rfa", "krum"])
+ap.add_argument("--randk", type=float, default=0.1,
+                help="RandK ratio (1.0 = no compression)")
+ap.add_argument("--iters", type=int, default=600)
+args = ap.parse_args()
+
+key = jax.random.PRNGKey(0)
+data = make_logreg_data(key, n_samples=500, dim=30, n_workers=5)
+loss_fn = logreg_loss(lam=0.01)
+
+# reference optimum f* (exact GD)
+full = {"x": data.features, "y": data.labels}
+p_star = init_logreg_params(30)
+gd = jax.jit(lambda p: jax.tree.map(
+    lambda a, g: a - 0.5 * g, p, jax.grad(loss_fn)(p, full)))
+for _ in range(3000):
+    p_star = gd(p_star)
+f_star = float(loss_fn(p_star, full))
+
+cfg = ByzVRMarinaConfig(
+    n_workers=5, n_byz=1, p=0.1, lr=0.5,
+    aggregator=get_aggregator(args.agg,
+                              bucket_size=0 if args.agg == "mean" else 2),
+    compressor=(get_compressor("randk", ratio=args.randk)
+                if args.randk < 1 else get_compressor("identity")),
+    attack=get_attack(args.attack))
+
+step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+anchor = data.stacked()
+state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
+    init_logreg_params(30), anchor, key)
+
+print(f"attack={args.attack} aggregator={cfg.aggregator.name} "
+      f"compressor={cfg.compressor.name}  f*={f_star:.6f}")
+k = jax.random.PRNGKey(42)
+for it in range(args.iters):
+    k, k1, k2 = jax.random.split(k, 3)
+    state, m = step(state, data.sample_batches(k1, 32), anchor, k2)
+    if (it + 1) % 100 == 0:
+        gap = float(loss_fn(state["params"], full)) - f_star
+        print(f"  round {it+1:4d}  f(x)-f* = {gap:.3e}")
+print("done — linear convergence to f* despite the Byzantine worker"
+      if float(loss_fn(state['params'], full)) - f_star < 1e-4 else
+      "done — did NOT reach f* (expected for --agg mean under attack)")

@@ -1,0 +1,43 @@
+"""Serving example: batched autoregressive decoding with per-family caches
+(KV ring buffer / MLA latent / SSM state). Serves a batch of requests of
+different prompt lengths through one shared cache, reduced config on CPU.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import init_params
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--prompt-len", type=int, default=24)
+ap.add_argument("--gen-len", type=int, default=48)
+ap.add_argument("--temperature", type=float, default=0.8)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+shape = ((args.batch, args.prompt_len) if cfg.num_codebooks == 1 else
+         (args.batch, args.prompt_len, cfg.num_codebooks))
+prompts = jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+print(f"[serve] {args.arch} (reduced) — batch={args.batch} "
+      f"prompt={args.prompt_len} gen={args.gen_len}")
+t0 = time.time()
+out = generate(cfg, params, prompts, args.gen_len,
+               temperature=args.temperature, key=key)
+dt = time.time() - t0
+print(f"  generated {out.shape} in {dt:.1f}s "
+      f"({args.batch*args.gen_len/dt:.0f} tok/s incl. compile)")
+print("  sample:", jax.device_get(out[0])[:12], "...")

@@ -1,0 +1,78 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSONs."""
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) != 3:
+            continue   # perf-variant files handled separately
+        recs.append(json.load(open(f)))
+
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    print("## Roofline (single-pod 16x16, 256 chips; v5e constants)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+          " useful_FLOPs | temp_GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    singles = [r for r in recs if r["mesh"] == "single"]
+    order = {s: i for i, s in enumerate(shapes)}
+    singles.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in singles:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | FAILED: "
+                  f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        tmp = r["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        uf = rf.get("useful_flop_ratio")
+        print(f"| {r['arch']} | {r['shape']} | {fmt(rf['compute_s'])} | "
+              f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+              f"{rf['dominant'].replace('_s','')} | "
+              f"{uf:.3f} | {tmp:.1f} |" if uf else
+              f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - |")
+
+    print("\n## Multi-pod (2x16x16, 512 chips) compile status\n")
+    print("| arch | shape | ok | compile_s | collective_bytes/dev |")
+    print("|---|---|---|---|---|")
+    multis = [r for r in recs if r["mesh"] == "multi"]
+    multis.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in multis:
+        cb = r.get("collectives", {}).get("total_bytes", 0) if r.get("ok") \
+            else "-"
+        print(f"| {r['arch']} | {r['shape']} | {r.get('ok')} | "
+              f"{r.get('compile_s','-')} | {cb:.3g} |"
+              if r.get("ok") else
+              f"| {r['arch']} | {r['shape']} | FAIL | - | - |")
+
+    # hillclimb candidates
+    print("\n## Hillclimb candidate analysis (single-pod)\n")
+    worst_compute_frac = None
+    most_collective = None
+    for r in singles:
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        tot = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        frac = rf["compute_s"] / tot if tot else 0
+        if worst_compute_frac is None or frac < worst_compute_frac[0]:
+            worst_compute_frac = (frac, r["arch"], r["shape"])
+        cfrac = rf["collective_s"] / tot if tot else 0
+        if most_collective is None or cfrac > most_collective[0]:
+            most_collective = (cfrac, r["arch"], r["shape"])
+    print("worst compute fraction:", worst_compute_frac)
+    print("most collective-bound:", most_collective)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Byz-VR-MARINA multi-pod JAX framework (see README.md / DESIGN.md)."""

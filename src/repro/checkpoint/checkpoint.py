@@ -1,0 +1,78 @@
+"""Checkpointing: pytree <-> .npz with structure manifest.
+
+Arrays are gathered to host (fully addressable on the CPU dry-run host;
+on a real pod this is where a sharded-save would slot in — the manifest
+format already records per-leaf paths so per-shard files are a drop-in).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy's npz cannot store natively -> stored as raw uint16/uint8 views
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(path: str, state, step: int | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(state)
+    arrays = {}
+    manifest = {"step": int(step) if step is not None else None, "leaves": {}}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        name = f"leaf_{i:05d}"
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][1])
+        arrays[name] = arr
+        manifest["leaves"][key] = {"name": name, "dtype": dtype_name,
+                                   "shape": list(arr.shape)}
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    restored = {}
+    for key in flat_like:
+        entry = manifest["leaves"][key]
+        raw = data[entry["name"]]
+        if entry["dtype"] in _EXOTIC:
+            raw = raw.view(_EXOTIC[entry["dtype"]][0])
+        restored[key] = jnp.asarray(raw)
+    # rebuild in tree order
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, _ in flat:
+        key = "/".join(_path_str(p) for p in path)
+        leaves.append(restored[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

@@ -1,0 +1,206 @@
+"""(δ, c)-robust aggregation rules (Def. 2.1) with bucketing (Alg. 2).
+
+Two call paths:
+
+* ``agg(key, x)`` — flat stacked workers ``x: (n, d) -> (d,)``. Used by unit
+  tests, the Pallas kernel oracle, and the explicit shard_map path (where an
+  optional ``axis_name`` psums partial norms over the model axis so RFA/Krum
+  distances are global even though each device only holds a model shard).
+* ``agg.tree(key, xs)`` — ``xs`` is a gradient pytree whose leaves carry a
+  leading worker axis ``(n, ...)``. Coordinate-wise rules map leaf-wise;
+  norm-based rules (RFA/Krum) compute *global* distances by summing per-leaf
+  contributions. The bucketing permutation is shared across leaves.
+
+Theorem D.1: Krum∘Bucketing (c=O(1), δ<1/4), RFA∘Bucketing (c=O(1), δ<1/2),
+CM∘Bucketing (c=O(d), δ<1/2) all satisfy Def. 2.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# primitive coordinate-wise rules on (n, ...) arrays
+# ---------------------------------------------------------------------------
+
+def coord_median(x):
+    """Exact coordinate-wise median over axis 0 (Eq. 17)."""
+    n = x.shape[0]
+    xs = jnp.sort(x, axis=0)
+    if n % 2:
+        return xs[n // 2]
+    return 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def coord_trimmed_mean(x, trim: int):
+    n = x.shape[0]
+    t = min(trim, (n - 1) // 2)
+    xs = jnp.sort(x, axis=0)
+    return jnp.mean(xs[t:n - t], axis=0)
+
+
+def bucketize(key, x, s: int):
+    """Alg. 2: random permutation, then average buckets of size s."""
+    n = x.shape[0]
+    perm = jax.random.permutation(key, n)
+    return _bucketize_perm(x, perm, s)
+
+
+def _bucketize_perm(x, perm, s: int):
+    n = x.shape[0]
+    xp = x[perm]
+    n_buckets = (n + s - 1) // s
+    pad = n_buckets * s - n
+    if pad:
+        xp = jnp.concatenate(
+            [xp, jnp.broadcast_to(jnp.mean(xp, 0, keepdims=True),
+                                  (pad,) + xp.shape[1:])], axis=0)
+    return jnp.mean(xp.reshape((n_buckets, s) + x.shape[1:]), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# tree helpers
+# ---------------------------------------------------------------------------
+
+def _tree_pair_sqdists(xs, axis_name=None):
+    """(n, n) global pairwise squared distances from a stacked pytree."""
+    def leaf(a):
+        n = a.shape[0]
+        af = a.reshape(n, -1).astype(jnp.float32)
+        sq = jnp.sum(af * af, axis=-1)
+        gram = af @ af.T
+        return sq, gram
+
+    parts = [leaf(a) for a in jax.tree.leaves(xs)]
+    sq = sum(p[0] for p in parts)
+    gram = sum(p[1] for p in parts)
+    if axis_name is not None:
+        sq = lax.psum(sq, axis_name)
+        gram = lax.psum(gram, axis_name)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    return jnp.maximum(d2, 0.0)
+
+
+def _tree_sqdist_to(xs, z, axis_name=None):
+    """(n,) global squared distances from each stacked row to pytree z."""
+    def leaf(a, b):
+        n = a.shape[0]
+        diff = (a.astype(jnp.float32) - b.astype(jnp.float32)[None]
+                ).reshape(n, -1)
+        return jnp.sum(diff * diff, axis=-1)
+
+    tot = sum(leaf(a, b) for a, b in zip(jax.tree.leaves(xs),
+                                         jax.tree.leaves(z)))
+    if axis_name is not None:
+        tot = lax.psum(tot, axis_name)
+    return tot
+
+
+def _tree_weighted_sum(w, xs):
+    return jax.tree.map(
+        lambda a: jnp.einsum("n,n...->...", w.astype(jnp.float32),
+                             a.astype(jnp.float32)).astype(a.dtype), xs)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    rule: str                    # mean | cm | tm | rfa | krum
+    bucket_size: int = 0         # s; 0/1 = no bucketing
+    trim: int = 1                # for tm
+    n_byz: int = 1               # for krum neighbour count
+    iters: int = 8               # Weiszfeld steps (paper: T=8)
+    eps: float = 1e-8
+
+    @property
+    def name(self) -> str:
+        nm = self.rule
+        if self.rule == "tm":
+            nm += str(self.trim)
+        if self.bucket_size > 1:
+            nm += f"_b{self.bucket_size}"
+        return nm
+
+    @property
+    def robust(self) -> bool:
+        return self.rule != "mean"
+
+    @property
+    def coordinatewise(self) -> bool:
+        """True if the rule commutes with coordinate sharding — admits the
+        all_to_all sharded-aggregation path (DESIGN.md §3)."""
+        return self.rule in ("mean", "cm", "tm")
+
+    # -- flat path ---------------------------------------------------------
+    def __call__(self, key, x, axis_name=None):
+        if self.bucket_size > 1 and self.rule != "mean":
+            x = bucketize(key, x, self.bucket_size)
+        if self.rule == "mean":
+            return jnp.mean(x, axis=0)
+        if self.rule == "cm":
+            return coord_median(x)
+        if self.rule == "tm":
+            return coord_trimmed_mean(x, self.trim)
+        if self.rule == "rfa":
+            return self._rfa_tree(key, {"x": x}, axis_name)["x"]
+        if self.rule == "krum":
+            return self._krum_tree(key, {"x": x}, axis_name)["x"]
+        raise ValueError(self.rule)
+
+    # -- tree path ----------------------------------------------------------
+    def tree(self, key, xs, axis_name=None):
+        """xs: pytree with leading worker axis n on every leaf."""
+        n = jax.tree.leaves(xs)[0].shape[0]
+        if self.bucket_size > 1 and self.rule != "mean":
+            perm = jax.random.permutation(key, n)
+            xs = jax.tree.map(
+                lambda a: _bucketize_perm(a, perm, self.bucket_size), xs)
+        if self.rule == "mean":
+            return jax.tree.map(lambda a: jnp.mean(a, axis=0), xs)
+        if self.rule == "cm":
+            return jax.tree.map(coord_median, xs)
+        if self.rule == "tm":
+            return jax.tree.map(lambda a: coord_trimmed_mean(a, self.trim), xs)
+        if self.rule == "rfa":
+            return self._rfa_tree(key, xs, axis_name)
+        if self.rule == "krum":
+            return self._krum_tree(key, xs, axis_name)
+        raise ValueError(self.rule)
+
+    # -- norm-based rules (global distances) --------------------------------
+    def _rfa_tree(self, key, xs, axis_name=None):
+        """Geometric median via smoothed Weiszfeld (Pillutla et al. 2022)."""
+        z = jax.tree.map(lambda a: jnp.mean(a, axis=0), xs)
+        for _ in range(self.iters):
+            sq = _tree_sqdist_to(xs, z, axis_name)
+            w = 1.0 / jnp.sqrt(sq + self.eps)
+            w = w / jnp.sum(w)
+            z = _tree_weighted_sum(w, xs)
+        return z
+
+    def _krum_tree(self, key, xs, axis_name=None):
+        """Krum (Eq. 15): vector minimizing the sum of squared distances to
+        its n - n_byz - 2 nearest neighbours."""
+        n = jax.tree.leaves(xs)[0].shape[0]
+        d2 = _tree_pair_sqdists(xs, axis_name)
+        d2 = d2 + jnp.diag(jnp.full((n,), jnp.inf, d2.dtype))
+        m = max(n - self.n_byz - 2, 1)
+        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :m], axis=1)
+        best = jnp.argmin(scores)
+        onehot = jax.nn.one_hot(best, n)
+        return _tree_weighted_sum(onehot, xs)
+
+
+# ---------------------------------------------------------------------------
+
+def get_aggregator(name: str, *, bucket_size: int = 0, **kw) -> Aggregator:
+    """name in {mean, cm, tm, rfa, krum}; paper default bucketing s=2."""
+    return Aggregator(rule=name, bucket_size=bucket_size, **kw)

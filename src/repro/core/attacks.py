@@ -1,0 +1,81 @@
+"""Byzantine attacks (Section 3 of the paper).
+
+Each attack maps the would-be-honest update of a Byzantine worker (and
+omniscient statistics of the good workers' updates) to the malicious vector
+it actually sends:
+
+    attack(key, honest, good_mean, good_std) -> sent
+
+* NA  — no attack (clean training).
+* LF  — label flipping: implemented at the DATA level (data/synthetic.py
+        flips labels for byzantine workers); the update hook is identity.
+* BF  — bit flipping: send -honest.
+* ALIE — "A Little Is Enough" (Baruch et al. 2019): send mean - z*std.
+* IPM — inner-product manipulation (Xie et al. 2020): send -(eps)*mean.
+* RN  — random gaussian noise (extra, used in tests).
+
+good_mean/good_std are the coordinate-wise mean/std over the good workers'
+updates — the standard omniscient-adversary model. In the distributed trainer
+these are computed with masked psums over the worker mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    name: str
+    apply: Callable                 # (key, honest, good_mean, good_std) -> v
+    flips_labels: bool = False
+
+
+def no_attack() -> Attack:
+    return Attack("NA", lambda key, h, m, s: h)
+
+
+def label_flip() -> Attack:
+    # the data pipeline flips the byzantine workers' labels; update untouched
+    return Attack("LF", lambda key, h, m, s: h, flips_labels=True)
+
+
+def bit_flip() -> Attack:
+    return Attack("BF", lambda key, h, m, s: -h)
+
+
+def alie(z: float = 1.06) -> Attack:
+    """mu_G - z * sigma_G: hides just outside the honest cluster."""
+    def apply(key, h, m, s):
+        return jnp.broadcast_to((m - z * s).astype(h.dtype), h.shape)
+    return Attack("ALIE", apply)
+
+
+def ipm(eps: float = 0.1) -> Attack:
+    """-(eps) * mean of good updates: flips the aggregate's inner product."""
+    def apply(key, h, m, s):
+        return jnp.broadcast_to((-eps * m).astype(h.dtype), h.shape)
+    return Attack("IPM", apply)
+
+
+def random_noise(scale: float = 10.0) -> Attack:
+    def apply(key, h, m, s):
+        return scale * jax.random.normal(key, h.shape, h.dtype)
+    return Attack("RN", apply)
+
+
+REGISTRY = {
+    "NA": no_attack,
+    "LF": label_flip,
+    "BF": bit_flip,
+    "ALIE": alie,
+    "IPM": ipm,
+    "RN": random_noise,
+}
+
+
+def get_attack(name: str, **kw) -> Attack:
+    return REGISTRY[name](**kw)

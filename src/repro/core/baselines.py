@@ -1,0 +1,321 @@
+"""Baseline methods the paper compares against (Section 3 / Appendix B).
+
+* SGD          — Parallel-SGD with plain averaging (Zinkevich et al. 2010).
+* BR-SGDm      — robust aggregation of worker momenta (Karimireddy 2021/22).
+* CSGD         — compressed SGD; with a robust aggregator = BR-CSGD.
+* BR-DIANA     — DIANA (Mishchenko et al. 2019) shifts + robust aggregation.
+* Byrd-SVRG    — SVRG estimator + geometric median (App. B.4 proxy of
+                 Byrd-SAGA; the paper itself uses SVRG since SAGA's per-sample
+                 table is memory-hostile).
+
+All share Byz-VR-MARINA's skeleton: stacked worker axis, omniscient attacks,
+(δ,c)-robust aggregation, so every experiment toggles only the estimator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.byz_vr_marina import ByzVRMarinaConfig, apply_attack, \
+    _stacked_grads, _aggregate
+from repro.core import tree_utils as tu
+
+
+def _sgd_update(params, g, lr):
+    return jax.tree.map(
+        lambda x, gg: (x.astype(jnp.float32) - lr * gg.astype(jnp.float32)
+                       ).astype(x.dtype), params, g)
+
+
+def _maybe_corrupt(cfg, corrupt_fn, batch):
+    if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+        return corrupt_fn(batch, cfg.byz_mask())
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# SGD / BR-SGDm
+# ---------------------------------------------------------------------------
+
+def make_sgd_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
+                  momentum: float = 0.0):
+    """momentum=0 -> Parallel-SGD; momentum>0 -> BR-SGDm (worker momenta are
+    what gets attacked & aggregated, per Karimireddy et al. 2021)."""
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        loss, grads = _stacked_grads(loss_fn, state["params"], batch, wkeys)
+        if momentum > 0.0:
+            m_new = jax.tree.map(
+                lambda m, g: ((1 - momentum) * g.astype(jnp.float32)
+                              + momentum * m.astype(jnp.float32)),
+                state["worker_m"], grads)
+            cand = m_new
+        else:
+            m_new = state["worker_m"]
+            cand = grads
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        new_state = {"params": params, "worker_m": m_new,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "g_norm": jnp.sqrt(tu.tree_norm_sq(g))}
+
+    def init(params):
+        return {"params": params,
+                "worker_m": tu.tree_broadcast_leading(
+                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                 params), n),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+# ---------------------------------------------------------------------------
+# CSGD / BR-CSGD
+# ---------------------------------------------------------------------------
+
+def make_csgd_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        qkeys = tu.per_worker_keys(k_q, n,
+                                   common=cfg.compressor.common_randomness)
+
+        def one(b, kg, kq):
+            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
+            return ln, tu.compress_tree(cfg.compressor, kq, g)
+
+        losses, cand = jax.vmap(one)(batch, wkeys, qkeys)
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        return ({"params": params, "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params):
+        return {"params": params, "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+# ---------------------------------------------------------------------------
+# BR-DIANA
+# ---------------------------------------------------------------------------
+
+def make_diana_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
+                    alpha: Optional[float] = None):
+    """DIANA: worker i keeps a shift h_i, uploads Q(g_i - h_i); the server
+    adds the aggregated compressed difference to the shift mean. alpha
+    defaults to 1/(1+omega) (Mishchenko et al. 2019)."""
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        qkeys = tu.per_worker_keys(k_q, n,
+                                   common=cfg.compressor.common_randomness)
+        h = state["worker_h"]                                  # stacked (n,...)
+        a = state["alpha"]
+
+        def one(b, kg, kq, h_i):
+            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
+            diff = tu.tree_sub(g, h_i)
+            return ln, tu.compress_tree(cfg.compressor, kq, diff)
+
+        losses, qdiff = jax.vmap(one)(batch, wkeys, qkeys, h)
+        sent = apply_attack(cfg, k_attack, qdiff)
+        agg_diff = _aggregate(cfg, k_agg, sent)
+        h_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), h)
+        g = tu.tree_add(h_mean, agg_diff)
+        h_new = jax.tree.map(lambda hh, q: hh + a * q, h, qdiff)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        return ({"params": params, "worker_h": h_new, "alpha": a,
+                 "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, d_hint: int = 1):
+        # d_hint is static (python int): used only to size alpha
+        omega = cfg.compressor.omega(int(d_hint))
+        a = alpha if alpha is not None else 1.0 / (1.0 + omega)
+        return {"params": params,
+                "worker_h": tu.tree_broadcast_leading(
+                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                 params), n),
+                "alpha": jnp.asarray(a, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+# ---------------------------------------------------------------------------
+# Byrd-SVRG (App. B.4)
+# ---------------------------------------------------------------------------
+
+def make_br_mvr_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
+                     alpha: float = 0.1):
+    """BR-MVR (Karimireddy et al. 2021): momentum variance reduction
+    (STORM/MVR estimator) per worker + robust aggregation.
+
+        v_i^k = g_i(x^k) + (1-α)(v_i^{k-1} - g_i(x^{k-1}))
+    """
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        params, prev = state["params"], state["prev_params"]
+
+        def one(b, kg, v_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gp = jax.value_and_grad(loss_fn)(prev, b, kg)
+            v_new = jax.tree.map(
+                lambda g, vv, go: g.astype(jnp.float32)
+                + (1 - alpha) * (vv - go.astype(jnp.float32)),
+                gx, v_i, gp)
+            return ln, v_new
+
+        losses, v = jax.vmap(one)(batch, wkeys, state["worker_v"])
+        sent = apply_attack(cfg, k_attack, v)
+        g = _aggregate(cfg, k_agg, sent)
+        new_params = _sgd_update(params, g, cfg.lr)
+        return ({"params": new_params, "prev_params": params,
+                 "worker_v": v, "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, batch, key):
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(key, n)
+        _, grads = _stacked_grads(loss_fn, params, batch, wkeys)
+        v0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return {"params": params, "prev_params": params, "worker_v": v0,
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_byrd_saga_step(cfg: ByzVRMarinaConfig, grad_sample_fn, n_samples,
+                        params_template, corrupt_labels=None):
+    """Byrd-SAGA (Wu et al. 2020): per-worker SAGA estimator (per-sample
+    gradient table — O(m·d) memory, which is why the paper benchmarks the
+    SVRG proxy instead; we provide the real thing for small problems) +
+    geometric-median aggregation.
+
+    grad_sample_fn(params, x_j, y_j) -> per-sample gradient pytree.
+    The returned step takes idx (n, b) minibatch indices and data
+    {"x": (n, m, d), "y": (n, m)} (stacked per worker).
+    """
+    n = cfg.n_workers
+    m = n_samples
+
+    def one_worker(params, table, table_mean, xw, yw, idx_w):
+        def g_of(j):
+            return grad_sample_fn(params, xw[j], yw[j])
+
+        g_new = jax.vmap(g_of)(idx_w)                       # (b, ...)
+        old = jax.tree.map(lambda t: t[idx_w], table)       # (b, ...)
+        # SAGA estimator: mean_j[ g_new - old ] + table_mean
+        v = jax.tree.map(
+            lambda gn, go, tm: jnp.mean(gn - go, axis=0) + tm,
+            g_new, old, table_mean)
+        # table update
+        new_table = jax.tree.map(lambda t, gn: t.at[idx_w].set(gn),
+                                 table, g_new)
+        new_mean = jax.tree.map(
+            lambda tm, t_old, gn: tm + jnp.sum(
+                gn - t_old[idx_w], axis=0) / m,
+            table_mean, table, g_new)
+        return v, new_table, new_mean
+
+    def step(state, data, idx, key):
+        k_attack, k_agg = jax.random.split(key)
+        params = state["params"]
+        xw, yw = data["x"], data["y"]
+        if corrupt_labels is not None and cfg.attack.flips_labels \
+                and cfg.n_byz:
+            yw = corrupt_labels(yw, cfg.byz_mask())
+        v, tables, means = jax.vmap(
+            lambda t, tm, x, y, i: one_worker(params, t, tm, x, y, i)
+        )(state["tables"], state["table_means"], xw, yw, idx)
+        sent = apply_attack(cfg, k_attack, v)
+        g = _aggregate(cfg, k_agg, sent)
+        new_params = _sgd_update(params, g, cfg.lr)
+        return ({"params": new_params, "tables": tables,
+                 "table_means": means, "step": state["step"] + 1},
+                {"g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, data):
+        def zero_table(leaf):
+            return jnp.zeros((n, m) + leaf.shape, jnp.float32)
+
+        tables = jax.tree.map(zero_table, params)
+        means = jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+        return {"params": params, "tables": tables, "table_means": means,
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_byrd_svrg_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
+    """Loopless SVRG: with prob p refresh the snapshot w <- x and the full
+    worker gradients; each round worker i sends
+    v_i = g_i(x, mb) - g_i(w, mb) + full_i, aggregated with RFA (geometric
+    median) per Wu et al. (2020)."""
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_bern, k_grad, k_attack, k_agg = jax.random.split(key, 4)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        params = state["params"]
+
+        def refresh(_):
+            _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
+            return params, fulls
+
+        def keep(_):
+            return state["snapshot"], state["worker_full"]
+
+        w, fulls = lax.cond(c_k, refresh, keep, operand=None)
+
+        def one(b, kg, full_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gw = jax.value_and_grad(loss_fn)(w, b, kg)
+            v = tu.tree_add(tu.tree_sub(gx, gw), full_i)
+            return ln, v
+
+        losses, cand = jax.vmap(one)(batch, wkeys, fulls)
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        new_params = _sgd_update(params, g, cfg.lr)
+        return ({"params": new_params, "snapshot": w, "worker_full": fulls,
+                 "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, anchor, key):
+        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
+        wkeys = tu.per_worker_keys(key, n)
+        _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
+        return {"params": params, "snapshot": params, "worker_full": fulls,
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step

@@ -1,0 +1,214 @@
+"""Unbiased compression operators (Def. 2.2 of the paper).
+
+Every compressor maps (key, x) -> x_hat with E[x_hat] = x and
+E||x_hat - x||^2 <= omega ||x||^2. The ``omega`` attribute and the
+``expected_density`` (zeta_Q, expected #nonzeros / floats sent) drive both the
+theory-side step size and the communication accounting in the benchmarks.
+
+All compressors return a *dense* vector (the mathematical value the server
+reconstructs). Wire-format size is reported by ``bits_per_vector`` so the
+communication benchmarks (paper Fig. 8) are exact without simulating packets.
+
+``common_randomness`` RandK is the beyond-paper variant (DESIGN.md §3): all
+workers share the per-step key so the K coordinates coincide and the
+all-gather can physically move only K values (see core/byz_vr_marina.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _uniform_like(key, x):
+    """U[0,1) of x's shape; chunked via scan for huge arrays so the threefry
+    iota stays int32-safe (llama's stacked leaves exceed 2^31 coords)."""
+    size = x.size
+    chunk = 1 << 26
+    if size <= chunk:
+        return jax.random.uniform(key, x.shape)
+    trips = -(-size // chunk)
+
+    def body(c, i):
+        return c, jax.random.uniform(jax.random.fold_in(key, i), (chunk,))
+
+    _, us = lax.scan(body, 0, jnp.arange(trips))
+    return us.reshape(-1)[:size].reshape(x.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    name: str
+    compress: Callable          # (key, x) -> dense x_hat
+    omega_fn: Callable          # d -> omega
+    bits_fn: Callable           # d -> bits on the wire per vector
+    density_fn: Callable        # d -> expected nonzeros (zeta_Q)
+    common_randomness: bool = False
+    ratio: Optional[float] = None    # RandK keep-ratio (sparse-support path)
+
+    def omega(self, d):
+        return self.omega_fn(d)
+
+    def bits_per_vector(self, d):
+        return self.bits_fn(d)
+
+
+# ---------------------------------------------------------------------------
+
+def identity() -> Compressor:
+    return Compressor(
+        name="identity",
+        compress=lambda key, x: x,
+        omega_fn=lambda d: 0.0,
+        bits_fn=lambda d: 32 * d,
+        density_fn=lambda d: d,
+    )
+
+
+_MAX_UNITS = 1 << 22     # selection-unit cap: keeps RNG/scatter sizes int32-safe
+                         # even under a 32-way worker vmap on 1e11-param leaves
+
+
+def rand_k(ratio: float = 0.1, *, common_randomness: bool = False) -> Compressor:
+    """RandK sparsification: keep K = ratio*d coords, scale by d/K (unbiased).
+
+    omega = d/K - 1 (Beznosikov et al. 2020). Wire: K values + K indices.
+
+    For huge leaves (stacked 126-layer groups of llama3-405b: 1.1e11 coords)
+    per-coordinate selection is replaced by contiguous-*block* selection
+    (unit = ceil(d / 2^22) coords): still exactly unbiased with the same
+    omega, int32-safe, and matches how production senders actually pack
+    sparsified tensors (block-sparse wire format; cf. kernels/quantize.py).
+    """
+    if not (0 < ratio <= 1):
+        raise ValueError(ratio)
+
+    def compress(key, x):
+        d = x.size
+        shape = x.shape
+        blk = max(-(-d // _MAX_UNITS), 1)
+        n_units = -(-d // blk)
+        k_units = max(int(ratio * n_units), 1)
+        scale = n_units / k_units
+        perm = jax.random.permutation(key, n_units)
+        mask = jnp.zeros((n_units,), bool).at[perm[:k_units]].set(True)
+        if blk == 1:
+            out = jnp.where(mask.reshape(shape), x * scale, 0)
+            return out.astype(x.dtype)
+        pad = n_units * blk - d
+        xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(n_units, blk)
+        out = jnp.where(mask[:, None], xf * scale, 0)
+        return out.reshape(-1)[:d].reshape(shape).astype(x.dtype)
+
+    return Compressor(
+        name=f"randk_{ratio}" + ("_cr" if common_randomness else ""),
+        compress=compress,
+        omega_fn=lambda d: d / max(int(ratio * d), 1) - 1.0,
+        bits_fn=lambda d: max(int(ratio * d), 1) * (32 + 32),
+        density_fn=lambda d: max(int(ratio * d), 1),
+        common_randomness=common_randomness,
+        ratio=ratio,
+    )
+
+
+def unit_partition(d: int):
+    """(block_size, n_units) used by RandK's block selection — shared with
+    the sparse-support aggregation path so supports line up exactly."""
+    blk = max(-(-d // _MAX_UNITS), 1)
+    return blk, -(-d // blk)
+
+
+def l2_dithering(levels: int = 1) -> Compressor:
+    """Random dithering / QSGD-style l2 quantization (Alistarh et al. 2017).
+
+    q(x)_i = ||x||_2 * sign(x_i) * xi_i where xi_i is a random rounding of
+    |x_i|/||x|| onto {0, 1/s, ..., 1}. Unbiased; omega <= min(d/s^2, sqrt(d)/s).
+    """
+    s = levels
+
+    def compress(key, x):
+        shape = x.shape
+        xf = x.reshape(-1).astype(jnp.float32)
+        norm = jnp.linalg.norm(xf)
+        scaled = jnp.where(norm > 0, jnp.abs(xf) / jnp.maximum(norm, 1e-30), 0.0)
+        u = _uniform_like(key, xf)
+        level = jnp.floor(scaled * s + u)          # stochastic rounding
+        out = norm * jnp.sign(xf) * level / s
+        return out.reshape(shape).astype(x.dtype)
+
+    def omega(d):
+        return min(d / s**2, (d ** 0.5) / s)
+
+    # wire: norm (32) + sign+level per coord (~(1 + log2(s+1)) bits), but a
+    # coordinate is only sent when level>0: expected density s(s+sqrt(d)).
+    def density(d):
+        return min(s * (s + d ** 0.5), d)
+
+    return Compressor(
+        name=f"dither_s{s}",
+        compress=compress,
+        omega_fn=omega,
+        bits_fn=lambda d: int(32 + density(d) * (2 + 32)),
+        density_fn=density,
+    )
+
+
+def natural_compression() -> Compressor:
+    """Natural compression (Horvath et al. 2019a): stochastic rounding of the
+    magnitude to a power of two. omega = 1/8; wire = 9 bits/coord (sign+exp).
+    """
+
+    def compress(key, x):
+        shape = x.shape
+        xf = x.reshape(-1).astype(jnp.float32)
+        mag = jnp.abs(xf)
+        safe = jnp.maximum(mag, 1e-38)
+        lo = jnp.floor(jnp.log2(safe))
+        plo = 2.0 ** lo
+        phi = plo * 2.0
+        p_hi = (safe - plo) / plo                   # P(round up)
+        u = _uniform_like(key, xf)
+        rounded = jnp.where(u < p_hi, phi, plo)
+        out = jnp.where(mag > 0, jnp.sign(xf) * rounded, 0.0)
+        return out.reshape(shape).astype(x.dtype)
+
+    return Compressor(
+        name="natural",
+        compress=compress,
+        omega_fn=lambda d: 1.0 / 8.0,
+        bits_fn=lambda d: 9 * d,
+        density_fn=lambda d: d,
+    )
+
+
+def sign_compressor() -> Compressor:
+    """sign(x)*||x||_1/d — BIASED; only for the signSGD-style baselines."""
+
+    def compress(key, x):
+        xf = x.reshape(-1).astype(jnp.float32)
+        scale = jnp.mean(jnp.abs(xf))
+        return (jnp.sign(xf) * scale).reshape(x.shape).astype(x.dtype)
+
+    return Compressor(
+        name="sign",
+        compress=compress,
+        omega_fn=lambda d: float("nan"),     # not unbiased; no omega
+        bits_fn=lambda d: d + 32,
+        density_fn=lambda d: d,
+    )
+
+
+REGISTRY = {
+    "identity": identity,
+    "randk": rand_k,
+    "dither": l2_dithering,
+    "natural": natural_compression,
+    "sign": sign_compressor,
+}
+
+
+def get_compressor(name: str, **kw) -> Compressor:
+    return REGISTRY[name](**kw)

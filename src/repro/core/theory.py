@@ -1,0 +1,122 @@
+"""The paper's theory, executable: step sizes, convergence constants, and
+communication/oracle complexity bounds (Thm. 2.1/2.2, Cor. E.1–E.7).
+
+This closes the loop between analysis and practice: examples and benchmarks
+can ask for the *theory-prescribed* γ = 1/(L+√A) instead of hand-tuning,
+and the complexity calculator reproduces Table 2's regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# (δ_max, c) certified by Theorem D.1 for each rule ∘ bucketing
+AGG_CONSTANTS = {
+    "krum": {"delta_max": 0.25, "c": 6.0},
+    "rfa": {"delta_max": 0.5, "c": 6.0},
+    "cm": {"delta_max": 0.5, "c": None},   # c = O(d): filled per-problem
+    "tm": {"delta_max": 0.5, "c": 6.0},    # trimmed mean ~ CM-class
+    "mean": {"delta_max": 0.0, "c": 0.0},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemConstants:
+    """Smoothness / heterogeneity constants of problem (1)."""
+    L: float                  # global smoothness (As. 2.1)
+    L_pm: float = 0.0         # global Hessian variance L± (As. 2.3)
+    calL_pm: float = 0.0      # local Hessian variance L± (As. 2.4, batch-free)
+    zeta_sq: float = 0.0      # ζ² heterogeneity (As. 2.2)
+    mu: float = 0.0           # PŁ constant (As. 2.5); 0 = general non-convex
+    m: int = 1                # local dataset size
+    d: int = 1                # dimension
+
+
+def marina_A(pc: ProblemConstants, *, p: float, b: int, G: int,
+             delta: float, c: float, omega: float) -> float:
+    """The A constant of Thm. 2.1/2.2 (B = 0 case):
+    A = 6(1-p)/p [ (4cδ/p + 1/2G)(ω L² + (1+ω) 𝓛±²/b)
+                  + (4cδ(1+ω)/p + ω/2G) L±² ]
+    """
+    t1 = (4 * c * delta / p + 1 / (2 * G)) * (
+        omega * pc.L ** 2 + (1 + omega) * pc.calL_pm ** 2 / b)
+    t2 = (4 * c * delta * (1 + omega) / p + omega / (2 * G)) * pc.L_pm ** 2
+    return 6 * (1 - p) / p * (t1 + t2)
+
+
+def step_size(pc: ProblemConstants, *, p: float, b: int, G: int,
+              delta: float, c: float, omega: float,
+              pl: bool = False) -> float:
+    """γ = 1/(L+√A) (Thm 2.1) or min{1/(L+√2A), p/4μ} (Thm 2.2)."""
+    A = marina_A(pc, p=p, b=b, G=G, delta=delta, c=c, omega=omega)
+    if pl:
+        g1 = 1.0 / (pc.L + math.sqrt(2 * A))
+        if pc.mu > 0:
+            return min(g1, p / (4 * pc.mu))
+        return g1
+    return 1.0 / (pc.L + math.sqrt(A))
+
+
+def recommended_p(*, b: int, m: int, omega: float) -> float:
+    """p = min{b/m, 1/(1+ω)} (footnote 3: equalizes the expected cost of
+    full-gradient rounds and compressed rounds)."""
+    return min(b / m, 1.0 / (1.0 + omega))
+
+
+def error_floor(*, delta: float, c: float, p: float, zeta_sq: float,
+                mu: Optional[float] = None) -> float:
+    """The heterogeneity floor: 24cδζ²/p on E||∇f||² (Thm 2.1), or
+    24cδζ²/μ(p) on f-f* under PŁ (Thm 2.2). Zero iff ζ=0 or δ=0."""
+    if mu:
+        return 24 * c * delta * zeta_sq / (mu * p)
+    return 24 * c * delta * zeta_sq / p
+
+
+def communication_rounds_nc(pc: ProblemConstants, *, eps_sq: float,
+                            delta0: float, p: float, b: int, G: int,
+                            delta: float, c: float, omega: float) -> float:
+    """Non-convex rounds bound: 2Φ0 / (γ ε²) with Φ0 ≈ 2Δ0 (Eq. 30)."""
+    gamma = step_size(pc, p=p, b=b, G=G, delta=delta, c=c, omega=omega)
+    return 4 * delta0 / (gamma * eps_sq)
+
+
+def communication_rounds_pl(pc: ProblemConstants, *, eps: float,
+                            delta0: float, p: float, b: int, G: int,
+                            delta: float, c: float, omega: float) -> float:
+    """PŁ rounds bound: (1/γμ(1)) log(2Δ0/ε) (Thm 2.2, ζ=0)."""
+    assert pc.mu > 0
+    gamma = step_size(pc, p=p, b=b, G=G, delta=delta, c=c, omega=omega,
+                      pl=True)
+    return math.log(max(2 * delta0 / eps, 1.0 + 1e-9)) / (gamma * pc.mu)
+
+
+# ---------------------------------------------------------------------------
+# constants estimation for the logreg task (used by examples/tests)
+# ---------------------------------------------------------------------------
+
+def logreg_constants(features, lam: float, *, n_workers: int,
+                     homogeneous: bool = True) -> ProblemConstants:
+    """ℓ2-regularized logistic regression: per-sample smoothness
+    L_ij = ||a_ij||²/4 + 2λ; f is (2λ)-strongly convex => PŁ with μ=2λ."""
+    x = jnp.asarray(features)
+    row_sq = jnp.sum(x * x, axis=1)
+    L_i = float(jnp.max(row_sq)) / 4 + 2 * lam
+    L_avg = float(jnp.mean(row_sq)) / 4 + 2 * lam
+    return ProblemConstants(
+        L=L_avg, L_pm=0.0 if homogeneous else L_avg,
+        calL_pm=L_i,                     # worst-case bound (Ex. E.1)
+        mu=2 * lam, m=x.shape[0], d=x.shape[1])
+
+
+def importance_weights(features, lam: float):
+    """Example E.2 importance sampling: P(j) ∝ L_j = ||a_j||²/4 + 2λ.
+    Returns (probs (m,), Lbar) — 𝓛±(IS) ≤ L̄ ≤ max_j L_j = 𝓛±(US)."""
+    x = jnp.asarray(features)
+    L_j = jnp.sum(x * x, axis=1) / 4 + 2 * lam
+    Lbar = jnp.mean(L_j)
+    return L_j / jnp.sum(L_j), float(Lbar)

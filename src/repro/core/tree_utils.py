@@ -1,0 +1,79 @@
+"""Small pytree helpers shared by the trainers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: (s * x.astype(jnp.float32)).astype(x.dtype), a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tree_norm_sq(a):
+    return tree_dot(a, a)
+
+
+def tree_size(a):
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_broadcast_leading(a, n):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), a)
+
+
+def masked_mean_std(xs, good_mask):
+    """Per-coordinate mean/std over the good workers of a stacked pytree.
+
+    xs leaves: (n, ...). good_mask: (n,) bool. Returns (mean_tree, std_tree).
+    """
+    g = good_mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(g), 1.0)
+
+    def mean_leaf(a):
+        w = g.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.sum(a.astype(jnp.float32) * w, axis=0) / cnt
+
+    means = jax.tree.map(mean_leaf, xs)
+
+    def std_leaf(a, m):
+        w = g.reshape((-1,) + (1,) * (a.ndim - 1))
+        var = jnp.sum(jnp.square(a.astype(jnp.float32) - m[None]) * w,
+                      axis=0) / cnt
+        return jnp.sqrt(jnp.maximum(var, 0.0))
+
+    stds = jax.tree.map(std_leaf, xs, means)
+    return means, stds
+
+
+def per_worker_keys(key, n, *, common: bool = False):
+    if common:
+        return jnp.broadcast_to(key, (n,) + key.shape)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def compress_tree(compressor, key, tree):
+    """Apply an unbiased compressor leaf-wise (block compression). Each leaf
+    gets its own fold_in'd key so RandK supports differ across leaves."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        out.append(compressor.compress(k, leaf))
+    return jax.tree.unflatten(treedef, out)

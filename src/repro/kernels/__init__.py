@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the system's compute hot-spots (DESIGN.md §3):
+
+- robust_agg: fused bucketing + coordinate-wise median/trimmed-mean over the
+  worker-stacked matrix (server-side aggregation, one HBM sweep).
+- quantize: block-wise l2-dithering compress+dequantize (worker-side).
+
+ops.py = jit'd wrappers (interpret on CPU, compiled on TPU);
+ref.py = pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

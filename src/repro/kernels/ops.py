@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+real TPU backends — the kernels are written for TPU (pl.pallas_call +
+BlockSpec VMEM tiling) and validated against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.robust_agg import robust_agg as _robust_agg
+from repro.kernels.quantize import block_quantize as _block_quantize
+from repro.kernels import ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def robust_agg(x, key=None, *, bucket_size: int = 1, rule: str = "median",
+               trim: int = 1, interpret=None):
+    """Full (δ,c)-ARAgg for (n, d) stacked workers: random permutation
+    (host-side jax.random) + fused bucket-mean + coordinate rule kernel."""
+    if key is not None and bucket_size > 1:
+        perm = jax.random.permutation(key, x.shape[0])
+        x = x[perm]
+    itp = _default_interpret() if interpret is None else interpret
+    return _robust_agg(x, bucket_size=bucket_size, rule=rule, trim=trim,
+                       interpret=itp)
+
+
+def block_quantize(x, key, *, levels: int = 4, block: int = 256,
+                   interpret=None):
+    u = jax.random.uniform(key, x.shape)
+    itp = _default_interpret() if interpret is None else interpret
+    return _block_quantize(x, u, levels=levels, block=block, interpret=itp)
+
+
+def robust_agg_oracle(x, *, bucket_size: int = 1, rule: str = "median",
+                      trim: int = 1):
+    return ref.robust_agg_ref(x, bucket_size=bucket_size, rule=rule, trim=trim)
+
+
+def block_quantize_oracle(x, u, *, levels: int = 4, block: int = 256):
+    return ref.block_quantize_ref(x, u, levels=levels, block=block)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused block-wise l2-dithering quantizer (Def. 2.2).
+
+Worker-side hot spot: compressing the gradient-difference vector each round.
+The jnp reference does 4 HBM sweeps (norm reduce, scale, round, dequantize);
+this kernel performs norm + stochastic-round + dequantize on a VMEM tile in
+one pass. Block-wise norms (per TILE_D block rather than global) are the
+standard TPU-friendly adaptation — still unbiased, and the wire format
+(per-block norm + per-coord level) is exactly what a real sender packs.
+
+The dither noise u ~ U[0,1) is supplied as an input (generated with
+jax.random outside) so the kernel is deterministic and oracle-testable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_D = 2048
+
+
+def _quant_kernel(x_ref, u_ref, o_ref, *, levels, block):
+    x = x_ref[...].astype(jnp.float32)            # (TILE_D,)
+    u = u_ref[...].astype(jnp.float32)
+    xb = x.reshape(-1, block)
+    ub = u.reshape(-1, block)
+    norm = jnp.sqrt(jnp.sum(xb * xb, axis=1, keepdims=True))
+    scaled = jnp.where(norm > 0, jnp.abs(xb) / jnp.maximum(norm, 1e-30), 0.0)
+    level = jnp.floor(scaled * levels + ub)
+    out = norm * jnp.sign(xb) * level / levels
+    o_ref[...] = out.reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "block", "tile_d",
+                                             "interpret"))
+def block_quantize(x, u, *, levels: int = 4, block: int = 256,
+                   tile_d: int = DEFAULT_TILE_D, interpret: bool = True):
+    """x, u: (d,). Returns dequantized (d,) float32. d padded to tile_d;
+    tile_d must be a multiple of ``block``."""
+    assert tile_d % block == 0
+    d = x.shape[0]
+    pad = (-d) % tile_d
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        u = jnp.pad(u, (0, pad))
+    dp = d + pad
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels, block=block),
+        grid=(dp // tile_d,),
+        in_specs=[pl.BlockSpec((tile_d,), lambda i: (i,)),
+                  pl.BlockSpec((tile_d,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(x, u)
+    return out[:d]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def robust_agg_ref(x, *, bucket_size: int = 1, rule: str = "median",
+                   trim: int = 1):
+    """x: (n, d) already permuted worker vectors -> (d,) aggregate.
+
+    bucket_size s: contiguous groups of s rows are averaged first (Alg. 2's
+    bucketing; the random permutation is applied by the caller).
+    """
+    n, d = x.shape
+    xf = x.astype(jnp.float32)
+    if bucket_size > 1:
+        nb = n // bucket_size
+        xf = xf[: nb * bucket_size].reshape(nb, bucket_size, d).mean(axis=1)
+    m = xf.shape[0]
+    if rule == "mean":
+        return xf.mean(axis=0)
+    xs = jnp.sort(xf, axis=0)
+    if rule == "median":
+        if m % 2:
+            return xs[m // 2]
+        return 0.5 * (xs[m // 2 - 1] + xs[m // 2])
+    if rule == "trimmed":
+        t = min(trim, (m - 1) // 2)
+        return xs[t:m - t].mean(axis=0)
+    raise ValueError(rule)
+
+
+def block_quantize_ref(x, u, *, levels: int, block: int):
+    """Block-wise l2 dithering: per contiguous block of ``block`` coords,
+    q(x)_i = ||x_blk|| * sign(x_i) * floor(|x_i|/||x_blk|| * s + u_i) / s.
+
+    x, u: (d,); zero-padded to a block multiple (matching the kernel wrapper).
+    Unbiased for u ~ U[0,1) (stochastic rounding), omega bounded block-wise.
+    """
+    d = x.shape[0]
+    s = levels
+    pad = (-d) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        u = jnp.pad(u, (0, pad))
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    ub = u.astype(jnp.float32).reshape(-1, block)
+    norm = jnp.sqrt(jnp.sum(xb * xb, axis=1, keepdims=True))
+    scaled = jnp.where(norm > 0, jnp.abs(xb) / jnp.maximum(norm, 1e-30), 0.0)
+    level = jnp.floor(scaled * s + ub)
+    out = norm * jnp.sign(xb) * level / s
+    return out.reshape(-1)[:d].astype(x.dtype)

@@ -1,0 +1,487 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers, compiles, and report the roofline terms from the compiled artifact.
+
+Per combination we lower the *real* step the framework runs in production:
+
+  train_4k     -> Byz-VR-MARINA train_step (Alg. 1: per-worker grads, attack,
+                  compression, bucketing+CM robust aggregation, update)
+  prefill_32k  -> prefill_step (forward to last-token logits)
+  decode_32k   -> serve_step (single token, KV/recurrent cache)
+  long_500k    -> serve_step with the sub-quadratic variant (SWA window 8192 /
+                  recurrent state); see DESIGN.md §4 for the carve-out.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ATTN, SWA, INPUT_SHAPES, ASSIGNED_ARCHS,
+                           get_config)
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_step)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (make_production_mesh, n_workers,
+                               sanitize_specs, worker_axes)
+from repro.models import layers as Lyr
+from repro.models import model as M
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (roofline denominators)
+# ---------------------------------------------------------------------------
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # B/s per chip
+    "ici_bw": 50e9,              # B/s per link
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# input specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_shape(cfg: ArchConfig, lead, s_text):
+    if cfg.num_codebooks == 1:
+        return lead + (s_text,)
+    return lead + (s_text, cfg.num_codebooks)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, n_work: int,
+                anchor_mult: int = 1):
+    """Abstract (ShapeDtypeStruct) inputs for the given arch x shape.
+
+    train: stacked worker batches {tokens, labels[, frontend]} of
+           (n, per_worker_batch, ...); anchor is ``anchor_mult`` x larger.
+    prefill: {tokens[, frontend]} of (global_batch, ...).
+    decode: token ids (global_batch,[K]) — cache comes from cache_specs.
+    """
+    s_text = shape.seq_len - (cfg.frontend_tokens or 0)
+    if shape.kind == "train":
+        bw = shape.global_batch // n_work
+        assert bw >= 1, (shape.global_batch, n_work)
+
+        def batch_of(mult):
+            lead = (n_work, bw * mult)
+            b = {"tokens": _sds(_token_shape(cfg, lead, s_text), jnp.int32),
+                 "labels": _sds(_token_shape(cfg, lead, s_text), jnp.int32)}
+            if cfg.frontend_tokens:
+                b["frontend"] = _sds(lead + (cfg.frontend_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+            return b
+
+        return {"batch": batch_of(1), "anchor": batch_of(anchor_mult)}
+    if shape.kind == "prefill":
+        lead = (shape.global_batch,)
+        b = {"tokens": _sds(_token_shape(cfg, lead, s_text), jnp.int32)}
+        if cfg.frontend_tokens:
+            b["frontend"] = _sds(lead + (cfg.frontend_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+        return {"batch": b}
+    if shape.kind == "decode":
+        tok = ((shape.global_batch,) if cfg.num_codebooks == 1
+               else (shape.global_batch, cfg.num_codebooks))
+        return {"tokens": _sds(tok, jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def _long_context_cfg(cfg: ArchConfig, window: int = 8192) -> ArchConfig:
+    """Sub-quadratic variant for long_500k: full-attention blocks become
+    sliding-window (block-sparse carve-out); recurrent blocks unchanged."""
+    pat = tuple(SWA if k == ATTN else k for k in cfg.block_pattern)
+    return dataclasses.replace(cfg, block_pattern=pat, sliding_window=window)
+
+
+def decode_cache_capacity(cfg: ArchConfig, shape: InputShape) -> int:
+    if shape.name == "long_500k":
+        return min(shape.seq_len, max(cfg.sliding_window, 1))
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_byz_config(n_work: int, mesh, *, agg="cm", bucket=2, compressor=None,
+                    agg_mode="gspmd") -> ByzVRMarinaConfig:
+    if agg_mode == "sparse_support":
+        comp = get_compressor("randk", ratio=0.1, common_randomness=True)
+    else:
+        comp = compressor or get_compressor("randk", ratio=0.1)
+    return ByzVRMarinaConfig(
+        n_workers=n_work, n_byz=max(n_work // 8, 1), p=0.1, lr=3e-3,
+        aggregator=get_aggregator(agg, bucket_size=bucket),
+        compressor=comp, attack=get_attack("ALIE"),
+        agg_mode=agg_mode,
+        worker_axes=worker_axes(mesh), model_axis="model",
+        mesh=mesh if agg_mode == "all_to_all" else None)
+
+
+def build_train(cfg: ArchConfig, mesh, shape: InputShape, *,
+                byz_overrides=None, xent_chunk=1024):
+    n_work = n_workers(mesh)
+    w_axes = worker_axes(mesh)
+    bcfg = make_byz_config(n_work, mesh, **(byz_overrides or {}))
+
+    def loss(params, batch, key):
+        return M.loss_fn(params, cfg, batch, remat=True,
+                         xent_chunk=xent_chunk)
+
+    params_abs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    pspecs = M.param_specs(cfg)
+    if bcfg.agg_mode == "all_to_all":
+        bcfg = dataclasses.replace(
+            bcfg, grad_specs=sanitize_specs(mesh, params_abs, pspecs))
+    step = make_step(bcfg, loss)
+
+    state_abs = {"params": params_abs, "g": params_abs, "opt_state": None,
+                 "step": _sds((), jnp.int32)}
+    state_specs = {"params": pspecs, "g": pspecs, "opt_state": None,
+                   "step": P()}
+    specs_in = input_specs(cfg, shape, n_work)
+
+    def batch_spec(b):
+        return jax.tree.map(lambda s: P(*((tuple(w_axes) if len(w_axes) > 1
+                                           else w_axes[0]),
+                                          *([None] * (len(s.shape) - 1)))), b)
+
+    batch_specs = batch_spec(specs_in["batch"])
+    anchor_specs = batch_spec(specs_in["anchor"])
+    key_abs = _sds((2,), jnp.uint32)
+
+    state_specs = sanitize_specs(mesh, state_abs, state_specs)
+    batch_specs = sanitize_specs(mesh, specs_in["batch"], batch_specs)
+    anchor_specs = sanitize_specs(mesh, specs_in["anchor"], anchor_specs)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs),
+                      _ns(mesh, anchor_specs), NamedSharding(mesh, P())),
+        out_shardings=(_ns(mesh, state_specs), NamedSharding(mesh, P())),
+    )
+    args = (state_abs, specs_in["batch"], specs_in["anchor"], key_abs)
+    return jitted, args
+
+
+def build_prefill(cfg: ArchConfig, mesh, shape: InputShape):
+    w_axes = worker_axes(mesh)
+    batch_axis = tuple(w_axes) if len(w_axes) > 1 else w_axes[0]
+
+    def prefill_step(params, batch):
+        x, _ = M.hidden(params, cfg, batch, remat=False)
+        return M.model_logits_last(params, cfg, x)
+
+    params_abs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    pspecs = M.param_specs(cfg)
+    specs_in = input_specs(cfg, shape, 1)
+    bspecs = jax.tree.map(
+        lambda s: P(batch_axis, *([None] * (len(s.shape) - 1))),
+        specs_in["batch"])
+    pspecs = sanitize_specs(mesh, params_abs, pspecs)
+    bspecs = sanitize_specs(mesh, specs_in["batch"], bspecs)
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)))
+    return jitted, (params_abs, specs_in["batch"])
+
+
+def build_decode(cfg: ArchConfig, mesh, shape: InputShape):
+    w_axes = worker_axes(mesh)
+    batch_axis = tuple(w_axes) if len(w_axes) > 1 else w_axes[0]
+    total_workers = n_workers(mesh)
+    shard_batch = shape.global_batch % total_workers == 0 and \
+        shape.global_batch >= total_workers
+    b_ax = batch_axis if shard_batch else None
+
+    run_cfg = _long_context_cfg(cfg) if shape.name == "long_500k" else cfg
+    cap = decode_cache_capacity(run_cfg, shape)
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(params, run_cfg, cache, tokens)
+
+    params_abs = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), run_cfg))
+    pspecs = M.param_specs(run_cfg)
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(run_cfg, shape.global_batch, cap))
+    cspecs = M.cache_specs(run_cfg, b_ax)
+    tok = input_specs(cfg, shape, 1)["tokens"]
+    tok_spec = P(b_ax) if cfg.num_codebooks == 1 else P(b_ax, None)
+    pspecs = sanitize_specs(mesh, params_abs, pspecs)
+    cspecs = sanitize_specs(mesh, cache_abs, cspecs)
+    tok_spec = sanitize_specs(mesh, tok, tok_spec)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec)))
+    return jitted, (params_abs, cache_abs, tok)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, P) or s is None)
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+def roofline(flops: float, bytes_: float, coll: dict, chips: int,
+             cfg: ArchConfig, shape: InputShape) -> dict:
+    coll_bytes = float(coll.get("total_bytes", 0))
+    # cost_analysis is per-device on SPMD modules; scale to global.
+    compute_t = flops / HW["peak_flops_bf16"]
+    memory_t = bytes_ / HW["hbm_bw"]
+    collective_t = coll_bytes / HW["ici_bw"]
+    # model flops: 6 N D (causal attention term excluded; reported separately)
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6 * n_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2 * n_params * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_params * tokens
+    model_flops_per_chip = model_flops / chips
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_,
+        "collective_bytes_per_device": coll_bytes,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flop_ratio": (model_flops_per_chip / flops) if flops else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _probe_cfg(cfg: ArchConfig, k: int) -> ArchConfig:
+    """k pattern-groups, fully unrolled (n_groups=1 => trip count 1, so
+    cost_analysis counts every layer exactly once)."""
+    pat = tuple(cfg.block_pattern) * k
+    return dataclasses.replace(cfg, block_pattern=pat, num_layers=len(pat))
+
+
+def _build(kind, cfg, mesh, shape, byz_overrides, xent_chunk=1024):
+    if kind == "train":
+        return build_train(cfg, mesh, shape, byz_overrides=byz_overrides,
+                           xent_chunk=xent_chunk)
+    if kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_decode(cfg, mesh, shape)
+
+
+def _compile_costs(kind, cfg, mesh, shape, byz_overrides):
+    """flops/bytes of a probe config with every inner scan fully unrolled
+    (so cost_analysis counts each trip; memory behaviour matches the real
+    chunked artifact)."""
+    Lyr.PROBE_UNROLL[0] = True
+    try:
+        jitted, args = _build(kind, cfg, mesh, shape, byz_overrides)
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        cost = compiled.cost_analysis() or {}
+        return (float(cost.get("flops", 0.0) or 0.0),
+                float(cost.get("bytes accessed", 0.0) or 0.0))
+    finally:
+        Lyr.PROBE_UNROLL[0] = False
+
+
+def corrected_costs(kind, cfg, mesh, shape, byz_overrides):
+    """Extrapolate full-depth flops/bytes from 1-group and 2-group probes:
+    total ~= probe1 + (G-1) * (probe2 - probe1), G = num_layers/len(pattern).
+    Exact for depth-linear cost (true here: groups are identical)."""
+    f1, b1 = _compile_costs(kind, _probe_cfg(cfg, 1), mesh, shape,
+                            byz_overrides)
+    f2, b2 = _compile_costs(kind, _probe_cfg(cfg, 2), mesh, shape,
+                            byz_overrides)
+    g = cfg.num_layers / len(cfg.block_pattern)
+    fl = f1 + max(f2 - f1, 0.0) * (g - 1)
+    by = b1 + max(b2 - b1, 0.0) * (g - 1)
+    return fl, by, {"probe1": [f1, b1], "probe2": [f2, b2], "groups": g}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            byz_overrides=None, model_parallel: int = 16,
+            probes: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                model_parallel=model_parallel)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "chips": chips,
+           "model_parallel": model_parallel,
+           "byz_overrides": {k: str(v) for k, v in
+                             (byz_overrides or {}).items()},
+           "ok": False}
+    t0 = time.time()
+    try:
+        jitted, args = _build(shape.kind, cfg, mesh, shape, byz_overrides)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = hlo_analysis.collective_bytes(hlo)   # trip-count aware
+        raw_flops = float(cost.get("flops", 0.0) or 0.0)
+        raw_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+        if probes:
+            flops, bytes_, probe_info = corrected_costs(
+                shape.kind, cfg, mesh, shape, byz_overrides)
+        else:
+            flops, bytes_, probe_info = raw_flops, raw_bytes, None
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory_analysis": _mem_dict(mem),
+            "flops_per_device_raw": raw_flops,
+            "bytes_per_device_raw": raw_bytes,
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_,
+            "probe_info": probe_info,
+            "collectives": {k: v for k, v in coll.items()},
+            "roofline": roofline(flops, bytes_, coll, chips, cfg, shape),
+            "hlo_lines": hlo.count("\n"),
+        })
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+                  f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+            print("  memory:", rec["memory_analysis"])
+            print("  cost(corrected): flops/dev=%.3e bytes/dev=%.3e" %
+                  (flops, bytes_))
+            print("  collectives:", {k: v for k, v in coll.items()
+                                     if isinstance(v, dict) and v["count"]})
+            print("  roofline:", {k: (f"{v:.3e}" if isinstance(v, float)
+                                      else v)
+                                  for k, v in rec["roofline"].items()})
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: FAIL {e}")
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=16)
+    ap.add_argument("--agg", default="cm")
+    ap.add_argument("--agg-mode", default="gspmd",
+                    choices=["gspmd", "all_to_all", "sparse_support"])
+    ap.add_argument("--attn-impl", default="chunked",
+                    choices=["chunked", "online"])
+    ap.add_argument("--moe-ep-constraint", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--compressor", default="randk")
+    ap.add_argument("--compress-ratio", type=float, default=0.1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    Lyr.ATTN_IMPL[0] = args.attn_impl
+    if args.moe_ep_constraint:
+        Lyr.MOE_EP_CONSTRAINT[0] = "model"
+    comp = get_compressor(args.compressor, **(
+        {"ratio": args.compress_ratio} if args.compressor == "randk" else {}))
+    overrides = {"agg": args.agg, "compressor": comp,
+                 "agg_mode": args.agg_mode}
+
+    if args.capacity_factor is not None:
+        import repro.configs.base as _cb
+        _orig_get = _cb.get_config
+
+        def _patched(name):
+            c = _orig_get(name)
+            if c.moe is not None:
+                c = dataclasses.replace(c, moe=dataclasses.replace(
+                    c.moe, capacity_factor=args.capacity_factor))
+            return c
+        # NB: running under `python -m`, this module is __main__; patch OUR
+        # globals (run_one resolves get_config from here).
+        globals()["get_config"] = _patched
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_one(arch, shape, mesh_kind,
+                              byz_overrides=overrides,
+                              model_parallel=args.model_parallel)
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                if args.model_parallel != 16:
+                    tag += f"__mp{args.model_parallel}"
+                if args.agg_mode != "gspmd":
+                    tag += f"__{args.agg_mode}"
+                if args.attn_impl != "chunked":
+                    tag += f"__{args.attn_impl}"
+                if args.moe_ep_constraint:
+                    tag += "__epc"
+                if args.capacity_factor is not None:
+                    tag += f"__cf{args.capacity_factor}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

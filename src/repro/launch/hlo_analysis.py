@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: collective bytes with while-loop trip counts.
+
+``compiled.cost_analysis()`` counts each computation ONCE, ignoring while
+trip counts (verified empirically), so a scanned 126-layer model would look
+like a 1-layer model. For collectives we can do better: the compiled text
+names every computation, while-ops carry ``known_trip_count`` backend
+configs, and collective ops are plain instructions — so we build the call
+graph, propagate multipliers from ENTRY, and sum bytes exactly.
+
+FLOPs/HBM-bytes cannot be recovered from text (they hide inside fusions);
+launch/dryrun.py corrects those with 1-group/2-group probe compilations.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*{")
+_REF_SINGLE = re.compile(r"(calls|to_apply|body|condition)=%?([\w.\-]+)")
+_REF_LIST = re.compile(r"(branch_computations|called_computations)="
+                       r"\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo(hlo_text: str):
+    """Returns (computations, entry_name).
+
+    computations: name -> {"collectives": {op: bytes}, "counts": {op: n},
+                           "edges": [(child_name, multiplier)]}
+    """
+    comps = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(2)
+                comps[cur] = {"collectives": defaultdict(int),
+                              "counts": defaultdict(int), "edges": []}
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur_done = cur  # keep cur until next header; nested braces rare
+            continue
+        # instruction line
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)", stripped)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        base = opname.split(".")[0]
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        if base in COLLECTIVES:
+            comps[cur]["collectives"][base] += shape_bytes(result_type)
+            comps[cur]["counts"][base] += 1
+        # call edges
+        trip = 1
+        tm = _TRIP_RE.search(stripped)
+        if tm:
+            trip = int(tm.group(1))
+        for cm in _REF_SINGLE.finditer(stripped):
+            kind, nm = cm.group(1), cm.group(2)
+            mult = trip if kind == "body" else 1
+            comps[cur]["edges"].append((nm, mult))
+        for cm in _REF_LIST.finditer(stripped):
+            for nm in cm.group(2).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    comps[cur]["edges"].append((nm, 1))
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware per-device collective bytes by op kind."""
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        return {k: {"count": 0, "bytes": 0} for k in COLLECTIVES} | {
+            "total_bytes": 0}
+    # propagate multipliers through the DAG in topological order (Kahn)
+    indeg = defaultdict(int)
+    for name, info in comps.items():
+        for child, _ in info["edges"]:
+            if child in comps:
+                indeg[child] += 1
+    mult = defaultdict(int)
+    mult[entry] = 1
+    queue = [n for n in comps if indeg[n] == 0]
+    while queue:
+        name = queue.pop()
+        for child, m in comps[name]["edges"]:
+            if child not in comps:
+                continue
+            mult[child] += mult[name] * m
+            indeg[child] -= 1
+            if indeg[child] == 0:
+                queue.append(child)
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for name, info in comps.items():
+        f = mult.get(name, 0)
+        if f == 0:
+            continue
+        for op, b in info["collectives"].items():
+            out[op]["bytes"] += b * f
+            out[op]["count"] += info["counts"][op] * f
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out

@@ -1,0 +1,80 @@
+"""Serving driver: batched autoregressive decoding with KV/recurrent caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \\
+      --batch 4 --prompt-len 16 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import decode_step, init_cache, init_params
+
+
+def generate(cfg, params, prompt, gen_len: int, *, temperature: float = 0.0,
+             key=None, capacity: int | None = None):
+    """prompt: (B, S[, K]) int32. Greedy (or sampled) continuation."""
+    b = prompt.shape[0]
+    s = prompt.shape[1]
+    cap = capacity or (s + gen_len)
+    cache = init_cache(cfg, b, cap)
+    step = jax.jit(lambda c, t: decode_step(params, cfg, c, t))
+
+    # prefill via decode steps (teacher-forcing the prompt)
+    logits = None
+    for t in range(s):
+        tok = prompt[:, t] if cfg.num_codebooks == 1 else prompt[:, t, :]
+        logits, cache = step(cache, tok)
+
+    outs = []
+    tok = _pick(logits, temperature, key, 0)
+    for t in range(gen_len):
+        outs.append(tok)
+        logits, cache = step(cache, tok)
+        tok = _pick(logits, temperature, key, t + 1)
+    return jnp.stack(outs, axis=1)
+
+
+def _pick(logits, temperature, key, t):
+    # logits: (B, V) or (B, K, V)
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jax.random.fold_in(key, t)
+    return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    shape = ((args.batch, args.prompt_len) if cfg.num_codebooks == 1 else
+             (args.batch, args.prompt_len, cfg.num_codebooks))
+    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    t0 = time.time()
+    out = generate(cfg, params, prompt, args.gen_len,
+                   temperature=args.temperature, key=key)
+    dt = time.time() - t0
+    toks = args.batch * args.gen_len
+    print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print(out[0][:16])
+
+
+if __name__ == "__main__":
+    main()

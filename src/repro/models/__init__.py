@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    init_params, forward, loss_fn, init_cache, decode_step,
+    param_specs, cache_specs,
+)

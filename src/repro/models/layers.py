@@ -1,0 +1,724 @@
+"""Model building blocks: norms, RoPE/M-RoPE, GQA / sliding-window / MLA
+attention, gated MLP, sort-based MoE, Mamba2 SSD, RG-LRU.
+
+All functions are pure: ``params`` pytrees in, arrays out. Initializers return
+plain nested dicts so the whole model is a vanilla pytree (no framework dep).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta=10_000.0, mrope_sections=None):
+    """x: (..., S, H, D). positions: (..., S) int or (..., S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL, arXiv:2409.12191): the head-dim frequency bands are
+    partitioned into (temporal, height, width) sections; each band rotates by
+    its own position component. Text tokens use t=h=w so it reduces to RoPE.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = _rope_freqs(head_dim, theta)                      # (half,)
+    if mrope_sections is not None and positions.ndim == x.ndim - 2 + 1:
+        # positions (..., S, 3)
+        sec = mrope_sections
+        assert sum(sec) == half, (sec, half)
+        comp = []
+        start = 0
+        for i, s in enumerate(sec):
+            comp.append(jnp.broadcast_to(positions[..., i:i + 1],
+                                         positions.shape[:-1] + (s,)))
+            start += s
+        pos = jnp.concatenate(comp, axis=-1).astype(jnp.float32)  # (..., S, half)
+        angles = pos * freqs                                       # (..., S, half)
+    else:
+        pos = positions.astype(jnp.float32)[..., None]             # (..., S, 1)
+        angles = pos * freqs                                       # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, optional sliding window), q-chunked for long seqs
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * hd), cfg.jnp_dtype),
+        "wk": _dense_init(ks[1], (d, nkv * hd), cfg.jnp_dtype),
+        "wv": _dense_init(ks[2], (d, nkv * hd), cfg.jnp_dtype),
+        "wo": _dense_init(ks[3], (nq * hd, d), cfg.jnp_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.jnp_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.jnp_dtype)
+    return p
+
+
+def _attend(q, k, v, q_pos, k_pos, window=None, k_valid=None):
+    """q: (B,Sq,Hq,D) k/v: (B,Sk,Hkv,D). Causal + optional sliding window.
+
+    q_pos (B,Sq) / k_pos (B,Sk) absolute positions; k_valid optional bool mask.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    mask = q_pos[:, None, None, :, None] >= k_pos[:, None, None, None, :]
+    if window is not None:
+        mask &= (q_pos[:, None, None, :, None] - k_pos[:, None, None, None, :]
+                 ) < window
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+# global default for the query-chunked attention loop; the dry-run's cost
+# probes set this to a huge value to disable the (cost-undercounted) scan.
+Q_CHUNK = [1024]
+
+# attention implementation: "chunked" (materialize (Sq,Sk) scores per q-chunk)
+# or "online" (flash-style online-softmax over KV chunks: no (S,S) tensor is
+# ever materialized — §Perf beyond-paper optimization).
+ATTN_IMPL = ["chunked"]
+
+# dry-run cost probes set this so every inner lax.scan fully unrolls: XLA's
+# cost_analysis counts a while body once regardless of trip count, so probes
+# must not contain data-independent loops (launch/dryrun.py corrected_costs).
+PROBE_UNROLL = [False]
+
+
+def _unroll(n_trips: int):
+    return n_trips if PROBE_UNROLL[0] else 1
+
+
+def _attend_online(q, k, v, q_pos, k_pos, window=None, k_valid=None,
+                   kv_chunk=1024):
+    """Flash-style attention: scan over KV chunks with running (max, denom,
+    acc). HBM traffic O(S*d) instead of O(S^2); numerically identical to
+    softmax attention up to fp error."""
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kv_chunk = min(kv_chunk, sk)
+    if sk % kv_chunk:
+        pad = kv_chunk - sk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_pad_valid = jnp.pad(
+            k_valid if k_valid is not None
+            else jnp.ones((b, sk), bool), ((0, 0), (0, pad)))
+        k_valid = kv_pad_valid
+        sk += pad
+    elif k_valid is None:
+        k_valid = jnp.ones((b, sk), bool)
+    nkc = sk // kv_chunk
+    qg = q.reshape(b, sq, hkv, group, dh).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nkc, kv_chunk, hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nkc, kv_chunk, hkv, dh), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(b, nkc, kv_chunk), 1, 0)
+    valc = jnp.moveaxis(k_valid.reshape(b, nkc, kv_chunk), 1, 0)
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, inp):
+        m, l, acc = carry                        # (b,hkv,g,sq), ..., (..,dh)
+        ki, vi, pi, vali = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ki.astype(jnp.float32))
+        s = s * scale
+        mask = q_pos[:, None, None, :, None] >= pi[:, None, None, None, :]
+        if window is not None:
+            mask &= (q_pos[:, None, None, :, None]
+                     - pi[:, None, None, None, :]) < window
+        mask &= (pi >= 0)[:, None, None, None, :]
+        mask &= vali[:, None, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: all-masked rows keep m = -inf; exp(-inf - -inf) -> use where
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                vi.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc, valc),
+                              unroll=_unroll(nkc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, v.shape[-1])
+    return out.astype(q.dtype)
+
+
+def attention(params, cfg, x, positions, *, window=None, q_chunk=None,
+              cache=None, layer_kind="attention"):
+    """Full attention path used for train/prefill. positions: (B,S) or (B,S,3)."""
+    q_chunk = q_chunk or Q_CHUNK[0]
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, nq, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, nkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    scalar_pos = positions if positions.ndim == 2 else positions[..., 0]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if ATTN_IMPL[0] == "online" and s > 1:
+        out = _attend_online(q, k, v, scalar_pos, scalar_pos, window=window)
+    elif s <= q_chunk or s % q_chunk:
+        out = _attend(q, k, v, scalar_pos, scalar_pos, window=window)
+    else:
+        n_chunks = s // q_chunk
+        qc = q.reshape(b, n_chunks, q_chunk, nq, hd)
+        pc = scalar_pos.reshape(b, n_chunks, q_chunk)
+
+        def chunk_fn(carry, inp):
+            qi, pi = inp
+            o = _attend(qi, k, v, pi, scalar_pos, window=window)
+            return carry, o
+
+        _, outs = lax.scan(chunk_fn, 0,
+                           (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+                           unroll=_unroll(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, nq, hd)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, nq * hd), params["wo"])
+
+
+def attention_decode(params, cfg, x, cache, *, window=None):
+    """One-token decode with KV cache.
+
+    cache: {"k": (B,L,Hkv,D), "v": ..., "pos": (B,L) int32 absolute positions
+            (-1 = empty), "len": () int32 tokens seen so far}
+    Sliding window uses the cache as a ring buffer of capacity L.
+    """
+    b, s, d = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    cur = cache["len"]
+    cap = cache["k"].shape[1]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, 1, nq, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, 1, nkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    pos = jnp.broadcast_to(cur, (b, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+        q = apply_rope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(cur, cap)
+    ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    cpos = lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(pos, (b, 1)), (0, slot))
+    valid = cpos >= 0
+    out = _attend(q, ck, cv, pos, cpos, window=window, k_valid=valid)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, nq * hd), params["wo"])
+    new_cache = {"k": ck, "v": cv, "pos": cpos, "len": cur + 1}
+    return y, new_cache
+
+
+def init_attention_cache(cfg, batch, capacity, *, window=None):
+    hd = cfg.resolved_head_dim
+    cap = min(capacity, window) if window else capacity
+    return {
+        "k": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), cfg.jnp_dtype),
+        "v": jnp.zeros((batch, cap, cfg.num_kv_heads, hd), cfg.jnp_dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, r, rd = cfg.num_heads, cfg.kv_lora_rank, cfg.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (d, nq * (hd + rd)), cfg.jnp_dtype),
+        "w_dkv": _dense_init(ks[1], (d, r), cfg.jnp_dtype),       # down proj
+        "w_uk": _dense_init(ks[2], (r, nq * hd), cfg.jnp_dtype),  # up proj K
+        "w_uv": _dense_init(ks[3], (r, nq * hd), cfg.jnp_dtype),  # up proj V
+        "w_kr": _dense_init(ks[4], (d, rd), cfg.jnp_dtype),       # shared rope key
+        "wo": _dense_init(ks[5], (nq * hd, d), cfg.jnp_dtype),
+        "kv_norm": jnp.zeros((r,), cfg.jnp_dtype),
+    }
+
+
+def mla_attention(params, cfg, x, positions, *, q_chunk=1024):
+    """Train/prefill MLA: materialize per-head K/V from the latent."""
+    b, s, d = x.shape
+    hd, nq = cfg.resolved_head_dim, cfg.num_heads
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, nq, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                    params["kv_norm"], cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, params["w_uk"]).reshape(b, s, nq, hd)
+    v = jnp.einsum("bsr,re->bse", c_kv, params["w_uv"]).reshape(b, s, nq, hd)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :]  # shared
+    pos = positions if positions.ndim == 2 else positions[..., 0]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, nq, rd))],
+                         axis=-1)
+    out = _attend(qf, kf, v, pos, pos)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, nq * hd), params["wo"])
+
+
+def mla_decode(params, cfg, x, cache):
+    """Absorbed-form MLA decode: the cache stores only (c_kv, k_rope) —
+    576 floats/token for the full config — and W_uk/W_uv are folded into the
+    query/output so no per-head K/V is ever materialized. TPU-friendly: two
+    (B,H,r)x(B,L,r) einsums instead of a (B,L,H,D) gather."""
+    b, s, d = x.shape
+    assert s == 1
+    hd, nq = cfg.resolved_head_dim, cfg.num_heads
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    cur = cache["len"]
+    cap = cache["c_kv"].shape[1]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, 1, nq, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    pos = jnp.broadcast_to(cur, (b, 1)).astype(jnp.int32)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_new = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                     params["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :], pos,
+        cfg.rope_theta)[:, :, 0, :]
+    slot = jnp.mod(cur, cap)
+    c_kv = lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
+    k_rope = lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, slot, 0))
+    cpos = lax.dynamic_update_slice(cache["pos"], pos, (0, slot))
+    # absorb W_uk into q:  score = (q_nope W_uk^T) . c  + q_rope . k_rope
+    w_uk = params["w_uk"].reshape(r, nq, hd)
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = (jnp.einsum("bqhr,blr->bhql", q_eff, c_kv.astype(jnp.float32))
+              + jnp.einsum("bqhr,blr->bhql", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32)))
+    scores = scores / math.sqrt(hd + rd)
+    mask = (cpos >= 0) & (cpos <= cur)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhql,blr->bqhr", probs, c_kv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(r, nq, hd)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "pos": cpos, "len": cur + 1}
+
+
+def init_mla_cache(cfg, batch, capacity, *, window=None):
+    cap = min(capacity, window) if window else capacity
+    return {
+        "c_kv": jnp.zeros((batch, cap, cfg.kv_lora_rank), cfg.jnp_dtype),
+        "k_rope": jnp.zeros((batch, cap, cfg.qk_rope_dim), cfg.jnp_dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP + MoE (sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(ks[0], (d, ff), cfg.jnp_dtype),
+        "w3": _dense_init(ks[1], (d, ff), cfg.jnp_dtype),
+        "w2": _dense_init(ks[2], (ff, d), cfg.jnp_dtype),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["w1"]))
+    h = h * jnp.einsum("...d,df->...f", x, params["w3"])
+    return jnp.einsum("...f,fd->...d", h, params["w2"])
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    de = m.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, m.num_experts), cfg.jnp_dtype),
+        "w1": _dense_init(ks[1], (m.num_experts, d, de), cfg.jnp_dtype),
+        "w3": _dense_init(ks[2], (m.num_experts, d, de), cfg.jnp_dtype),
+        "w2": _dense_init(ks[3], (m.num_experts, de, d), cfg.jnp_dtype),
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=de * m.num_shared)
+    return p
+
+
+# §Perf knob: constrain the MoE dispatch buffers to expert-parallel sharding
+# so GSPMD converts the (E, C, d) reshards into all-to-alls instead of
+# all-gathering the whole buffer on every device (launch/dryrun.py
+# --moe-ep-constraint; axis name injected by the launcher).
+MOE_EP_CONSTRAINT = [None]   # None = off; else mesh axis name (e.g. "model")
+
+
+def _maybe_ep_constrain(t):
+    axis = MOE_EP_CONSTRAINT[0]
+    if axis is None:
+        return t
+    from jax.sharding import PartitionSpec as _P
+    spec = _P(*((axis,) + (None,) * (t.ndim - 1)))
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def moe_ffn(params, cfg, x):
+    """Sort-based capacity-constrained MoE dispatch (MaxText-style).
+
+    x: (B, S, d) -> (B, S, d), plus scalar aux load-balance loss.
+    The expert dim of w1/w2/w3 shards over the `model` mesh axis
+    (expert parallelism); dispatch is argsort + scatter, no (T,E,C) one-hot.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, k)                       # (t,k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    cap = int(m.capacity_factor * t * k / e) + 1
+
+    flat_e = idx.reshape(-1)                              # (t*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)                 # (t*k,)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    dest = jnp.where(keep, se * cap + rank, e * cap)      # overflow slot dropped
+    if MOE_EP_CONSTRAINT[0] is not None:
+        # 3D scatter straight into the expert-sharded buffer: the expert dim
+        # is laid out over the EP axis BEFORE expert compute, so the reshard
+        # happens on the (t*k, d) token stream (all-to-all-sized), not by
+        # all-gathering the whole (E, C, d) buffer.
+        rank_c = jnp.where(keep, rank, cap)
+        buf3 = jnp.zeros((e, cap + 1, d), xf.dtype).at[se, rank_c].set(
+            xf[st], mode="drop")
+        ex_in = _maybe_ep_constrain(buf3[:, :cap, :])
+    else:
+        buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[dest].set(xf[st])
+        ex_in = buf[:-1].reshape(e, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, params["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", ex_in, params["w3"])
+    ex_out = _maybe_ep_constrain(jnp.einsum("ecf,efd->ecd", h, params["w2"]))
+    picked = ex_out.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
+    picked = picked * (keep * sg)[:, None].astype(picked.dtype)
+    yf = jnp.zeros((t, d), xf.dtype).at[st].add(picked)
+    y = yf.reshape(b, s, d)
+    if m.num_shared:
+        y = y + mlp(params["shared"], x)
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    frac = jnp.bincount(flat_e, length=e) / (t * k)
+    pmean = probs.mean(0)
+    aux = e * jnp.sum(frac * pmean) * m.router_aux_weight
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (shared by Mamba2 and RG-LRU blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w):
+    """x: (B, T, C); w: (W, C) depthwise causal filter."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x, w, conv_state):
+    """x: (B, 1, C). conv_state: (B, W-1, C) previous inputs."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x], axis=1)       # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))[:, None, :].astype(x.dtype)
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block (arXiv:2405.21060) — chunked state-space duality
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (nh)]
+        "w_in": _dense_init(ks[0], (d, 2 * di + 2 * n + nh), cfg.jnp_dtype),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, di + 2 * n),
+                              cfg.jnp_dtype, scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.jnp_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.jnp_dtype),
+        "d_skip": jnp.ones((nh,), cfg.jnp_dtype),
+        "out_norm": jnp.zeros((di,), cfg.jnp_dtype),
+        "w_out": _dense_init(ks[2], (di, d), cfg.jnp_dtype),
+    }
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, a_log, chunk=64):
+    """SSD over chunks. xh: (B,T,H,P), bmat/cmat: (B,T,N), dt: (B,T,H).
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . h_t
+    Returns y (B,T,H,P) and final state (B,H,N,P).
+    """
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, t)
+    nc = t // chunk
+    assert t % chunk == 0, (t, chunk)
+    a = -jnp.exp(a_log.astype(jnp.float32))                      # (H,) negative
+    dt = dt.astype(jnp.float32)
+    da = dt * a                                                  # (B,T,H) logdecay
+    xr = xh.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    br = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cr = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    dar = da.reshape(b, nc, chunk, h)
+    dtr = dt.reshape(b, nc, chunk, h)
+    cum = jnp.cumsum(dar, axis=2)                                # (B,nc,Lc,H)
+    # ---- intra-chunk (quadratic within chunk)
+    g = jnp.einsum("bcqn,bckn->bcqk", cr, br)                    # (B,nc,Lc,Lc)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # q - k
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask in log-space BEFORE exp: exp of the (positive) acausal rel would
+    # overflow and poison the gradient through the where.
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    decay = jnp.exp(rel)
+    m = g[..., None] * decay * dtr[:, :, None, :, :]             # (B,nc,q,k,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xr)
+    # ---- chunk states
+    tail = cum[:, :, -1:, :] - cum                               # decay to chunk end
+    sx = xr * (dtr * jnp.exp(tail))[..., None]                   # (B,nc,Lc,H,P)
+    states = jnp.einsum("bckn,bckhp->bchnp", br, sx)             # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp                                           # (B,H,N,P),(B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + s_c
+        return new, prev
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, prevs = lax.scan(scan_fn, init,
+                            (jnp.moveaxis(states, 1, 0),
+                             jnp.moveaxis(chunk_decay, 1, 0)),
+                            unroll=_unroll(nc))
+    prev_states = jnp.moveaxis(prevs, 0, 1)                      # (B,nc,H,N,P)
+    # ---- inter-chunk contribution
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cr, prev_states,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, final
+
+
+def mamba2_block(params, cfg, x, *, chunk=64):
+    b, t, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    ph = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = causal_conv1d(jax.nn.silu(xbc), params["conv_w"])
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xh = xi.reshape(b, t, nh, ph)
+    y, _ = _ssd_chunked(xh, bmat, cmat, dt, params["a_log"], chunk=chunk)
+    y = y + xh.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y, params["w_out"])
+
+
+def mamba2_decode(params, cfg, x, cache):
+    """O(1) per-token recurrent decode. cache: {"h": (B,H,N,P), "conv": ...}"""
+    b, s, d = x.shape
+    assert s == 1
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    ph = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = causal_conv1d_step(jax.nn.silu(xbc), params["conv_w"],
+                                         cache["conv"])
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                        # (B,H)
+    xh = xi[:, 0].reshape(b, nh, ph).astype(jnp.float32)
+    bm = bmat[:, 0].astype(jnp.float32)                          # (B,N)
+    cm = cmat[:, 0].astype(jnp.float32)
+    hnew = (cache["h"] * dec[..., None, None]
+            + jnp.einsum("bn,bhp,bh->bhnp", bm, xh, dt))
+    y = jnp.einsum("bn,bhnp->bhp", cm, hnew)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, {"h": hnew, "conv": conv_state, "len": cache["len"] + 1}
+
+
+def init_mamba2_cache(cfg, batch):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_headdim
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * cfg.ssm_state),
+                          cfg.jnp_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_branch": _dense_init(ks[0], (d, w), cfg.jnp_dtype),
+        "w_rec_branch": _dense_init(ks[1], (d, w), cfg.jnp_dtype),
+        "conv_w": _dense_init(ks[2], (cfg.conv_width, w), cfg.jnp_dtype,
+                              scale=0.5),
+        "w_a": _dense_init(ks[3], (w, w), cfg.jnp_dtype),
+        "b_a": jnp.zeros((w,), cfg.jnp_dtype),
+        "w_i": _dense_init(ks[4], (w, w), cfg.jnp_dtype),
+        "b_i": jnp.zeros((w,), cfg.jnp_dtype),
+        # Λ init so that a = exp(-c softplus(Λ)) in [0.9, 0.999]
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _RGLRU_C)),
+            cfg.jnp_dtype),
+        "w_out": _dense_init(ks[5], (w, d), cfg.jnp_dtype),
+    }
+
+
+def _rglru_gates(params, u):
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, params["w_a"]).astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, params["w_i"]).astype(jnp.float32)
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block(params, cfg, x):
+    """Griffin recurrent block: (gate branch) * RG-LRU(conv(rec branch))."""
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate_branch"]))
+    u = jnp.einsum("btd,dw->btw", x, params["w_rec_branch"])
+    u = causal_conv1d(u, params["conv_w"])
+    a, gated = _rglru_gates(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype)
+    y = h * gate
+    return jnp.einsum("btw,wd->btd", y, params["w_out"])
+
+
+def rglru_decode(params, cfg, x, cache):
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate_branch"]))
+    u = jnp.einsum("btd,dw->btw", x, params["w_rec_branch"])
+    u, conv_state = causal_conv1d_step(u, params["conv_w"], cache["conv"])
+    a, gated = _rglru_gates(params, u)
+    h = a[:, 0] * cache["h"] + gated[:, 0]                      # (B,W)
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = jnp.einsum("btw,wd->btd", y, params["w_out"])
+    return out, {"h": h, "conv": conv_state, "len": cache["len"] + 1}
+
+
+def init_rglru_cache(cfg, batch):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.jnp_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,263 @@
+"""Top-level model API: init / forward / loss / decode, plus sharding specs.
+
+Batch dict convention
+---------------------
+    tokens   (B, S) int32              — or (B, S, K) for codebook (audio) archs
+    labels   (B, S[, K]) int32         — -1 marks masked positions
+    frontend (B, F, d_model) float     — stubbed modality embeddings (vlm/audio)
+    positions optional (B, S) or (B, S, 3) for M-RoPE
+
+For frontend archs the *total* sequence is F + S_text; ``input_specs`` keeps
+seq_len = F + S_text so the assigned shapes are respected end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ATTN, SWA, MLA, RGLRU, MAMBA2
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    d, v, kk = cfg.d_model, cfg.vocab_size, cfg.num_codebooks
+    embed_shape = (v, d) if kk == 1 else (kk, v, d)
+    params = {
+        "embed": (jax.random.normal(k_embed, embed_shape) * 0.02
+                  ).astype(cfg.jnp_dtype),
+        "final_norm": jnp.zeros((d,), cfg.jnp_dtype),
+        **T.init_stack(k_stack, cfg),
+    }
+    if not cfg.tie_embeddings:
+        un_shape = (d, v) if kk == 1 else (kk, d, v)
+        params["unembed"] = (jax.random.normal(k_out, un_shape) *
+                             (1.0 / d ** 0.5)).astype(cfg.jnp_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ArchConfig, tokens):
+    if cfg.num_codebooks == 1:
+        return params["embed"][tokens]
+    # (B,S,K) -> sum_k embed[k][tok]
+    outs = [params["embed"][k][tokens[..., k]]
+            for k in range(cfg.num_codebooks)]
+    return sum(outs)
+
+
+def _logits(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        table = params["embed"]
+        if cfg.num_codebooks == 1:
+            return jnp.einsum("bsd,vd->bsv", x, table)
+        return jnp.einsum("bsd,kvd->bskv", x, table)
+    if cfg.num_codebooks == 1:
+        return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return jnp.einsum("bsd,kdv->bskv", x, params["unembed"])
+
+
+def _positions(cfg: ArchConfig, batch, total_len):
+    pos = batch.get("positions")
+    if pos is not None:
+        return pos
+    b = batch["tokens"].shape[0]
+    base = jnp.broadcast_to(jnp.arange(total_len, dtype=jnp.int32),
+                            (b, total_len))
+    if cfg.mrope_sections is not None:
+        # text default: t = h = w = index (reduces to plain RoPE)
+        return jnp.broadcast_to(base[..., None], (b, total_len, 3))
+    return base
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def hidden(params, cfg: ArchConfig, batch, *, remat: bool = False):
+    """Final hidden states on token positions: (B, S_text, d), aux loss."""
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens)
+    n_front = 0
+    if cfg.frontend_tokens and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        n_front = fe.shape[1]
+        x = jnp.concatenate([fe, x], axis=1)
+    positions = _positions(cfg, batch, x.shape[1])
+    x, aux = T.apply_stack(params, cfg, x, positions, remat=remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:, :]
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, batch, *, remat: bool = False):
+    """Returns (logits_on_token_positions, aux_loss)."""
+    x, aux = hidden(params, cfg, batch, remat=remat)
+    return _logits(params, cfg, x), aux
+
+
+def _chunk_nll(params, cfg: ArchConfig, xc, labels_c):
+    """xc: (B, C, d), labels_c: (B, C[, K]). Returns (nll_sum, mask_sum)."""
+    logits = _logits(params, cfg, xc)
+    mask = (labels_c >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels_c, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = False,
+            xent_chunk: int = 1024):
+    """Sequence-chunked cross entropy: the (B, S, V) logits tensor is never
+    materialized (269 TB for llama3-405b @ train_4k); each (B, C, V) chunk is
+    computed, reduced, and rematerialized in the backward pass."""
+    x, aux = hidden(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    b, s = x.shape[0], x.shape[1]
+    if s <= xent_chunk or s % xent_chunk:
+        nll, msk = _chunk_nll(params, cfg, x, labels)
+    else:
+        nc = s // xent_chunk
+        xc = x.reshape((b, nc, xent_chunk) + x.shape[2:])
+        lc = labels.reshape((b, nc, xent_chunk) + labels.shape[2:])
+
+        def body(carry, inp):
+            xi, li = inp
+            n, m = jax.checkpoint(
+                lambda a, l: _chunk_nll(params, cfg, a, l))(xi, li)
+            return (carry[0] + n, carry[1] + m), None
+
+        (nll, msk), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(())),
+            (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+            unroll=L._unroll(nc))
+    loss = nll / jnp.clip(msk, 1.0)
+    return loss + aux.astype(jnp.float32)
+
+
+def model_logits_last(params, cfg: ArchConfig, x):
+    """Last-position logits only (prefill output): avoids (B, S, V)."""
+    return _logits(params, cfg, x[:, -1:, :])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch, capacity):
+    return T.init_stack_cache(cfg, batch, capacity)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens):
+    """One decode step. tokens: (B,) int32 or (B, K) for codebook archs.
+    Returns (logits (B, V[, K...]), new_cache)."""
+    tok = tokens[:, None] if cfg.num_codebooks == 1 else tokens[:, None, :]
+    x = _embed(params, cfg, tok)
+    x, cache = T.decode_stack(params, cfg, x, cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# sharding specs (model axis = tensor/expert parallel; see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ArchConfig, kind: str, axis: str):
+    a = axis
+    sp = {"norm1": P()}
+    if kind in (ATTN, SWA):
+        mixer = {"wq": P(None, a), "wk": P(None, a), "wv": P(None, a),
+                 "wo": P(a, None)}
+        if cfg.qk_norm:
+            mixer["q_norm"] = P()
+            mixer["k_norm"] = P()
+    elif kind == MLA:
+        mixer = {"wq": P(None, a), "w_dkv": P(None, None), "w_uk": P(None, a),
+                 "w_uv": P(None, a), "w_kr": P(None, None), "wo": P(a, None),
+                 "kv_norm": P()}
+    elif kind == RGLRU:
+        mixer = {"w_gate_branch": P(None, a), "w_rec_branch": P(None, a),
+                 "conv_w": P(None, a), "w_a": P(None, a), "b_a": P(a),
+                 "w_i": P(None, a), "b_i": P(a), "lam": P(a),
+                 "w_out": P(a, None)}
+    elif kind == MAMBA2:
+        mixer = {"w_in": P(None, None), "conv_w": P(None, None),
+                 "a_log": P(), "dt_bias": P(), "d_skip": P(),
+                 "out_norm": P(), "w_out": P(None, None)}
+    else:
+        raise ValueError(kind)
+    sp["mixer"] = mixer
+    if kind != MAMBA2:
+        sp["norm2"] = P()
+        if cfg.moe is not None:
+            ffn = {"router": P(None, None), "w1": P(a, None, None),
+                   "w3": P(a, None, None), "w2": P(a, None, None)}
+            if cfg.moe.num_shared:
+                ffn["shared"] = {"w1": P(None, a), "w3": P(None, a),
+                                 "w2": P(a, None)}
+            sp["ffn"] = ffn
+        else:
+            sp["ffn"] = {"w1": P(None, a), "w3": P(None, a), "w2": P(a, None)}
+    return sp
+
+
+def _prepend(spec_tree, extra):
+    return jax.tree.map(lambda s: P(*((extra,) + tuple(s))), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg: ArchConfig, axis: str = "model"):
+    """PartitionSpec pytree matching ``init_params`` output."""
+    pat, n_groups, tail = T._split_depth(cfg)
+    kk = cfg.num_codebooks
+    specs = {
+        "embed": P(axis, None) if kk == 1 else P(None, axis, None),
+        "final_norm": P(),
+        "groups": tuple(_prepend(_block_specs(cfg, kind, axis), None)
+                        for kind in pat),
+        "tail": tuple(_block_specs(cfg, kind, axis) for kind in tail),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, axis) if kk == 1 else P(None, None, axis)
+    return specs
+
+
+def _cache_leaf_spec(path_leaf_shape_ndim, axis_data, axis_model):
+    raise NotImplementedError
+
+
+def cache_specs(cfg: ArchConfig, data_axis, model_axis="model"):
+    """Shard caches: batch dim over data axis; head/width dims over model."""
+    def leaf_spec(kind):
+        if kind in (ATTN, SWA):
+            return {"k": P(data_axis, None, None, None),
+                    "v": P(data_axis, None, None, None),
+                    "pos": P(data_axis, None), "len": P()}
+        if kind == MLA:
+            return {"c_kv": P(data_axis, None, None),
+                    "k_rope": P(data_axis, None, None),
+                    "pos": P(data_axis, None), "len": P()}
+        if kind == RGLRU:
+            return {"h": P(data_axis, model_axis),
+                    "conv": P(data_axis, None, model_axis), "len": P()}
+        if kind == MAMBA2:
+            return {"h": P(data_axis, None, None, None),
+                    "conv": P(data_axis, None, None), "len": P()}
+        raise ValueError(kind)
+
+    pat, n_groups, tail = T._split_depth(cfg)
+    return {
+        "groups": tuple(_prepend(leaf_spec(kind), None) for kind in pat),
+        "tail": tuple(leaf_spec(kind) for kind in tail),
+    }

@@ -1,0 +1,212 @@
+"""Composable decoder stack.
+
+The per-layer block kind comes from ``cfg.block_pattern`` tiled over depth
+(e.g. recurrentgemma's (RGLRU, RGLRU, SWA)). Layers are *stacked per pattern
+position* and iterated with ``lax.scan`` so the HLO contains one copy of each
+distinct block kind regardless of depth — essential for compiling 126-layer
+configs in the dry-run.
+
+Params layout::
+
+    {"embed": ..., "unembed": ..., "final_norm": ...,
+     "groups": (per-pattern-position dict with leading repeat axis R, ...),
+     "tail":   (per-leftover-layer dict, ...)}          # num_layers % len(pattern)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ATTN, SWA, MLA, RGLRU, MAMBA2, ArchConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# single-block init / apply / decode dispatch
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {"norm1": jnp.zeros((d,), cfg.jnp_dtype)}
+    if kind in (ATTN, SWA):
+        p["mixer"] = L.init_attention(k1, cfg)
+    elif kind == MLA:
+        p["mixer"] = L.init_mla(k1, cfg)
+    elif kind == RGLRU:
+        p["mixer"] = L.init_rglru(k1, cfg)
+    elif kind == MAMBA2:
+        p["mixer"] = L.init_mamba2(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if kind != MAMBA2:
+        p["norm2"] = jnp.zeros((d,), cfg.jnp_dtype)
+        if cfg.moe is not None:
+            p["ffn"] = L.init_moe(k2, cfg)
+        else:
+            p["ffn"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _apply_block(params, cfg: ArchConfig, kind: str, x, positions, aux):
+    h = L.rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == ATTN:
+        mixed = L.attention(params["mixer"], cfg, h, positions)
+    elif kind == SWA:
+        mixed = L.attention(params["mixer"], cfg, h, positions,
+                            window=cfg.sliding_window)
+    elif kind == MLA:
+        mixed = L.mla_attention(params["mixer"], cfg, h, positions)
+    elif kind == RGLRU:
+        mixed = L.rglru_block(params["mixer"], cfg, h)
+    elif kind == MAMBA2:
+        mixed = L.mamba2_block(params["mixer"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if kind != MAMBA2:
+        h = L.rms_norm(x, params["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, a = L.moe_ffn(params["ffn"], cfg, h)
+            aux = aux + a
+        else:
+            y = L.mlp(params["ffn"], h)
+        x = x + y
+    return x, aux
+
+
+def _decode_block(params, cfg: ArchConfig, kind: str, x, cache):
+    h = L.rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind == ATTN:
+        mixed, cache = L.attention_decode(params["mixer"], cfg, h, cache)
+    elif kind == SWA:
+        mixed, cache = L.attention_decode(params["mixer"], cfg, h, cache,
+                                          window=cfg.sliding_window)
+    elif kind == MLA:
+        mixed, cache = L.mla_decode(params["mixer"], cfg, h, cache)
+    elif kind == RGLRU:
+        mixed, cache = L.rglru_decode(params["mixer"], cfg, h, cache)
+    elif kind == MAMBA2:
+        mixed, cache = L.mamba2_decode(params["mixer"], cfg, h, cache)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if kind != MAMBA2:
+        h = L.rms_norm(x, params["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = L.moe_ffn(params["ffn"], cfg, h)
+        else:
+            y = L.mlp(params["ffn"], h)
+        x = x + y
+    return x, cache
+
+
+def _init_block_cache(cfg: ArchConfig, kind: str, batch, capacity):
+    if kind == ATTN:
+        return L.init_attention_cache(cfg, batch, capacity)
+    if kind == SWA:
+        return L.init_attention_cache(cfg, batch, capacity,
+                                      window=cfg.sliding_window)
+    if kind == MLA:
+        return L.init_mla_cache(cfg, batch, capacity)
+    if kind == RGLRU:
+        return L.init_rglru_cache(cfg, batch)
+    if kind == MAMBA2:
+        return L.init_mamba2_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def _split_depth(cfg: ArchConfig):
+    pat = tuple(cfg.block_pattern)
+    n_groups = cfg.num_layers // len(pat)
+    tail = tuple(cfg.blocks()[n_groups * len(pat):])
+    return pat, n_groups, tail
+
+
+def init_stack(key, cfg: ArchConfig):
+    pat, n_groups, tail = _split_depth(cfg)
+    keys = jax.random.split(key, len(pat) + len(tail))
+    groups = []
+    for j, kind in enumerate(pat):
+        # giant stacks (e.g. llama3-405b: 126 x 16384 x 53248) would overflow
+        # the int32 iota inside a vmapped threefry; those configs only ever
+        # exist abstractly (dry-run), so replicate one block's init instead.
+        one_abs = jax.eval_shape(
+            lambda k: _init_block(k, cfg, pat[j]), keys[j])
+        biggest = max(a.size for a in jax.tree.leaves(one_abs))
+        if n_groups * biggest > 2**31 - 8:
+            one = _init_block(keys[j], cfg, kind)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape),
+                one)
+        else:
+            sub = jax.random.split(keys[j], max(n_groups, 1))
+            stacked = jax.vmap(lambda k: _init_block(k, cfg, kind))(sub)
+        groups.append(stacked)
+    tail_params = tuple(
+        _init_block(keys[len(pat) + i], cfg, kind)
+        for i, kind in enumerate(tail))
+    return {"groups": tuple(groups), "tail": tail_params}
+
+
+def apply_stack(params, cfg: ArchConfig, x, positions, *, remat: bool = False):
+    pat, n_groups, tail = _split_depth(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if n_groups > 0:
+        def body(carry, group_params):
+            h, a = carry
+            for j, kind in enumerate(pat):
+                h, a = _apply_block(group_params[j], cfg, kind, h, positions, a)
+            return (h, a), None
+
+        if remat:
+            body = jax.checkpoint(body)   # save only per-group inputs
+        (x, aux), _ = lax.scan(body, (x, aux), params["groups"])
+    for i, kind in enumerate(tail):
+        x, aux = _apply_block(params["tail"][i], cfg, kind, x, positions, aux)
+    return x, aux
+
+
+def init_stack_cache(cfg: ArchConfig, batch, capacity):
+    pat, n_groups, tail = _split_depth(cfg)
+    groups = []
+    for kind in pat:
+        one = _init_block_cache(cfg, kind, batch, capacity)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+        groups.append(stacked)
+    tail_caches = tuple(_init_block_cache(cfg, kind, batch, capacity)
+                        for kind in tail)
+    return {"groups": tuple(groups), "tail": tail_caches}
+
+
+def decode_stack(params, cfg: ArchConfig, x, cache):
+    pat, n_groups, tail = _split_depth(cfg)
+
+    if n_groups > 0:
+        def body(h, scanned):
+            group_params, group_cache = scanned
+            new_caches = []
+            for j, kind in enumerate(pat):
+                h, c = _decode_block(group_params[j], cfg, kind, h,
+                                     group_cache[j])
+                new_caches.append(c)
+            return h, tuple(new_caches)
+
+        x, new_group_cache = lax.scan(body, x,
+                                      (params["groups"], cache["groups"]))
+    else:
+        new_group_cache = cache["groups"]
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, c = _decode_block(params["tail"][i], cfg, kind, x, cache["tail"][i])
+        new_tail.append(c)
+    return x, {"groups": new_group_cache, "tail": tuple(new_tail)}

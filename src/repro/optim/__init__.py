@@ -1,0 +1,1 @@
+from repro.optim.optimizers import SGD, Adam, get_optimizer  # noqa: F401

@@ -1,0 +1,88 @@
+"""Raw-JAX optimizers (no optax in the environment; we build the substrate).
+
+Each optimizer is a dataclass with ``init(params) -> state`` and
+``update(grads, state, params) -> (new_params, new_state)``. The Byzantine
+trainer feeds the *robustly aggregated estimator* g^k in place of grads, so
+Byz-VR-MARINA composes with any of these (the paper's Alg. 1 is plain SGD;
+Adam on top of the robust estimator is a framework extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def _cast_like(new, ref):
+    return jax.tree.map(lambda n, r: n.astype(r.dtype), new, ref)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.05
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                  params)}
+
+    def update(self, grads, state, params):
+        if self.weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + self.weight_decay * p.astype(g.dtype),
+                grads, params)
+        if self.momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: p.astype(jnp.float32) - self.lr * g.astype(jnp.float32),
+                params, grads)
+            return _cast_like(new, params), state
+        m = jax.tree.map(
+            lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+            state["m"], grads)
+        new = jax.tree.map(
+            lambda p, mm: p.astype(jnp.float32) - self.lr * mm, params, m)
+        return _cast_like(new, params), {"m": m}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0     # decoupled (AdamW)
+
+    def init(self, params):
+        z = lambda x: jnp.zeros_like(x, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mm, g: self.b1 * mm
+                         + (1 - self.b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv
+                         + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            step = self.lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            out = p.astype(jnp.float32) - step
+            if self.weight_decay:
+                out = out - self.lr * self.weight_decay * p.astype(jnp.float32)
+            return out
+
+        new = jax.tree.map(upd, params, m, v)
+        return _cast_like(new, params), {"m": m, "v": v, "t": t}
+
+
+def get_optimizer(name: str, **kw):
+    return {"sgd": SGD, "adam": Adam}[name](**kw)

@@ -1,0 +1,119 @@
+"""Unit tests for the (δ,c)-robust aggregation rules (Def. 2.1, Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (Aggregator, bucketize, coord_median,
+                                    coord_trimmed_mean, get_aggregator)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_coord_median_matches_numpy():
+    for n in [3, 4, 5, 16]:
+        x = jax.random.normal(jax.random.fold_in(KEY, n), (n, 37))
+        np.testing.assert_allclose(np.asarray(coord_median(x)),
+                                   np.median(np.asarray(x), axis=0),
+                                   rtol=1e-6)
+
+
+def test_trimmed_mean_matches_manual():
+    x = jax.random.normal(KEY, (10, 13))
+    got = coord_trimmed_mean(x, 2)
+    xs = np.sort(np.asarray(x), axis=0)
+    np.testing.assert_allclose(np.asarray(got), xs[2:8].mean(0), rtol=1e-6)
+
+
+def test_bucketize_shapes_and_mean_preservation():
+    x = jax.random.normal(KEY, (10, 5))
+    b = bucketize(KEY, x, 2)
+    assert b.shape == (5, 5)
+    # bucketing preserves the global mean (permutation + averaging)
+    np.testing.assert_allclose(np.asarray(b.mean(0)), np.asarray(x.mean(0)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mean_aggregator():
+    x = jax.random.normal(KEY, (8, 11))
+    agg = get_aggregator("mean")
+    np.testing.assert_allclose(np.asarray(agg(KEY, x)),
+                               np.asarray(x.mean(0)), rtol=1e-6)
+
+
+def test_rfa_approximates_geometric_median():
+    # for 1-d clusters, geometric median == ordinary median-ish robust point
+    good = jnp.ones((9, 4))
+    outlier = 100.0 * jnp.ones((1, 4))
+    x = jnp.concatenate([good, outlier])
+    agg = get_aggregator("rfa", iters=32)
+    z = agg(KEY, x)
+    assert float(jnp.max(jnp.abs(z - 1.0))) < 0.2, z
+
+
+def test_krum_picks_a_good_vector():
+    good = jax.random.normal(KEY, (8, 6)) * 0.01
+    bad = 50.0 + jax.random.normal(jax.random.fold_in(KEY, 1), (2, 6))
+    x = jnp.concatenate([good, bad])
+    agg = get_aggregator("krum", n_byz=2)
+    z = agg(KEY, x)
+    assert float(jnp.max(jnp.abs(z))) < 1.0
+
+
+@pytest.mark.parametrize("rule", ["mean", "cm", "tm", "rfa", "krum"])
+def test_translation_equivariance(rule):
+    """All rules commute with translation — the property that lets the server
+    add g^k after aggregating Q(Δ_i) (Sec. 2 discussion)."""
+    x = jax.random.normal(KEY, (8, 9))
+    c = jax.random.normal(jax.random.fold_in(KEY, 2), (9,))
+    agg = get_aggregator(rule, bucket_size=2)
+    a1 = agg(KEY, x + c[None, :])
+    a2 = agg(KEY, x) + c
+    tol = 1e-4 if rule in ("rfa",) else 1e-5
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=tol)
+
+
+@pytest.mark.parametrize("rule", ["cm", "tm", "rfa", "krum"])
+def test_robustness_to_one_outlier(rule):
+    """Def. 2.1-style sanity: with δn=1 outlier, the aggregate stays within
+    the good cluster's diameter of the good mean."""
+    good = jax.random.normal(KEY, (9, 20)) * 0.1
+    bad = 1e4 * jnp.ones((1, 20))
+    x = jnp.concatenate([good, bad])
+    agg = get_aggregator(rule, bucket_size=2, n_byz=1)
+    z = agg(KEY, x)
+    err = float(jnp.linalg.norm(z - good.mean(0)))
+    assert err < 5.0, (rule, err)
+    # non-robust mean is pulled away by ~1e3
+    pulled = float(jnp.linalg.norm(x.mean(0) - good.mean(0)))
+    assert pulled > 100.0
+
+
+def test_tree_matches_flat():
+    """tree-mode aggregation == flat aggregation on the concatenated vector."""
+    n = 8
+    leaves = {"a": jax.random.normal(KEY, (n, 3, 4)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 1), (n, 7))}
+    flat = jnp.concatenate([leaves["a"].reshape(n, -1),
+                            leaves["b"].reshape(n, -1)], axis=1)
+    for rule in ["mean", "cm", "tm", "rfa", "krum"]:
+        agg = get_aggregator(rule, bucket_size=2)
+        zt = agg.tree(KEY, leaves)
+        zf = agg(KEY, flat)
+        zt_flat = jnp.concatenate([zt["a"].reshape(-1), zt["b"].reshape(-1)])
+        np.testing.assert_allclose(np.asarray(zt_flat), np.asarray(zf),
+                                   rtol=2e-4, atol=2e-5, err_msg=rule)
+
+
+def test_bucketing_uses_shared_permutation_across_leaves():
+    """If leaves were permuted independently, tree != flat for CM."""
+    n = 6
+    leaves = {"a": jax.random.normal(KEY, (n, 5)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 3), (n, 5))}
+    agg = get_aggregator("cm", bucket_size=3)
+    zt = agg.tree(KEY, leaves)
+    flat = jnp.concatenate([leaves["a"], leaves["b"]], axis=1)
+    zf = agg(KEY, flat)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([zt["a"], zt["b"]])), np.asarray(zf),
+        rtol=1e-5)

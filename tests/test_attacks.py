@@ -1,0 +1,69 @@
+"""Unit tests for the Byzantine attack implementations (Sec. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import get_attack
+from repro.core.byz_vr_marina import ByzVRMarinaConfig, apply_attack
+from repro.core.aggregators import get_aggregator
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_bit_flip():
+    atk = get_attack("BF")
+    h = jax.random.normal(KEY, (4, 7))
+    out = atk.apply(KEY, h, h.mean(0), h.std(0))
+    np.testing.assert_allclose(np.asarray(out), -np.asarray(h))
+
+
+def test_alie_formula():
+    atk = get_attack("ALIE", z=1.5)
+    h = jax.random.normal(KEY, (4, 7))
+    m, s = h.mean(0), h.std(0)
+    out = atk.apply(KEY, h, m, s)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(m - 1.5 * s),
+                               rtol=1e-5)
+    # all byzantine rows identical (coordinated attack)
+    assert jnp.all(out[0] == out[1])
+
+
+def test_ipm_formula():
+    atk = get_attack("IPM", eps=0.4)
+    h = jax.random.normal(KEY, (4, 7))
+    m = h.mean(0)
+    out = atk.apply(KEY, h, m, h.std(0))
+    np.testing.assert_allclose(np.asarray(out[2]), -0.4 * np.asarray(m),
+                               rtol=1e-5)
+
+
+def test_label_flip_is_data_level():
+    atk = get_attack("LF")
+    assert atk.flips_labels
+    h = jax.random.normal(KEY, (4, 7))
+    out = atk.apply(KEY, h, h.mean(0), h.std(0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h))
+
+
+def test_apply_attack_only_touches_byzantines():
+    cfg = ByzVRMarinaConfig(n_workers=6, n_byz=2, attack=get_attack("BF"),
+                            aggregator=get_aggregator("cm"))
+    cand = {"w": jax.random.normal(KEY, (6, 5))}
+    sent = apply_attack(cfg, KEY, cand)
+    np.testing.assert_allclose(np.asarray(sent["w"][:2]),
+                               -np.asarray(cand["w"][:2]))
+    np.testing.assert_allclose(np.asarray(sent["w"][2:]),
+                               np.asarray(cand["w"][2:]))
+
+
+def test_alie_uses_good_stats_only():
+    """Omniscient stats must exclude the byzantine rows themselves."""
+    cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1,
+                            attack=get_attack("ALIE", z=0.0),
+                            aggregator=get_aggregator("cm"))
+    cand = {"w": jnp.concatenate([1e6 * jnp.ones((1, 3)),
+                                  jnp.ones((4, 3))])}
+    sent = apply_attack(cfg, KEY, cand)
+    # z=0 => byzantine sends the GOOD mean = 1.0, not polluted by its 1e6 row
+    np.testing.assert_allclose(np.asarray(sent["w"][0]), np.ones(3),
+                               rtol=1e-5)

@@ -1,0 +1,129 @@
+"""Attention implementation equivalence: direct / q-chunked / online-softmax
+(§Perf A-iterations) and MoE dispatch behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b=2, s=64, hq=8, hkv=2, d=16):
+    q = jax.random.normal(KEY, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("kv_chunk", [16, 64, 100])
+def test_online_matches_direct(kv_chunk):
+    q, k, v, pos = _qkv()
+    ref = L._attend(q, k, v, pos, pos)
+    got = L._attend_online(q, k, v, pos, pos, kv_chunk=kv_chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 7, 64])
+def test_online_matches_direct_windowed(window):
+    q, k, v, pos = _qkv()
+    ref = L._attend(q, k, v, pos, pos, window=window)
+    got = L._attend_online(q, k, v, pos, pos, window=window, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_online_gradients_finite_and_match():
+    q, k, v, pos = _qkv(s=32)
+    g1 = jax.grad(lambda a: L._attend(a, k, v, pos, pos).sum())(q)
+    g2 = jax.grad(lambda a: L._attend_online(a, k, v, pos, pos,
+                                             kv_chunk=8).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g2)))
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g1), atol=3e-5)
+
+
+def test_attn_impl_switch_end_to_end():
+    """Full model forward identical under both attention impls."""
+    from repro.models import forward, init_params
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    try:
+        L.ATTN_IMPL[0] = "chunked"
+        a, _ = forward(params, cfg, batch)
+        L.ATTN_IMPL[0] = "online"
+        b, _ = forward(params, cfg, batch)
+    finally:
+        L.ATTN_IMPL[0] = "chunked"
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-4,
+                               rtol=2e-3)
+
+
+def test_probe_unroll_is_semantics_preserving():
+    from repro.models import loss_fn, init_params
+    cfg = get_config("mamba2-130m").reduced()
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 128), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    l1 = loss_fn(params, cfg, batch, xent_chunk=32)
+    try:
+        L.PROBE_UNROLL[0] = True
+        l2 = loss_fn(params, cfg, batch, xent_chunk=32)
+    finally:
+        L.PROBE_UNROLL[0] = False
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def _moe_dense_reference(params, cfg, x):
+    """All-experts dense reference: y = sum_k gate_k * expert_{idx_k}(x)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, params["w1"]))
+    h = h * jnp.einsum("td,edf->tef", xf, params["w3"])
+    all_out = jnp.einsum("tef,efd->ted", h, params["w2"])   # (t, E, d)
+    picked = jnp.take_along_axis(all_out, idx[..., None], axis=1)  # (t,k,d)
+    y = jnp.einsum("tk,tkd->td", gate, picked).reshape(b, s, d)
+    if m.num_shared:
+        y = y + L.mlp(params["shared"], x)
+    return y
+
+
+def test_moe_sort_dispatch_matches_dense_reference():
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+    # generous capacity so nothing drops
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = L.init_moe(KEY, cfg)
+    x = 0.5 * jax.random.normal(KEY, (2, 16, cfg.d_model))
+    got, aux = L.moe_ffn(params, cfg, x)
+    want = _moe_dense_reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=1e-4,
+                               rtol=1e-3)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    params = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+    y, aux = L.moe_ffn(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))

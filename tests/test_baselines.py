@@ -1,0 +1,83 @@
+"""Baseline estimators (BR-SGDm, CSGD, BR-DIANA, Byrd-SVRG) sanity tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor)
+from repro.core.baselines import (make_byrd_svrg_step, make_csgd_step,
+                                  make_diana_step, make_sgd_step)
+from repro.data import (corrupt_labels_logreg, init_logreg_params,
+                        logreg_loss, make_logreg_data)
+
+KEY = jax.random.PRNGKey(0)
+DIM = 15
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_logreg_data(KEY, n_samples=300, dim=DIM, n_workers=5,
+                            homogeneous=True)
+    return data, logreg_loss(0.01), {"x": data.features, "y": data.labels}
+
+
+def _descends(problem, init_state, step, iters=150):
+    data, loss_fn, full = problem
+    anchor = data.stacked()
+    l0 = float(loss_fn(init_state["params"], full))
+    state = init_state
+    k = KEY
+    step = jax.jit(step)
+    for it in range(iters):
+        k, k1, k2 = jax.random.split(k, 3)
+        state, m = step(state, data.sample_batches(k1, 16), anchor, k2)
+        assert jnp.isfinite(m["loss"])
+    l1 = float(loss_fn(state["params"], full))
+    assert l1 < l0 - 0.02, (l0, l1)
+    return l1
+
+
+def _cfg(**kw):
+    base = dict(n_workers=5, n_byz=1, lr=0.3, p=0.1,
+                aggregator=get_aggregator("cm", bucket_size=2),
+                attack=get_attack("ALIE"))
+    base.update(kw)
+    return ByzVRMarinaConfig(**base)
+
+
+def test_parallel_sgd(problem):
+    data, loss_fn, _ = problem
+    cfg = _cfg(n_byz=0, attack=get_attack("NA"),
+               aggregator=get_aggregator("mean"))
+    init, step = make_sgd_step(cfg, loss_fn, corrupt_labels_logreg)
+    _descends(problem, init(init_logreg_params(DIM)), step)
+
+
+def test_br_sgdm(problem):
+    data, loss_fn, _ = problem
+    cfg = _cfg()
+    init, step = make_sgd_step(cfg, loss_fn, corrupt_labels_logreg,
+                               momentum=0.9)
+    _descends(problem, init(init_logreg_params(DIM)), step)
+
+
+def test_br_csgd(problem):
+    data, loss_fn, _ = problem
+    cfg = _cfg(compressor=get_compressor("randk", ratio=0.2))
+    init, step = make_csgd_step(cfg, loss_fn, corrupt_labels_logreg)
+    _descends(problem, init(init_logreg_params(DIM)), step)
+
+
+def test_br_diana(problem):
+    data, loss_fn, _ = problem
+    cfg = _cfg(compressor=get_compressor("randk", ratio=0.2), lr=0.2)
+    init, step = make_diana_step(cfg, loss_fn, corrupt_labels_logreg)
+    _descends(problem, init(init_logreg_params(DIM), d_hint=DIM + 1), step)
+
+
+def test_byrd_svrg(problem):
+    data, loss_fn, _ = problem
+    cfg = _cfg(aggregator=get_aggregator("rfa", bucket_size=2))
+    init, step = make_byrd_svrg_step(cfg, loss_fn, corrupt_labels_logreg)
+    state = jax.jit(init)(init_logreg_params(DIM), data.stacked(), KEY)
+    _descends(problem, state, step)

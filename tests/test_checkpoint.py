@@ -1,0 +1,38 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_roundtrip_simple(tmp_path):
+    state = {"w": jnp.arange(6.0).reshape(2, 3),
+             "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+             "t": jnp.asarray(7, jnp.int32)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state, step=42)
+    restored, step = load_checkpoint(path, state)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = init_params(KEY, cfg)
+    path = str(tmp_path / "model")
+    save_checkpoint(path, params, step=0)
+    restored, _ = load_checkpoint(path, params)
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(restored)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))

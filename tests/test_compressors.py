@@ -1,0 +1,113 @@
+"""Unit tests for unbiased compression operators (Def. 2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressors import (get_compressor, identity, l2_dithering,
+                                    natural_compression, rand_k,
+                                    sign_compressor)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _empirical_mean(comp, x, n=400):
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(n):
+        acc = acc + comp.compress(jax.random.fold_in(KEY, i), x)
+    return acc / n
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: rand_k(0.25), lambda: l2_dithering(4),
+    lambda: natural_compression(), lambda: identity()])
+def test_unbiasedness(maker):
+    comp = maker()
+    x = jax.random.normal(KEY, (64,))
+    m = _empirical_mean(comp, x)
+    # statistical tolerance: 400 draws, per-coordinate std <= omega^0.5 |x|
+    tol = 4.0 * (max(comp.omega(64), 0.01) ** 0.5) * float(
+        jnp.max(jnp.abs(x))) / 20.0 + 0.05
+    assert float(jnp.max(jnp.abs(m - x))) < tol
+
+
+def test_randk_density_exact():
+    comp = rand_k(0.25)
+    x = jax.random.normal(KEY, (100,))
+    q = comp.compress(KEY, x)
+    assert int(jnp.sum(q != 0)) == 25
+    # kept coords scaled by d/k = 4
+    kept = q[q != 0]
+    orig = x[q != 0]
+    np.testing.assert_allclose(np.asarray(kept), np.asarray(orig) * 4.0,
+                               rtol=1e-5)
+
+
+def test_randk_variance_bound():
+    comp = rand_k(0.5)
+    x = jax.random.normal(KEY, (128,))
+    omega = comp.omega(128)
+    errs = []
+    for i in range(300):
+        q = comp.compress(jax.random.fold_in(KEY, i), x)
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    emp = np.mean(errs)
+    bound = omega * float(jnp.sum(x * x))
+    assert emp <= bound * 1.15, (emp, bound)
+
+
+def test_dithering_variance_bound():
+    comp = l2_dithering(2)
+    x = jax.random.normal(KEY, (64,))
+    omega = comp.omega(64)
+    errs = []
+    for i in range(300):
+        q = comp.compress(jax.random.fold_in(KEY, i), x)
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    assert np.mean(errs) <= omega * float(jnp.sum(x * x)) * 1.15
+
+
+def test_natural_compression_omega():
+    comp = natural_compression()
+    assert comp.omega(1000) == pytest.approx(1 / 8)
+    x = jax.random.normal(KEY, (256,))
+    errs = []
+    for i in range(200):
+        q = comp.compress(jax.random.fold_in(KEY, i), x)
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    assert np.mean(errs) <= (1 / 8) * float(jnp.sum(x * x)) * 1.2
+
+
+def test_natural_compression_powers_of_two():
+    comp = natural_compression()
+    x = jnp.asarray([0.3, -1.7, 5.0, 0.0])
+    q = comp.compress(KEY, x)
+    nz = np.asarray(q[q != 0])
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+    assert float(q[3]) == 0.0
+
+
+def test_sign_compressor_is_sign():
+    comp = sign_compressor()
+    x = jnp.asarray([1.5, -2.0, 3.0])
+    q = comp.compress(KEY, x)
+    assert jnp.all(jnp.sign(q) == jnp.sign(x))
+
+
+def test_bits_accounting():
+    d = 1000
+    assert rand_k(0.1).bits_per_vector(d) == 100 * 64
+    assert identity().bits_per_vector(d) == 32 * d
+    assert natural_compression().bits_per_vector(d) == 9 * d
+
+
+def test_huge_leaf_block_selection():
+    """Leaves above the unit cap switch to block selection, stay unbiased."""
+    comp = rand_k(0.5)
+    x = jnp.ones((1 << 23,))          # 8M coords -> block size 2
+    q = comp.compress(KEY, x)
+    # mean over coords of q should be ~1 (unbiased), support ratio ~0.5
+    assert abs(float(q.mean()) - 1.0) < 0.01
+    frac = float((q != 0).mean())
+    assert abs(frac - 0.5) < 0.01

@@ -1,0 +1,77 @@
+"""Config registry + assigned-architecture spec conformance."""
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                           list_configs)
+
+SPEC = {
+    # arch: (L, d_model, heads, kv, d_ff, vocab)
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256_000),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32_064),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49_152),
+    "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151_936),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151_936),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50_280),
+    "mistral-large-123b": (88, 12288, 96, 8, 28672, 32_768),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102_400),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128_256),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+}
+
+
+def test_all_assigned_registered():
+    names = list_configs()
+    for a in ASSIGNED_ARCHS:
+        assert a in names
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_spec(arch):
+    c = get_config(arch)
+    L, d, h, kv, ff, v = SPEC[arch]
+    assert c.num_layers == L
+    assert c.d_model == d
+    assert c.num_heads == h
+    assert c.num_kv_heads == kv
+    assert c.d_ff == ff
+    assert c.vocab_size == v
+
+
+def test_family_features():
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.num_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.top_k == 2
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.moe.num_experts == 64 and ds.moe.top_k == 6
+    assert ds.moe.num_shared == 2 and ds.kv_lora_rank == 512
+    assert get_config("mamba2-130m").ssm_state == 128
+    assert get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen2-vl-2b").mrope_sections is not None
+    assert get_config("musicgen-medium").num_codebooks == 4
+    rg = get_config("recurrentgemma-2b")
+    assert rg.block_pattern.count("rg_lru") == 2  # 1:2 attention:recurrent
+
+
+def test_param_counts_near_nameplate():
+    targets = {"llama3-405b": 405e9, "mistral-large-123b": 123e9,
+               "phi3.5-moe-42b-a6.6b": 42e9, "deepseek-v2-lite-16b": 16e9,
+               "mamba2-130m": 0.13e9}
+    for arch, t in targets.items():
+        n = get_config(arch).param_count()
+        assert 0.8 * t < n < 1.25 * t, (arch, n, t)
+    # active params for MoE
+    assert get_config("phi3.5-moe-42b-a6.6b").active_param_count() < 8e9
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_reduced_is_small():
+    for a in ASSIGNED_ARCHS:
+        r = get_config(a).reduced()
+        assert r.d_model <= 512 and r.vocab_size <= 512
+        assert r.param_count() < 20e6

@@ -1,0 +1,125 @@
+"""Empirical checks of the paper's key lemmas.
+
+* Lemma E.3 (distortion contraction): E||g^k − ∇f(x^k)||² contracts toward
+  zero as training converges (the mechanism that starves Byzantines of
+  noise to hide in).
+* Lemma E.2 (variance bound): the pairwise variance of honest candidates is
+  O(||x^{k+1} − x^k||²) in the VR rounds.
+* Permutation invariance (App. E.3 discussion): the step output is
+  invariant to shuffling the honest workers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_init, make_step)
+from repro.core import tree_utils as tu
+from repro.data import (init_logreg_params, logreg_loss, make_logreg_data)
+
+KEY = jax.random.PRNGKey(0)
+DIM = 15
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_logreg_data(KEY, n_samples=240, dim=DIM, n_workers=4)
+    return data, logreg_loss(0.01), {"x": data.features, "y": data.labels}
+
+
+def test_estimator_distortion_contracts(problem):
+    """||g^k - grad f(x^k)||² should shrink by orders of magnitude."""
+    data, loss_fn, full = problem
+    cfg = ByzVRMarinaConfig(n_workers=4, n_byz=1, p=0.2, lr=0.4,
+                            aggregator=get_aggregator("cm", bucket_size=2),
+                            compressor=get_compressor("randk", ratio=0.5),
+                            attack=get_attack("ALIE"))
+    step = jax.jit(make_step(cfg, loss_fn))
+    anchor = data.stacked()
+    state = make_init(cfg, loss_fn)(init_logreg_params(DIM), anchor, KEY)
+
+    def distortion(st):
+        g_true = jax.grad(loss_fn)(st["params"], full)
+        return float(tu.tree_norm_sq(tu.tree_sub(st["g"], g_true)))
+
+    k = KEY
+    early = []
+    late = []
+    for it in range(400):
+        k, k1, k2 = jax.random.split(k, 3)
+        state, _ = step(state, data.sample_batches(k1, 16), anchor, k2)
+        if 20 <= it < 40:
+            early.append(distortion(state))
+        if it >= 380:
+            late.append(distortion(state))
+    assert np.mean(late) < np.mean(early) / 10, (np.mean(early),
+                                                 np.mean(late))
+
+
+def test_honest_candidate_variance_tracks_step_size(problem):
+    """Lemma E.2: pairwise variance of honest VR candidates is bounded by
+    A' ||x^{k+1} - x^k||² — so when the iterates stop moving, honest
+    workers agree. Check the ratio stays bounded across training."""
+    data, loss_fn, full = problem
+    cfg = ByzVRMarinaConfig(n_workers=4, n_byz=0, p=0.0,  # always VR branch
+                            lr=0.4,
+                            aggregator=get_aggregator("mean"),
+                            compressor=get_compressor("identity"),
+                            attack=get_attack("NA"))
+
+    # reimplement one VR candidate computation to inspect the spread
+    def candidates(params_new, params_old, g_prev, mb, key):
+        wkeys = tu.per_worker_keys(key, 4)
+
+        def one(b, kg):
+            gn = jax.grad(loss_fn)(params_new, b)
+            go = jax.grad(loss_fn)(params_old, b)
+            return tu.tree_sub(gn, go)
+
+        deltas = jax.vmap(one)(mb, wkeys)
+        return jax.tree.map(lambda g0, d: g0[None] + d, g_prev, deltas)
+
+    step = jax.jit(make_step(cfg, loss_fn))
+    anchor = data.stacked()
+    state = make_init(cfg, loss_fn)(init_logreg_params(DIM), anchor, KEY)
+    k = KEY
+    prev_params = state["params"]
+    ratios = []
+    for it in range(60):
+        k, k1, k2 = jax.random.split(k, 3)
+        mb = data.sample_batches(k1, 16)
+        old = state["params"]
+        state, _ = step(state, mb, anchor, k2)
+        move = float(tu.tree_norm_sq(tu.tree_sub(state["params"], old)))
+        cand = candidates(state["params"], old, state["g"], mb, k1)
+        flat = jnp.stack([jnp.concatenate([l[i].reshape(-1)
+                                           for l in jax.tree.leaves(cand)])
+                          for i in range(4)])
+        pair_var = float(jnp.mean(
+            jnp.sum((flat[:, None] - flat[None, :]) ** 2, -1)))
+        if move > 1e-12:
+            ratios.append(pair_var / move)
+    ratios = np.asarray(ratios)
+    # bounded ratio (no blow-up as the method converges)
+    assert np.median(ratios[-20:]) < 10 * np.median(ratios[:20]) + 1e3
+
+
+def test_step_permutation_invariant(problem):
+    """Shuffling honest workers' batches leaves the aggregate unchanged
+    (homogeneous case, no byz): App. E.3 permutation-invariance."""
+    data, loss_fn, full = problem
+    cfg = ByzVRMarinaConfig(n_workers=4, n_byz=0, p=0.0, lr=0.3,
+                            aggregator=get_aggregator("cm"),
+                            compressor=get_compressor("identity"),
+                            attack=get_attack("NA"))
+    step = jax.jit(make_step(cfg, loss_fn))
+    anchor = data.stacked()
+    state = make_init(cfg, loss_fn)(init_logreg_params(DIM), anchor, KEY)
+    mb = data.sample_batches(KEY, 16)
+    perm = jnp.asarray([2, 0, 3, 1])
+    mb_p = jax.tree.map(lambda a: a[perm], mb)
+    s1, _ = step(state, mb, anchor, KEY)
+    s2, _ = step(state, mb_p, anchor, KEY)
+    np.testing.assert_allclose(np.asarray(s1["g"]["w"]),
+                               np.asarray(s2["g"]["w"]), atol=1e-6)

@@ -1,0 +1,60 @@
+"""Optimizer substrate unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import SGD, Adam, get_optimizer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_sgd_step():
+    opt = SGD(lr=0.1)
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.full((3,), 2.0)}
+    new, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.8)
+
+
+def test_sgd_momentum():
+    opt = SGD(lr=0.1, momentum=0.9)
+    p = {"w": jnp.zeros((1,))}
+    s = opt.init(p)
+    g = {"w": jnp.ones((1,))}
+    p, s = opt.update(g, s, p)        # m=1, p=-0.1
+    p, s = opt.update(g, s, p)        # m=1.9, p=-0.29
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.29, rtol=1e-6)
+
+
+def test_adam_matches_reference_step():
+    opt = Adam(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8)
+    p = {"w": jnp.asarray([1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.5])}
+    p1, s = opt.update(g, s, p)
+    # first step: mhat=g, vhat=g^2 -> step = lr * g/(|g|+eps) = lr
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - 1e-2, rtol=1e-5)
+
+
+def test_adam_weight_decay_decoupled():
+    opt = Adam(lr=1e-2, weight_decay=0.1)
+    p = {"w": jnp.asarray([1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.0])}
+    p1, _ = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1.0 - 1e-2 * 0.1 * 1.0,
+                               rtol=1e-5)
+
+
+def test_registry():
+    assert isinstance(get_optimizer("sgd", lr=0.1), SGD)
+    assert isinstance(get_optimizer("adam", lr=0.1), Adam)
+
+
+def test_dtype_preserved():
+    opt = Adam(lr=1e-2)
+    p = {"w": jnp.ones((3,), jnp.bfloat16)}
+    s = opt.init(p)
+    g = {"w": jnp.ones((3,), jnp.float32)}
+    new, _ = opt.update(g, s, p)
+    assert new["w"].dtype == jnp.bfloat16

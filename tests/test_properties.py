@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregators import bucketize, coord_median, get_aggregator
+from repro.core.compressors import rand_k
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+arrays = st.integers(min_value=0, max_value=10_000)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=arrays, n=st.integers(3, 24), d=st.integers(1, 50))
+def test_median_permutation_invariant(seed, n, d):
+    """Byz-VR-MARINA is permutation-invariant (App. E.3 discussion)."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, d))
+    perm = jax.random.permutation(jax.random.fold_in(k, 1), n)
+    np.testing.assert_allclose(np.asarray(coord_median(x)),
+                               np.asarray(coord_median(x[perm])), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=arrays, n=st.integers(2, 20), s=st.integers(2, 4))
+def test_bucketize_row_count(seed, n, s):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, 5))
+    b = bucketize(k, x, s)
+    assert b.shape[0] == -(-n // s)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=arrays, ratio=st.sampled_from([0.1, 0.25, 0.5]),
+       d=st.integers(8, 200))
+def test_randk_support_and_scale(seed, ratio, d):
+    """Exactly K nonzeros; kept coordinates scaled by exactly d/K."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (d,)) + 0.1  # keep away from exact zeros
+    q = rand_k(ratio).compress(k, x)
+    kk = max(int(ratio * d), 1)
+    nz = np.flatnonzero(np.asarray(q))
+    assert len(nz) == kk
+    np.testing.assert_allclose(np.asarray(q)[nz],
+                               np.asarray(x)[nz] * (d / kk), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=arrays, rule=st.sampled_from(["cm", "tm", "mean"]),
+       shift=st.floats(-5, 5))
+def test_aggregator_translation_equivariance(seed, rule, shift):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 6))
+    agg = get_aggregator(rule)
+    a = agg(k, x + shift)
+    b = agg(k, x) + shift
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=arrays, scale=st.floats(0.1, 10.0))
+def test_aggregator_scale_equivariance(seed, scale):
+    """Positive scaling commutes with coordinate-wise robust rules."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (9, 4))
+    agg = get_aggregator("cm", bucket_size=3)
+    np.testing.assert_allclose(np.asarray(agg(k, x * scale)),
+                               np.asarray(agg(k, x)) * scale, rtol=1e-4,
+                               atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=arrays, n=st.integers(4, 16), d=st.integers(10, 300))
+def test_kernel_oracle_equivalence_property(seed, n, d):
+    """robust_agg kernel == oracle on arbitrary shapes (interpret mode)."""
+    from repro.kernels.robust_agg import robust_agg
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, d))
+    got = robust_agg(x, rule="median", tile_d=128, interpret=True)
+    want = ref.robust_agg_ref(x, rule="median")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=arrays)
+def test_median_breakdown_resilience(seed):
+    """With < n/2 arbitrary outliers, CM stays within the good range."""
+    k = jax.random.PRNGKey(seed)
+    good = jax.random.uniform(k, (7, 5), minval=-1, maxval=1)
+    bad = 1e6 * jnp.ones((3, 5))
+    z = coord_median(jnp.concatenate([good, bad]))
+    assert float(jnp.max(jnp.abs(z))) <= 1.0 + 1e-6

@@ -1,0 +1,155 @@
+"""Theory module: step sizes, floors, complexity bounds, importance
+sampling (Thm 2.1/2.2, Cor. E.1–E.7, Examples E.1/E.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        make_init, make_step, theory)
+from repro.core.baselines import make_br_mvr_step, make_byrd_saga_step
+from repro.data import (corrupt_labels_logreg, init_logreg_params,
+                        logreg_loss, make_logreg_data)
+
+KEY = jax.random.PRNGKey(0)
+DIM = 20
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_logreg_data(KEY, n_samples=300, dim=DIM, n_workers=5)
+    return data, logreg_loss(0.01), {"x": data.features, "y": data.labels}
+
+
+def test_marina_A_zero_without_byz_compression_stochasticity():
+    pc = theory.ProblemConstants(L=1.0, L_pm=0.0, calL_pm=0.0)
+    A = theory.marina_A(pc, p=0.5, b=1, G=4, delta=0.0, c=6.0, omega=0.0)
+    assert A == 0.0
+    # then gamma = 1/L (recovers GD step)
+    assert theory.step_size(pc, p=0.5, b=1, G=4, delta=0.0, c=6.0,
+                            omega=0.0) == pytest.approx(1.0)
+
+
+def test_A_monotonic_in_adversity():
+    pc = theory.ProblemConstants(L=2.0, L_pm=0.5, calL_pm=3.0)
+    kw = dict(p=0.1, b=32, G=4, omega=0.0, c=6.0)
+    a0 = theory.marina_A(pc, delta=0.0, **kw)
+    a1 = theory.marina_A(pc, delta=0.1, **kw)
+    a2 = theory.marina_A(pc, delta=0.2, **kw)
+    assert a0 < a1 < a2
+    # more compression (omega) also hurts
+    a_w = theory.marina_A(pc, p=0.1, b=32, G=4, delta=0.1, c=6.0, omega=9.0)
+    assert a_w > a1
+
+
+def test_recommended_p():
+    assert theory.recommended_p(b=32, m=320, omega=0.0) == pytest.approx(0.1)
+    # heavy compression dominates: p = 1/(1+omega)
+    assert theory.recommended_p(b=32, m=64, omega=9.0) == pytest.approx(0.1)
+
+
+def test_error_floor_zero_iff_homogeneous_or_clean():
+    assert theory.error_floor(delta=0.2, c=6.0, p=0.1, zeta_sq=0.0) == 0.0
+    assert theory.error_floor(delta=0.0, c=6.0, p=0.1, zeta_sq=1.0) == 0.0
+    assert theory.error_floor(delta=0.2, c=6.0, p=0.1, zeta_sq=1.0) > 0.0
+
+
+def test_logreg_constants_and_pl(problem):
+    data, loss_fn, full = problem
+    pc = theory.logreg_constants(data.features, 0.01, n_workers=5)
+    assert pc.mu == pytest.approx(0.02)
+    assert pc.L <= pc.calL_pm   # avg smoothness <= worst-sample smoothness
+
+
+def test_theory_step_size_trains(problem):
+    """γ = 1/(L+√2A) with certified (δ,c) must give monotone-ish descent."""
+    data, loss_fn, full = problem
+    pc = theory.logreg_constants(data.features, 0.01, n_workers=5)
+    p = theory.recommended_p(b=32, m=pc.m, omega=0.0)
+    gamma = theory.step_size(pc, p=p, b=32, G=4, delta=0.2, c=6.0,
+                             omega=0.0, pl=True)
+    assert 0 < gamma <= 1 / pc.L
+    cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, p=p, lr=gamma,
+                            aggregator=get_aggregator("cm", bucket_size=2),
+                            attack=get_attack("ALIE"))
+    step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+    anchor = data.stacked()
+    state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
+        init_logreg_params(DIM), anchor, KEY)
+    l0 = float(loss_fn(state["params"], full))
+    k = KEY
+    for it in range(200):
+        k, k1, k2 = jax.random.split(k, 3)
+        state, _ = step(state, data.sample_batches(k1, 32), anchor, k2)
+    assert float(loss_fn(state["params"], full)) < l0 - 0.05
+
+
+def test_importance_sampling_constants(problem):
+    """Example E.2: 𝓛±(IS) ≤ L̄ < max_j L_j = 𝓛±(US) bound."""
+    data, _, _ = problem
+    probs, lbar = theory.importance_weights(data.features, 0.01)
+    pc = theory.logreg_constants(data.features, 0.01, n_workers=5)
+    assert lbar < pc.calL_pm          # IS strictly better here
+    np.testing.assert_allclose(float(jnp.sum(probs)), 1.0, rtol=1e-5)
+
+
+def test_importance_sampling_unbiased(problem):
+    """Weighted IS minibatch gradient is unbiased for the full gradient."""
+    data, loss_fn, full = problem
+    probs, _ = theory.importance_weights(data.features, 0.01)
+    params = init_logreg_params(DIM)
+    params = jax.tree.map(lambda x: x + 0.3, params)
+    g_full = jax.grad(loss_fn)(params, full)
+    acc = jax.tree.map(jnp.zeros_like, g_full)
+    n_draws = 600
+    for i in range(n_draws):
+        mb = data.sample_batches_importance(jax.random.fold_in(KEY, i), 32,
+                                            probs)
+        g = jax.grad(loss_fn)(params, {"x": mb["x"][0], "y": mb["y"][0],
+                                       "w": mb["w"][0]})
+        acc = jax.tree.map(lambda a, b: a + b / n_draws, acc, g)
+    err = float(jnp.max(jnp.abs(acc["w"] - g_full["w"])))
+    assert err < 0.05, err
+
+
+def test_br_mvr_descends(problem):
+    data, loss_fn, full = problem
+    cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, lr=0.3,
+                            aggregator=get_aggregator("cm", bucket_size=2),
+                            attack=get_attack("ALIE"))
+    init, step = make_br_mvr_step(cfg, loss_fn, corrupt_labels_logreg)
+    anchor = data.stacked()
+    state = jax.jit(init)(init_logreg_params(DIM), anchor, KEY)
+    step = jax.jit(step)
+    l0 = float(loss_fn(state["params"], full))
+    k = KEY
+    for it in range(150):
+        k, k1, k2 = jax.random.split(k, 3)
+        state, m = step(state, data.sample_batches(k1, 32), anchor, k2)
+        assert jnp.isfinite(m["loss"])
+    assert float(loss_fn(state["params"], full)) < l0 - 0.1
+
+
+def test_byrd_saga_descends(problem):
+    data, loss_fn, full = problem
+    m = data.features.shape[0]
+
+    def grad_sample(params, xj, yj):
+        return jax.grad(
+            lambda p: loss_fn(p, {"x": xj[None], "y": yj[None]}))(params)
+
+    cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, lr=0.3,
+                            aggregator=get_aggregator("rfa", bucket_size=2),
+                            attack=get_attack("ALIE"))
+    init, step = make_byrd_saga_step(cfg, grad_sample, m,
+                                     init_logreg_params(DIM))
+    anchor = data.stacked()
+    state = init(init_logreg_params(DIM), anchor)
+    step = jax.jit(step)
+    l0 = float(loss_fn(state["params"], full))
+    k = KEY
+    for it in range(200):
+        k, k1, k2 = jax.random.split(k, 3)
+        idx = jax.random.randint(k1, (5, 16), 0, m)
+        state, _ = step(state, anchor, idx, k2)
+    assert float(loss_fn(state["params"], full)) < l0 - 0.1
