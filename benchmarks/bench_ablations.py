@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, make_logreg_problem
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step, theory)
+                        get_compressor, make_method, theory)
 from repro.data import corrupt_labels_logreg, init_logreg_params
 
 KEY = jax.random.PRNGKey(5)
@@ -21,10 +21,10 @@ DIM = 30
 
 
 def _final_gap(data, loss_fn, full, f_star, cfg, iters=400, sampler=None):
-    step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+    method = make_method("marina", cfg, loss_fn, corrupt_labels_logreg)
+    step = jax.jit(method.step)
     anchor = data.stacked()
-    state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-        init_logreg_params(DIM), anchor, KEY)
+    state = method.init(init_logreg_params(DIM), anchor, KEY)
     k = KEY
     for it in range(iters):
         k, k1, k2 = jax.random.split(k, 3)

@@ -1,16 +1,15 @@
 """Paper Table 2 (empirical analogue): communication rounds to reach a target
 optimality gap, Byz-VR-MARINA vs BR-SGDm / BR-CSGD / BR-DIANA / Byrd-SVRG,
 under the ALIE attack. Also reports uploaded bits per worker to reach the
-target (the compression win)."""
-import time
+target (the compression win).
 
+Every contender is one ``make_method`` call — the registry is the row key,
+and per-round communication comes from the estimator's own accounting."""
 import jax
 
 from benchmarks.common import emit, make_logreg_problem
-from repro.core import (ByzVRMarinaConfig, expected_comm_bits, get_aggregator,
-                        get_attack, get_compressor, make_init, make_step)
-from repro.core.baselines import (make_byrd_svrg_step, make_csgd_step,
-                                  make_diana_step, make_sgd_step)
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_method)
 from repro.data import corrupt_labels_logreg, init_logreg_params
 
 KEY = jax.random.PRNGKey(1)
@@ -19,8 +18,7 @@ TARGET = 1e-3
 MAX_ROUNDS = 1200
 
 
-def _rounds_to_target(data, loss_fn, full, f_star, state, step, d,
-                      bits_per_round):
+def _rounds_to_target(data, loss_fn, full, f_star, state, step):
     k = KEY
     check = jax.jit(lambda p: loss_fn(p, full))
     anchor = data.stacked()
@@ -41,67 +39,28 @@ def run():
     atk = get_attack("ALIE")
     randk = get_compressor("randk", ratio=0.1)
 
-    def report(name, rounds, bits_per_round):
+    base = dict(n_workers=5, n_byz=1, p=0.1, lr=0.5, aggregator=agg,
+                attack=atk)
+    rows = [
+        ("byz-vr-marina", "marina", {}),
+        ("byz-vr-marina+randk", "marina", {"compressor": randk}),
+        ("br-sgdm", "sgdm", {}),
+        ("br-csgd+randk", "csgd", {"compressor": randk}),
+        ("br-diana+randk", "diana", {"compressor": randk}),
+        ("byrd-svrg", "svrg",
+         {"aggregator": get_aggregator("rfa", bucket_size=2)}),
+    ]
+    for label, method_name, cfg_kw in rows:
+        cfg = ByzVRMarinaConfig(**{**base, **cfg_kw})
+        method = make_method(method_name, cfg, loss_fn,
+                             corrupt_labels_logreg)
+        state = method.init(init_logreg_params(DIM), anchor, KEY)
+        rounds = _rounds_to_target(data, loss_fn, full, f_star, state,
+                                   jax.jit(method.step))
+        bits_per_round = method.expected_bits(d)
         bits = rounds * bits_per_round if rounds > 0 else float("inf")
-        emit(f"table2/{name}", float(rounds),
+        emit(f"table2/{label}", float(rounds),
              f"rounds_to_{TARGET:g}={rounds};bits/worker={bits:.3g}")
-
-    # Byz-VR-MARINA (no compression)
-    cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, p=0.1, lr=0.5,
-                            aggregator=agg, attack=atk)
-    st = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-        init_logreg_params(DIM), anchor, KEY)
-    r = _rounds_to_target(data, loss_fn, full, f_star, st,
-                          jax.jit(make_step(cfg, loss_fn,
-                                            corrupt_labels_logreg)), d, 0)
-    report("byz-vr-marina", r, 32 * d)
-
-    # Byz-VR-MARINA + RandK
-    cfgc = ByzVRMarinaConfig(n_workers=5, n_byz=1, p=0.1, lr=0.5,
-                             aggregator=agg, compressor=randk, attack=atk)
-    st = make_init(cfgc, loss_fn, corrupt_labels_logreg)(
-        init_logreg_params(DIM), anchor, KEY)
-    r = _rounds_to_target(data, loss_fn, full, f_star, st,
-                          jax.jit(make_step(cfgc, loss_fn,
-                                            corrupt_labels_logreg)), d, 0)
-    report("byz-vr-marina+randk", r, expected_comm_bits(cfgc, d))
-
-    # BR-SGDm
-    cfg2 = ByzVRMarinaConfig(n_workers=5, n_byz=1, lr=0.5, aggregator=agg,
-                             attack=atk)
-    init_s, step_s = make_sgd_step(cfg2, loss_fn, corrupt_labels_logreg,
-                                   momentum=0.9)
-    r = _rounds_to_target(data, loss_fn, full, f_star,
-                          init_s(init_logreg_params(DIM)), jax.jit(step_s),
-                          d, 0)
-    report("br-sgdm", r, 32 * d)
-
-    # BR-CSGD
-    cfg3 = ByzVRMarinaConfig(n_workers=5, n_byz=1, lr=0.5, aggregator=agg,
-                             compressor=randk, attack=atk)
-    init_c, step_c = make_csgd_step(cfg3, loss_fn, corrupt_labels_logreg)
-    r = _rounds_to_target(data, loss_fn, full, f_star,
-                          init_c(init_logreg_params(DIM)), jax.jit(step_c),
-                          d, 0)
-    report("br-csgd+randk", r, randk.bits_per_vector(d))
-
-    # BR-DIANA
-    init_d, step_d = make_diana_step(cfg3, loss_fn, corrupt_labels_logreg)
-    r = _rounds_to_target(data, loss_fn, full, f_star,
-                          init_d(init_logreg_params(DIM), d_hint=d),
-                          jax.jit(step_d), d, 0)
-    report("br-diana+randk", r, randk.bits_per_vector(d))
-
-    # Byrd-SVRG
-    cfg4 = ByzVRMarinaConfig(n_workers=5, n_byz=1, p=0.1, lr=0.5,
-                             aggregator=get_aggregator("rfa", bucket_size=2),
-                             attack=atk)
-    init_v, step_v = make_byrd_svrg_step(cfg4, loss_fn, corrupt_labels_logreg)
-    r = _rounds_to_target(data, loss_fn, full, f_star,
-                          jax.jit(init_v)(init_logreg_params(DIM), anchor,
-                                          KEY),
-                          jax.jit(step_v), d, 0)
-    report("byrd-svrg", r, 32 * d)
 
 
 if __name__ == "__main__":

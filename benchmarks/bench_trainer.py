@@ -1,6 +1,8 @@
-"""System throughput: wall-clock steps/s of the full Byz-VR-MARINA trainer
-on this host (single device; the distributed step is the same code jitted
-onto the mesh). One row per (model, aggregator, compressor) with tokens/s.
+"""System throughput: wall-clock steps/s of the full Byzantine-robust
+trainer on this host (single device; the distributed step is the same code
+jitted onto the mesh). One row per (model, method, aggregator, compressor)
+with tokens/s — every method runs through the unified round engine
+(core/engine.py), so the estimator is the only thing that varies.
 """
 import time
 
@@ -9,7 +11,7 @@ import jax
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
+                        get_compressor, make_method)
 from repro.data import TokenStream, corrupt_labels_lm
 from repro.models import init_params, loss_fn
 
@@ -29,10 +31,13 @@ def run():
         def loss(params, batch, key):
             return loss_fn(params, cfg, batch)
 
-        for agg_name, comp_name in [("mean", "identity"),
-                                    ("cm", "identity"),
-                                    ("cm", "randk"),
-                                    ("rfa", "identity")]:
+        for method_name, agg_name, comp_name in [
+                ("marina", "mean", "identity"),
+                ("marina", "cm", "identity"),
+                ("marina", "cm", "randk"),
+                ("marina", "rfa", "identity"),
+                ("sgdm", "cm", "identity"),
+                ("csgd", "cm", "randk")]:
             comp = (get_compressor("randk", ratio=0.25)
                     if comp_name == "randk" else get_compressor("identity"))
             bcfg = ByzVRMarinaConfig(
@@ -41,9 +46,9 @@ def run():
                                           bucket_size=0 if agg_name == "mean"
                                           else 2),
                 compressor=comp, attack=get_attack("ALIE"))
-            step = jax.jit(make_step(bcfg, loss, corrupt_labels_lm))
-            state = make_init(bcfg, loss, corrupt_labels_lm)(
-                init_params(KEY, cfg), stream.anchor(0), KEY)
+            method = make_method(method_name, bcfg, loss, corrupt_labels_lm)
+            step = jax.jit(method.step)
+            state = method.init(init_params(KEY, cfg), stream.anchor(0), KEY)
             # warmup (compile)
             state, _ = step(state, stream.minibatch(0), stream.anchor(0),
                             KEY)
@@ -57,8 +62,8 @@ def run():
             jax.block_until_ready(state["g"])
             dt = (time.perf_counter() - t0) / iters
             toks = n * bw * s
-            emit(f"trainer/{arch}/{agg_name}+{comp_name}", dt * 1e6,
-                 f"tokens_per_s={toks/dt:.0f}")
+            emit(f"trainer/{arch}/{method_name}/{agg_name}+{comp_name}",
+                 dt * 1e6, f"tokens_per_s={toks/dt:.0f}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 Four good workers + one Byzantine running the ALIE attack on ℓ2-regularized
 logistic regression. Byz-VR-MARINA with CM∘bucketing converges linearly to
-the optimum; try --agg mean to watch plain averaging get poisoned.
+the optimum; try --agg mean to watch plain averaging get poisoned, or
+--method sgdm/csgd/diana/mvr/svrg to race any baseline estimator through
+the same round engine.
 
   PYTHONPATH=src python examples/quickstart.py [--attack ALIE] [--agg cm]
 """
@@ -14,11 +16,12 @@ sys.path.insert(0, "src")
 import jax
 
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
+                        get_compressor, list_methods, make_method)
 from repro.data import (corrupt_labels_logreg, init_logreg_params,
                         logreg_loss, make_logreg_data)
 
 ap = argparse.ArgumentParser()
+ap.add_argument("--method", default="marina", choices=list_methods())
 ap.add_argument("--attack", default="ALIE",
                 choices=["NA", "LF", "BF", "ALIE", "IPM"])
 ap.add_argument("--agg", default="cm", choices=["mean", "cm", "rfa", "krum"])
@@ -48,12 +51,13 @@ cfg = ByzVRMarinaConfig(
                 if args.randk < 1 else get_compressor("identity")),
     attack=get_attack(args.attack))
 
-step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
+method = make_method(args.method, cfg, loss_fn, corrupt_labels_logreg)
+step = jax.jit(method.step)
 anchor = data.stacked()
-state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-    init_logreg_params(30), anchor, key)
+state = method.init(init_logreg_params(30), anchor, key)
 
-print(f"attack={args.attack} aggregator={cfg.aggregator.name} "
+print(f"method={args.method} attack={args.attack} "
+      f"aggregator={cfg.aggregator.name} "
       f"compressor={cfg.compressor.name}  f*={f_star:.6f}")
 k = jax.random.PRNGKey(42)
 for it in range(args.iters):

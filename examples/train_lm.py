@@ -17,7 +17,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
+                        get_compressor, list_methods, make_method)
 from repro.data import TokenStream, corrupt_labels_lm
 from repro.models import init_params, loss_fn as model_loss
 
@@ -27,6 +27,7 @@ ap.add_argument("--small", action="store_true",
                 help="reduced config (CI-speed)")
 ap.add_argument("--seq-len", type=int, default=128)
 ap.add_argument("--attack", default="IPM")
+ap.add_argument("--method", default="marina", choices=list_methods())
 args = ap.parse_args()
 
 cfg = get_config("mamba2-130m")
@@ -50,12 +51,13 @@ def loss(params, batch, key):
 key = jax.random.PRNGKey(0)
 params = init_params(key, cfg)
 n_params = sum(x.size for x in jax.tree.leaves(params))
-print(f"mamba2 {n_params/1e6:.1f}M params | {n_workers} workers "
-      f"({n_byz} byzantine, {args.attack}) | CM∘bucketing + RandK(0.25)")
+print(f"mamba2 {n_params/1e6:.1f}M params | method={args.method} | "
+      f"{n_workers} workers ({n_byz} byzantine, {args.attack}) | "
+      f"CM∘bucketing + RandK(0.25)")
 
-state = make_init(bcfg, loss, corrupt_labels_lm)(params, stream.anchor(0),
-                                                 key)
-step = jax.jit(make_step(bcfg, loss, corrupt_labels_lm))
+method = make_method(args.method, bcfg, loss, corrupt_labels_lm)
+state = method.init(params, stream.anchor(0), key)
+step = jax.jit(method.step)
 t0 = time.time()
 for it in range(args.steps):
     state, m = step(state, stream.minibatch(it), stream.anchor(it),

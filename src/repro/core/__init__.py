@@ -1,14 +1,22 @@
 """Byz-VR-MARINA core: the paper's contribution.
 
+- engine: the shared Byzantine-robust round skeleton + method registry
+- estimators: pluggable gradient estimators (marina, sgd, sgdm, csgd,
+  diana, mvr, svrg)
 - compressors: unbiased Q (Def 2.2)
 - aggregators: (δ,c)-ARAgg via bucketing + CM/RFA/Krum (Def 2.1, Alg. 2)
 - attacks: NA / LF / BF / ALIE / IPM omniscient adversaries
-- byz_vr_marina: Algorithm 1 trainer (laptop vmap & pod pjit, same code)
-- baselines: SGD, BR-SGDm, CSGD, BR-DIANA, Byrd-SVRG
+- byz_vr_marina: Algorithm 1 facade (laptop vmap & pod pjit, same code)
+- baselines: legacy (init, step) wrappers for SGD, BR-SGDm, CSGD, BR-DIANA,
+  BR-MVR, Byrd-SVRG/-SAGA
 """
 from repro.core.aggregators import Aggregator, get_aggregator  # noqa: F401
 from repro.core.attacks import Attack, get_attack              # noqa: F401
 from repro.core.compressors import Compressor, get_compressor  # noqa: F401
+from repro.core.engine import (                                # noqa: F401
+    AGG_BACKENDS, GradientEstimator, Method, aggregate, apply_attack,
+    list_methods, make_method,
+)
 from repro.core.byz_vr_marina import (                         # noqa: F401
     ByzVRMarinaConfig, make_step, make_init, train_state,
     comm_bits, expected_comm_bits,

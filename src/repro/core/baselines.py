@@ -4,24 +4,31 @@
 * BR-SGDm      — robust aggregation of worker momenta (Karimireddy 2021/22).
 * CSGD         — compressed SGD; with a robust aggregator = BR-CSGD.
 * BR-DIANA     — DIANA (Mishchenko et al. 2019) shifts + robust aggregation.
+* BR-MVR       — STORM momentum variance reduction + robust aggregation.
 * Byrd-SVRG    — SVRG estimator + geometric median (App. B.4 proxy of
                  Byrd-SAGA; the paper itself uses SVRG since SAGA's per-sample
                  table is memory-hostile).
 
-All share Byz-VR-MARINA's skeleton: stacked worker axis, omniscient attacks,
-(δ,c)-robust aggregation, so every experiment toggles only the estimator.
+All share Byz-VR-MARINA's round skeleton — that is the point of the paper's
+comparison, and of the unified round engine (core/engine.py): every factory
+below is a thin wrapper that plugs the matching ``GradientEstimator``
+(core/estimators.py) into the shared engine, preserving the pre-refactor
+``(init, step)`` signatures. New code should use ``engine.make_method``
+directly; these wrappers exist so the paper-era call sites keep working.
+
+Byrd-SAGA keeps its bespoke per-sample-gradient-table interface (it does not
+fit the stacked-minibatch protocol) but runs on the same attack/aggregation
+primitives.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.byz_vr_marina import ByzVRMarinaConfig, apply_attack, \
-    _stacked_grads, _aggregate
+from repro.core.byz_vr_marina import ByzVRMarinaConfig   # noqa: F401
+from repro.core.engine import aggregate, apply_attack, make_method
 from repro.core import tree_utils as tu
 
 
@@ -29,12 +36,6 @@ def _sgd_update(params, g, lr):
     return jax.tree.map(
         lambda x, gg: (x.astype(jnp.float32) - lr * gg.astype(jnp.float32)
                        ).astype(x.dtype), params, g)
-
-
-def _maybe_corrupt(cfg, corrupt_fn, batch):
-    if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
-        return corrupt_fn(batch, cfg.byz_mask())
-    return batch
 
 
 # ---------------------------------------------------------------------------
@@ -45,37 +46,13 @@ def make_sgd_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
                   momentum: float = 0.0):
     """momentum=0 -> Parallel-SGD; momentum>0 -> BR-SGDm (worker momenta are
     what gets attacked & aggregated, per Karimireddy et al. 2021)."""
-    n = cfg.n_workers
-
-    def step(state, batch, anchor, key):
-        k_grad, k_attack, k_agg = jax.random.split(key, 3)
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        wkeys = tu.per_worker_keys(k_grad, n)
-        loss, grads = _stacked_grads(loss_fn, state["params"], batch, wkeys)
-        if momentum > 0.0:
-            m_new = jax.tree.map(
-                lambda m, g: ((1 - momentum) * g.astype(jnp.float32)
-                              + momentum * m.astype(jnp.float32)),
-                state["worker_m"], grads)
-            cand = m_new
-        else:
-            m_new = state["worker_m"]
-            cand = grads
-        sent = apply_attack(cfg, k_attack, cand)
-        g = _aggregate(cfg, k_agg, sent)
-        params = _sgd_update(state["params"], g, cfg.lr)
-        new_state = {"params": params, "worker_m": m_new,
-                     "step": state["step"] + 1}
-        return new_state, {"loss": loss, "g_norm": jnp.sqrt(tu.tree_norm_sq(g))}
+    m = make_method("sgdm" if momentum > 0.0 else "sgd", cfg, loss_fn,
+                    corrupt_fn, momentum=momentum)
 
     def init(params):
-        return {"params": params,
-                "worker_m": tu.tree_broadcast_leading(
-                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                                 params), n),
-                "step": jnp.zeros((), jnp.int32)}
+        return m.init(params, None, None)
 
-    return init, step
+    return init, m.step
 
 
 # ---------------------------------------------------------------------------
@@ -83,31 +60,12 @@ def make_sgd_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
 # ---------------------------------------------------------------------------
 
 def make_csgd_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
-    n = cfg.n_workers
-
-    def step(state, batch, anchor, key):
-        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        wkeys = tu.per_worker_keys(k_grad, n)
-        qkeys = tu.per_worker_keys(k_q, n,
-                                   common=cfg.compressor.common_randomness)
-
-        def one(b, kg, kq):
-            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
-            return ln, tu.compress_tree(cfg.compressor, kq, g)
-
-        losses, cand = jax.vmap(one)(batch, wkeys, qkeys)
-        sent = apply_attack(cfg, k_attack, cand)
-        g = _aggregate(cfg, k_agg, sent)
-        params = _sgd_update(state["params"], g, cfg.lr)
-        return ({"params": params, "step": state["step"] + 1},
-                {"loss": jnp.mean(losses),
-                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+    m = make_method("csgd", cfg, loss_fn, corrupt_fn)
 
     def init(params):
-        return {"params": params, "step": jnp.zeros((), jnp.int32)}
+        return m.init(params, None, None)
 
-    return init, step
+    return init, m.step
 
 
 # ---------------------------------------------------------------------------
@@ -119,50 +77,18 @@ def make_diana_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
     """DIANA: worker i keeps a shift h_i, uploads Q(g_i - h_i); the server
     adds the aggregated compressed difference to the shift mean. alpha
     defaults to 1/(1+omega) (Mishchenko et al. 2019)."""
-    n = cfg.n_workers
-
-    def step(state, batch, anchor, key):
-        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        wkeys = tu.per_worker_keys(k_grad, n)
-        qkeys = tu.per_worker_keys(k_q, n,
-                                   common=cfg.compressor.common_randomness)
-        h = state["worker_h"]                                  # stacked (n,...)
-        a = state["alpha"]
-
-        def one(b, kg, kq, h_i):
-            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
-            diff = tu.tree_sub(g, h_i)
-            return ln, tu.compress_tree(cfg.compressor, kq, diff)
-
-        losses, qdiff = jax.vmap(one)(batch, wkeys, qkeys, h)
-        sent = apply_attack(cfg, k_attack, qdiff)
-        agg_diff = _aggregate(cfg, k_agg, sent)
-        h_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), h)
-        g = tu.tree_add(h_mean, agg_diff)
-        h_new = jax.tree.map(lambda hh, q: hh + a * q, h, qdiff)
-        params = _sgd_update(state["params"], g, cfg.lr)
-        return ({"params": params, "worker_h": h_new, "alpha": a,
-                 "step": state["step"] + 1},
-                {"loss": jnp.mean(losses),
-                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+    m = make_method("diana", cfg, loss_fn, corrupt_fn, alpha=alpha)
 
     def init(params, d_hint: int = 1):
         # d_hint is static (python int): used only to size alpha
-        omega = cfg.compressor.omega(int(d_hint))
-        a = alpha if alpha is not None else 1.0 / (1.0 + omega)
-        return {"params": params,
-                "worker_h": tu.tree_broadcast_leading(
-                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                                 params), n),
-                "alpha": jnp.asarray(a, jnp.float32),
-                "step": jnp.zeros((), jnp.int32)}
+        m.estimator.d_hint = int(d_hint)
+        return m.init(params, None, None)
 
-    return init, step
+    return init, m.step
 
 
 # ---------------------------------------------------------------------------
-# Byrd-SVRG (App. B.4)
+# BR-MVR
 # ---------------------------------------------------------------------------
 
 def make_br_mvr_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
@@ -172,42 +98,30 @@ def make_br_mvr_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None,
 
         v_i^k = g_i(x^k) + (1-α)(v_i^{k-1} - g_i(x^{k-1}))
     """
-    n = cfg.n_workers
-
-    def step(state, batch, anchor, key):
-        k_grad, k_attack, k_agg = jax.random.split(key, 3)
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        wkeys = tu.per_worker_keys(k_grad, n)
-        params, prev = state["params"], state["prev_params"]
-
-        def one(b, kg, v_i):
-            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
-            _, gp = jax.value_and_grad(loss_fn)(prev, b, kg)
-            v_new = jax.tree.map(
-                lambda g, vv, go: g.astype(jnp.float32)
-                + (1 - alpha) * (vv - go.astype(jnp.float32)),
-                gx, v_i, gp)
-            return ln, v_new
-
-        losses, v = jax.vmap(one)(batch, wkeys, state["worker_v"])
-        sent = apply_attack(cfg, k_attack, v)
-        g = _aggregate(cfg, k_agg, sent)
-        new_params = _sgd_update(params, g, cfg.lr)
-        return ({"params": new_params, "prev_params": params,
-                 "worker_v": v, "step": state["step"] + 1},
-                {"loss": jnp.mean(losses),
-                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+    m = make_method("mvr", cfg, loss_fn, corrupt_fn, alpha=alpha)
 
     def init(params, batch, key):
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        wkeys = tu.per_worker_keys(key, n)
-        _, grads = _stacked_grads(loss_fn, params, batch, wkeys)
-        v0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-        return {"params": params, "prev_params": params, "worker_v": v0,
-                "step": jnp.zeros((), jnp.int32)}
+        return m.init(params, batch, key)
 
-    return init, step
+    return init, m.step
 
+
+# ---------------------------------------------------------------------------
+# Byrd-SVRG (App. B.4)
+# ---------------------------------------------------------------------------
+
+def make_byrd_svrg_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
+    """Loopless SVRG: with prob p refresh the snapshot w <- x and the full
+    worker gradients; each round worker i sends
+    v_i = g_i(x, mb) - g_i(w, mb) + full_i, aggregated with RFA (geometric
+    median) per Wu et al. (2020)."""
+    m = make_method("svrg", cfg, loss_fn, corrupt_fn)
+    return m.init, m.step
+
+
+# ---------------------------------------------------------------------------
+# Byrd-SAGA (bespoke interface: per-sample gradient tables)
+# ---------------------------------------------------------------------------
 
 def make_byrd_saga_step(cfg: ByzVRMarinaConfig, grad_sample_fn, n_samples,
                         params_template, corrupt_labels=None):
@@ -253,7 +167,7 @@ def make_byrd_saga_step(cfg: ByzVRMarinaConfig, grad_sample_fn, n_samples,
             lambda t, tm, x, y, i: one_worker(params, t, tm, x, y, i)
         )(state["tables"], state["table_means"], xw, yw, idx)
         sent = apply_attack(cfg, k_attack, v)
-        g = _aggregate(cfg, k_agg, sent)
+        g = aggregate(cfg, k_agg, sent)
         new_params = _sgd_update(params, g, cfg.lr)
         return ({"params": new_params, "tables": tables,
                  "table_means": means, "step": state["step"] + 1},
@@ -267,55 +181,6 @@ def make_byrd_saga_step(cfg: ByzVRMarinaConfig, grad_sample_fn, n_samples,
         means = jax.tree.map(
             lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
         return {"params": params, "tables": tables, "table_means": means,
-                "step": jnp.zeros((), jnp.int32)}
-
-    return init, step
-
-
-def make_byrd_svrg_step(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
-    """Loopless SVRG: with prob p refresh the snapshot w <- x and the full
-    worker gradients; each round worker i sends
-    v_i = g_i(x, mb) - g_i(w, mb) + full_i, aggregated with RFA (geometric
-    median) per Wu et al. (2020)."""
-    n = cfg.n_workers
-
-    def step(state, batch, anchor, key):
-        k_bern, k_grad, k_attack, k_agg = jax.random.split(key, 4)
-        c_k = jax.random.bernoulli(k_bern, cfg.p)
-        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
-        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
-        wkeys = tu.per_worker_keys(k_grad, n)
-        params = state["params"]
-
-        def refresh(_):
-            _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
-            return params, fulls
-
-        def keep(_):
-            return state["snapshot"], state["worker_full"]
-
-        w, fulls = lax.cond(c_k, refresh, keep, operand=None)
-
-        def one(b, kg, full_i):
-            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
-            _, gw = jax.value_and_grad(loss_fn)(w, b, kg)
-            v = tu.tree_add(tu.tree_sub(gx, gw), full_i)
-            return ln, v
-
-        losses, cand = jax.vmap(one)(batch, wkeys, fulls)
-        sent = apply_attack(cfg, k_attack, cand)
-        g = _aggregate(cfg, k_agg, sent)
-        new_params = _sgd_update(params, g, cfg.lr)
-        return ({"params": new_params, "snapshot": w, "worker_full": fulls,
-                 "step": state["step"] + 1},
-                {"loss": jnp.mean(losses),
-                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
-
-    def init(params, anchor, key):
-        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
-        wkeys = tu.per_worker_keys(key, n)
-        _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
-        return {"params": params, "snapshot": params, "worker_full": fulls,
                 "step": jnp.zeros((), jnp.int32)}
 
     return init, step

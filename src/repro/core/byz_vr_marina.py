@@ -9,7 +9,7 @@ One implementation serves both scales:
   worker axis of every stacked input sharded over ``("pod", "data")`` and
   params/grads sharded over ``"model"`` (launch/train.py, launch/dryrun.py).
 
-Per iteration (paper lines 4–10):
+Per iteration (paper lines 4-10):
 
     c_k ~ Be(p)                                    (shared coin, broadcast)
     x^{k+1} = x^k - γ g^k                          (or any optim.Optimizer)
@@ -18,33 +18,27 @@ Per iteration (paper lines 4–10):
     byz  i: g_i = attack(...)                      (omniscient; masked psums)
     g^{k+1} = ARAgg(g_1, ..., g_n)                 (bucketing + CM/RFA/Krum)
 
-Aggregation modes (``agg_mode``):
-  * "gspmd"       — paper-faithful: aggregation written as jnp ops over the
-                    stacked worker axis; GSPMD inserts the all-gather.
-  * "all_to_all"  — beyond-paper (§Perf): coordinate-wise rules are sharded
-                    over the worker axis via shard_map all_to_all, cutting
-                    the collective bytes from n·d to ~2·d and the peak
-                    aggregation memory from n·d_local to d_local.
-  * "sparse_support" — beyond-paper (§Perf): with common-randomness RandK
-                    only the K-coordinate support is aggregated; off-support
-                    coordinates keep g^k (exact for coordinate-wise rules,
-                    and enforceable server-side per the paper's remark that
-                    dense senders are trivially banned).
+Since the unified-round-engine refactor (DESIGN.md §2) this module is a thin
+facade: the round skeleton lives in ``core/engine.py``, the MARINA estimator
+(dense + sparse-support) in ``core/estimators.py``, and this file keeps the
+config, the legacy ``make_step`` / ``make_init`` entry points, and the
+communication accounting. ``cfg.agg_mode`` selects the aggregation backend
+(``engine.AGG_BACKENDS``): gspmd | all_to_all | sparse_support | pallas —
+see core/sharded_agg.py and kernels/robust_agg.py for the beyond-paper
+backends.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.aggregators import Aggregator, coord_median, coord_trimmed_mean
+from repro.core.aggregators import Aggregator
 from repro.core.attacks import Attack, no_attack
 from repro.core.compressors import Compressor, identity
-from repro.core import tree_utils as tu
+from repro.core.engine import (apply_attack, make_method,      # noqa: F401
+                               stacked_grads, aggregate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,7 +50,7 @@ class ByzVRMarinaConfig:
     aggregator: Aggregator = Aggregator("mean")
     compressor: Compressor = dataclasses.field(default_factory=identity)
     attack: Attack = dataclasses.field(default_factory=no_attack)
-    agg_mode: str = "gspmd"              # gspmd | all_to_all | sparse_support
+    agg_mode: str = "gspmd"   # gspmd | all_to_all | sparse_support | pallas
     optimizer: Optional[object] = None   # optim.Optimizer or None = plain SGD
     # distributed extras
     worker_axes: tuple = ()              # mesh axes carrying the worker dim
@@ -74,40 +68,7 @@ def train_state(params, g0, opt_state=None, step=0):
 
 
 # ---------------------------------------------------------------------------
-# attack application on stacked candidates
-# ---------------------------------------------------------------------------
-
-def apply_attack(cfg: ByzVRMarinaConfig, key, cand):
-    """cand: stacked pytree (n, ...). Returns the vectors actually 'sent'."""
-    if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
-        return cand
-    mask = cfg.byz_mask()
-    good = ~mask
-    means, stds = tu.masked_mean_std(cand, good)
-
-    def leaf(h, m, s):
-        v = cfg.attack.apply(key, h, m, s).astype(h.dtype)
-        bm = mask.reshape((-1,) + (1,) * (h.ndim - 1))
-        return jnp.where(bm, v, h)
-
-    return jax.tree.map(leaf, cand, means, stds)
-
-
-# ---------------------------------------------------------------------------
-# worker gradient computation
-# ---------------------------------------------------------------------------
-
-def _stacked_grads(loss_fn, params, batches, keys):
-    """vmap(value_and_grad) over the leading worker axis of ``batches``."""
-    def one(batch, key):
-        return jax.value_and_grad(loss_fn)(params, batch, key)
-
-    losses, grads = jax.vmap(one)(batches, keys)
-    return jnp.mean(losses), grads
-
-
-# ---------------------------------------------------------------------------
-# step factory
+# legacy entry points — thin wrappers over the shared round engine
 # ---------------------------------------------------------------------------
 
 def make_step(cfg: ByzVRMarinaConfig, loss_fn: Callable,
@@ -118,213 +79,13 @@ def make_step(cfg: ByzVRMarinaConfig, loss_fn: Callable,
     with a leading worker axis (n, ...). ``corrupt_fn(batch, byz_mask)``
     implements data-level attacks (label flipping).
     """
-    if cfg.agg_mode == "sparse_support":
-        return _make_step_sparse(cfg, loss_fn, corrupt_fn)
-    n = cfg.n_workers
-    opt = cfg.optimizer
+    return make_method("marina", cfg, loss_fn, corrupt_fn).step
 
-    def maybe_corrupt(batch):
-        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
-            return corrupt_fn(batch, cfg.byz_mask())
-        return batch
-
-    def step(state, batch, anchor, key):
-        k_bern, k_grad, k_q, k_attack, k_agg = jax.random.split(key, 5)
-        c_k = jax.random.bernoulli(k_bern, cfg.p)
-        old_params = state["params"]
-
-        # ---- line 7: x^{k+1} = x^k - γ g^k
-        if opt is None:
-            new_params = jax.tree.map(
-                lambda x, gg: (x.astype(jnp.float32)
-                               - cfg.lr * gg.astype(jnp.float32)
-                               ).astype(x.dtype),
-                old_params, state["g"])
-            new_opt = state["opt_state"]
-        else:
-            new_params, new_opt = opt.update(state["g"], state["opt_state"],
-                                             old_params)
-
-        batch = maybe_corrupt(batch)
-        anchor = maybe_corrupt(anchor)
-        wkeys = tu.per_worker_keys(k_grad, n)
-
-        # ---- line 8: candidates
-        def full_branch(_):
-            loss, grads = _stacked_grads(loss_fn, new_params, anchor, wkeys)
-            return loss, grads
-
-        def vr_branch(_):
-            qkeys = tu.per_worker_keys(
-                k_q, n, common=cfg.compressor.common_randomness)
-
-            def one(b, kg, kq):
-                ln, gn = jax.value_and_grad(loss_fn)(new_params, b, kg)
-                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
-                delta = tu.tree_sub(gn, go)
-                q = tu.compress_tree(cfg.compressor, kq, delta)
-                return ln, q
-
-            losses, qs = jax.vmap(one)(batch, wkeys, qkeys)
-            cand = jax.tree.map(lambda g0, q: g0[None] + q, state["g"], qs)
-            return jnp.mean(losses), cand
-
-        loss, cand = lax.cond(c_k, full_branch, vr_branch, operand=None)
-
-        # ---- byzantine workers replace their message
-        sent = apply_attack(cfg, k_attack, cand)
-
-        # ---- line 10: robust aggregation
-        g_new = _aggregate(cfg, k_agg, sent)
-
-        metrics = {
-            "loss": loss,
-            "c_k": c_k.astype(jnp.int32),
-            "g_norm": jnp.sqrt(tu.tree_norm_sq(g_new)),
-        }
-        new_state = {"params": new_params, "g": g_new, "opt_state": new_opt,
-                     "step": state["step"] + 1}
-        return new_state, metrics
-
-    return step
-
-
-def _aggregate(cfg: ByzVRMarinaConfig, key, sent):
-    if cfg.agg_mode in ("gspmd", "sparse_support"):
-        # sparse_support only changes the VR branch (see _make_step_sparse);
-        # dense aggregations (init, full-grad branch) stay gspmd.
-        return cfg.aggregator.tree(key, sent)
-    if cfg.agg_mode == "all_to_all":
-        from repro.core.sharded_agg import tree_aggregate_all_to_all
-        return tree_aggregate_all_to_all(cfg, key, sent)
-    raise ValueError(cfg.agg_mode)
-
-
-# ---------------------------------------------------------------------------
-# sparse-support variant (§Perf): common-randomness RandK means every worker
-# sends the SAME K coordinates, so only the (K)-sized support is attacked,
-# gathered, and aggregated; off-support coordinates keep g^k exactly (the
-# paper's own remark: the server bans senders outside the agreed support).
-# ---------------------------------------------------------------------------
-
-def _make_step_sparse(cfg: ByzVRMarinaConfig, loss_fn, corrupt_fn=None):
-    from repro.core.compressors import unit_partition
-
-    n = cfg.n_workers
-    opt = cfg.optimizer
-    comp = cfg.compressor
-    assert comp.common_randomness and comp.ratio is not None, (
-        "sparse_support needs a common-randomness RandK compressor")
-    ratio = comp.ratio
-
-    def maybe_corrupt(batch):
-        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
-            return corrupt_fn(batch, cfg.byz_mask())
-        return batch
-
-    def support_take(leaf_flat, idx, blk, d):
-        pad = (-d) % blk
-        xf = jnp.pad(leaf_flat, (0, pad)).reshape(-1, blk)
-        return xf[idx]                                   # (k_units, blk)
-
-    def support_put(leaf, idx, blk, vals):
-        d = leaf.size
-        pad = (-d) % blk
-        xf = jnp.pad(leaf.reshape(-1).astype(jnp.float32), (0, pad))
-        xf = xf.reshape(-1, blk).at[idx].set(vals)
-        return xf.reshape(-1)[:d].reshape(leaf.shape).astype(leaf.dtype)
-
-    def step(state, batch, anchor, key):
-        k_bern, k_grad, k_q, k_attack, k_agg = jax.random.split(key, 5)
-        c_k = jax.random.bernoulli(k_bern, cfg.p)
-        old_params = state["params"]
-        if opt is None:
-            new_params = jax.tree.map(
-                lambda x, gg: (x.astype(jnp.float32)
-                               - cfg.lr * gg.astype(jnp.float32)
-                               ).astype(x.dtype), old_params, state["g"])
-            new_opt = state["opt_state"]
-        else:
-            new_params, new_opt = opt.update(state["g"], state["opt_state"],
-                                             old_params)
-        batch = maybe_corrupt(batch)
-        anchor = maybe_corrupt(anchor)
-        wkeys = tu.per_worker_keys(k_grad, n)
-
-        def full_branch(_):
-            loss, grads = _stacked_grads(loss_fn, new_params, anchor, wkeys)
-            sent = apply_attack(cfg, k_attack, grads)
-            return loss, cfg.aggregator.tree(k_agg, sent)
-
-        def sparse_branch(_):
-            # shared per-leaf supports (same key for every worker)
-            g_leaves, treedef = jax.tree.flatten(state["g"])
-            meta = []
-            for i, gl in enumerate(g_leaves):
-                d = gl.size
-                blk, n_units = unit_partition(d)
-                k_units = max(int(ratio * n_units), 1)
-                kk = jax.random.fold_in(k_q, i)
-                idx = jax.random.permutation(kk, n_units)[:k_units]
-                meta.append((blk, n_units, k_units, idx,
-                             n_units / k_units, d))
-
-            def one(b, kg):
-                ln, gn = jax.value_and_grad(loss_fn)(new_params, b, kg)
-                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
-                delta = tu.tree_sub(gn, go)
-                d_leaves = jax.tree.leaves(delta)
-                vals = []
-                for (blk, nu, ku, idx, scale, d), dl in zip(meta, d_leaves):
-                    v = support_take(dl.reshape(-1).astype(jnp.float32),
-                                     idx, blk, d) * scale
-                    vals.append(v)
-                return ln, tuple(vals)
-
-            losses, dvals = jax.vmap(one)(batch, wkeys)
-            # candidates on the support: g^k|support + scaled delta
-            cand = []
-            for (blk, nu, ku, idx, scale, d), gl, dv in zip(
-                    meta, g_leaves, dvals):
-                base = support_take(gl.reshape(-1).astype(jnp.float32),
-                                    idx, blk, d)
-                cand.append(base[None] + dv)
-            cand = tuple(cand)
-            sent = apply_attack(cfg, k_attack, cand)
-            agg_vals = cfg.aggregator.tree(k_agg, sent)
-            new_leaves = [support_put(gl, m[3], m[0], av)
-                          for m, gl, av in zip(meta, g_leaves, agg_vals)]
-            g_new = jax.tree.unflatten(treedef, new_leaves)
-            return jnp.mean(losses), g_new
-
-        loss, g_new = lax.cond(c_k, full_branch, sparse_branch, operand=None)
-        metrics = {"loss": loss, "c_k": c_k.astype(jnp.int32),
-                   "g_norm": jnp.sqrt(tu.tree_norm_sq(g_new))}
-        return ({"params": new_params, "g": g_new, "opt_state": new_opt,
-                 "step": state["step"] + 1}, metrics)
-
-    return step
-
-
-# ---------------------------------------------------------------------------
-# g^0 initialization (paper: g^0 = ARAgg(∇f_1(x^0), ..., ∇f_n(x^0)))
-# ---------------------------------------------------------------------------
 
 def make_init(cfg: ByzVRMarinaConfig, loss_fn: Callable,
               corrupt_fn: Optional[Callable] = None):
-    def init(params, anchor, key):
-        k_grad, k_attack, k_agg = jax.random.split(key, 3)
-        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
-            anchor = corrupt_fn(anchor, cfg.byz_mask())
-        wkeys = tu.per_worker_keys(k_grad, cfg.n_workers)
-        _, grads = _stacked_grads(loss_fn, params, anchor, wkeys)
-        sent = apply_attack(cfg, k_attack, grads)
-        g0 = _aggregate(cfg, k_agg, sent)
-        opt_state = (cfg.optimizer.init(params)
-                     if cfg.optimizer is not None else None)
-        return train_state(params, g0, opt_state)
-
-    return init
+    """g^0 initialization (paper: g^0 = ARAgg(∇f_1(x^0), ..., ∇f_n(x^0)))."""
+    return make_method("marina", cfg, loss_fn, corrupt_fn).init
 
 
 # ---------------------------------------------------------------------------
@@ -332,11 +93,12 @@ def make_init(cfg: ByzVRMarinaConfig, loss_fn: Callable,
 # ---------------------------------------------------------------------------
 
 def comm_bits(cfg: ByzVRMarinaConfig, d: int, c_k: bool) -> int:
-    """Bits uploaded per worker this round."""
-    if c_k:
-        return 32 * d
-    return int(cfg.compressor.bits_per_vector(d))
+    """Bits uploaded per worker this round (delegates to the estimator's
+    own accounting so legacy and registry callers can never diverge)."""
+    from repro.core.estimators import MarinaEstimator
+    return MarinaEstimator().round_bits(cfg, d, bool(c_k))
 
 
 def expected_comm_bits(cfg: ByzVRMarinaConfig, d: int) -> float:
-    return cfg.p * 32 * d + (1 - cfg.p) * cfg.compressor.bits_per_vector(d)
+    from repro.core.estimators import MarinaEstimator
+    return MarinaEstimator().expected_bits(cfg, d)

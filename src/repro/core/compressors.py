@@ -103,12 +103,34 @@ def rand_k(ratio: float = 0.1, *, common_randomness: bool = False) -> Compressor
         out = jnp.where(mask[:, None], xf * scale, 0)
         return out.reshape(-1)[:d].reshape(shape).astype(x.dtype)
 
+    def _selection(d):
+        """The (block, n_units, k_units) partition ``compress`` actually
+        samples from — omega/bits/density are derived from the SAME
+        partition so the theory-side constants and the wire accounting
+        stay exact for huge (block-selected) leaves. For d <= 2^22 the
+        block size is 1 and everything reduces to per-coordinate RandK."""
+        blk, n_units = unit_partition(d)
+        return blk, n_units, max(int(ratio * n_units), 1)
+
+    def omega_fn(d):
+        _, n_units, k_units = _selection(d)
+        return n_units / k_units - 1.0
+
+    def bits_fn(d):
+        # wire: k_units dense blocks of blk fp32 values + one index per block
+        blk, _, k_units = _selection(d)
+        return k_units * (32 * blk + 32)
+
+    def density_fn(d):
+        blk, _, k_units = _selection(d)
+        return min(k_units * blk, d)
+
     return Compressor(
         name=f"randk_{ratio}" + ("_cr" if common_randomness else ""),
         compress=compress,
-        omega_fn=lambda d: d / max(int(ratio * d), 1) - 1.0,
-        bits_fn=lambda d: max(int(ratio * d), 1) * (32 + 32),
-        density_fn=lambda d: max(int(ratio * d), 1),
+        omega_fn=omega_fn,
+        bits_fn=bits_fn,
+        density_fn=density_fn,
         common_randomness=common_randomness,
         ratio=ratio,
     )

@@ -1,0 +1,282 @@
+"""The Byzantine-robust round engine (DESIGN.md §2).
+
+The paper's central observation is architectural: Byz-VR-MARINA and every
+method it is compared against (SGD, BR-SGDm, CSGD, BR-DIANA, BR-MVR,
+Byrd-SVRG) share one round skeleton and differ *only* in the gradient
+estimator. This module owns that skeleton, once:
+
+    1. parameter update            x^{k+1} = x^k - γ g^k  (or optim.Optimizer)
+    2. data corruption             label-flipping byzantines (corrupt_fn)
+    3. candidate computation       ← the pluggable ``GradientEstimator``
+    4. omniscient attack           byzantines replace their message
+    5. robust aggregation          backend dispatch (``AGG_BACKENDS``)
+    6. server finalization         estimator post-processing (e.g. DIANA's
+                                   shift mean) + state carry
+    7. metrics + communication     loss, |g|, per-round uploaded bits
+
+Estimators declare whether the parameter update happens *before* the
+candidates are computed (MARINA-family: workers need x^{k+1} and x^k) or
+*after* (SGD-family: the aggregate is the update direction), and which named
+RNG streams they consume — the engine splits the per-round key exactly once,
+so a method's trajectory is a pure function of (seed, estimator, config).
+
+Aggregation-backend dispatch (``aggregate``):
+
+  * ``gspmd``          — paper-faithful jnp over the stacked worker axis;
+                         GSPMD inserts the all-gather on a mesh.
+  * ``all_to_all``     — shard_map sharded aggregation (core/sharded_agg.py).
+  * ``sparse_support`` — common-randomness RandK support-only aggregation
+                         (handled inside the MARINA estimator; dense rounds
+                         stay gspmd).
+  * ``pallas``         — the fused one-HBM-sweep kernel (kernels/robust_agg)
+                         over the flattened candidate pytree, for
+                         coordinate-wise rules; jnp fallback for RFA/Krum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_utils as tu
+
+
+AGG_BACKENDS = ("gspmd", "all_to_all", "sparse_support", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# shared round primitives
+# ---------------------------------------------------------------------------
+
+def apply_attack(cfg, key, cand):
+    """cand: stacked pytree (n, ...). Returns the vectors actually 'sent'.
+
+    Omniscient attacks see the good workers' per-coordinate mean/std; NA/LF
+    leave the candidates untouched (LF acts at the data level).
+    """
+    if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
+        return cand
+    mask = cfg.byz_mask()
+    good = ~mask
+    means, stds = tu.masked_mean_std(cand, good)
+
+    def leaf(h, m, s):
+        v = cfg.attack.apply(key, h, m, s).astype(h.dtype)
+        bm = mask.reshape((-1,) + (1,) * (h.ndim - 1))
+        return jnp.where(bm, v, h)
+
+    return jax.tree.map(leaf, cand, means, stds)
+
+
+def stacked_grads(loss_fn, params, batches, keys):
+    """vmap(value_and_grad) over the leading worker axis of ``batches``."""
+    def one(batch, key):
+        return jax.value_and_grad(loss_fn)(params, batch, key)
+
+    losses, grads = jax.vmap(one)(batches, keys)
+    return jnp.mean(losses), grads
+
+
+def aggregate(cfg, key, sent):
+    """Backend dispatch for line 10 (g = ARAgg(sent_1, ..., sent_n))."""
+    mode = cfg.agg_mode
+    if mode in ("gspmd", "sparse_support"):
+        # sparse_support only changes the MARINA VR branch (the estimator
+        # aggregates on the shared support itself); dense aggregations
+        # (init, full-grad rounds, other estimators) stay gspmd.
+        return cfg.aggregator.tree(key, sent)
+    if mode == "all_to_all":
+        from repro.core.sharded_agg import tree_aggregate_all_to_all
+        return tree_aggregate_all_to_all(cfg, key, sent)
+    if mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        return tree_aggregate_pallas(cfg, key, sent)
+    raise ValueError(f"agg_mode {mode!r} not in {AGG_BACKENDS}")
+
+
+def param_update(cfg, params, g, opt_state):
+    """x <- x - γ g (dtype-preserving, fp32 math) or cfg.optimizer.update."""
+    if cfg.optimizer is None:
+        new = jax.tree.map(
+            lambda x, gg: (x.astype(jnp.float32)
+                           - cfg.lr * gg.astype(jnp.float32)).astype(x.dtype),
+            params, g)
+        return new, opt_state
+    return cfg.optimizer.update(g, opt_state, params)
+
+
+def maybe_corrupt(cfg, corrupt_fn, batch):
+    """Data-level attacks (label flipping) on the byzantine workers."""
+    if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+        return corrupt_fn(batch, cfg.byz_mask())
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# estimator protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundOutput:
+    """What an estimator hands back to the engine each round.
+
+    Either ``cand`` (stacked candidates the engine attacks + aggregates,
+    with optional ``finalize(agg) -> (g, state_updates)`` server-side
+    post-processing) or ``g_new`` (the estimator ran the message phase
+    itself — the sparse-support path, where attack/aggregation happen on
+    the shared RandK support only).
+    """
+    loss: Any
+    cand: Any = None
+    finalize: Optional[Callable] = None
+    g_new: Any = None
+    updates: Optional[dict] = None
+    metrics: Optional[dict] = None
+
+
+class GradientEstimator:
+    """Interface for pluggable per-worker gradient estimators.
+
+    Subclasses set:
+      * ``name``                — registry key.
+      * ``rng``                 — ordered per-round RNG stream names; must
+                                  end with ("attack", "agg"). The engine
+                                  splits the round key into exactly these.
+      * ``update_params_first`` — True for MARINA-family estimators whose
+                                  candidates are computed at x^{k+1}.
+    and implement ``init_extras`` and ``round``.
+    """
+    name: str = "?"
+    rng: tuple = ("grad", "attack", "agg")
+    update_params_first: bool = False
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        """-> (g0, extras): the initial server estimate and any extra state
+        (stacked worker momenta / shifts / snapshots ...)."""
+        raise NotImplementedError
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys) -> RoundOutput:
+        """Compute this round's candidate messages (or the full message
+        phase, for estimators that own their aggregation)."""
+        raise NotImplementedError
+
+    # -- communication accounting (paper Fig. 8 / footnote 3) --------------
+    def round_bits(self, cfg, d: int, full_round: bool = True) -> int:
+        """Bits uploaded per worker this round."""
+        return 32 * d
+
+    def expected_bits(self, cfg, d: int) -> float:
+        return float(self.round_bits(cfg, d))
+
+
+# ---------------------------------------------------------------------------
+# engine step / init factories
+# ---------------------------------------------------------------------------
+
+def make_engine_init(cfg, loss_fn, estimator: GradientEstimator,
+                     corrupt_fn: Optional[Callable] = None):
+    def init(params, anchor, key):
+        if anchor is not None:
+            anchor = maybe_corrupt(cfg, corrupt_fn, anchor)
+        g0, extras = estimator.init_extras(cfg, loss_fn, params, anchor, key)
+        opt_state = (cfg.optimizer.init(params)
+                     if cfg.optimizer is not None else None)
+        return {"params": params, "g": g0, "opt_state": opt_state,
+                "step": jnp.zeros((), jnp.int32), **extras}
+
+    return init
+
+
+def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
+                     corrupt_fn: Optional[Callable] = None):
+    est = estimator
+    assert est.rng[-2:] == ("attack", "agg"), est.rng
+
+    def step(state, batch, anchor, key):
+        keys = dict(zip(est.rng, jax.random.split(key, len(est.rng))))
+        old_params = state["params"]
+
+        if est.update_params_first:
+            new_params, new_opt = param_update(cfg, old_params, state["g"],
+                                               state["opt_state"])
+        else:
+            new_params, new_opt = old_params, state["opt_state"]
+
+        batch = maybe_corrupt(cfg, corrupt_fn, batch)
+        anchor = maybe_corrupt(cfg, corrupt_fn, anchor)
+
+        ro = est.round(cfg, loss_fn, state, new_params, old_params, batch,
+                       anchor, keys)
+        updates = dict(ro.updates or {})
+
+        if ro.g_new is not None:
+            g = ro.g_new
+        else:
+            sent = apply_attack(cfg, keys["attack"], ro.cand)
+            agg = aggregate(cfg, keys["agg"], sent)
+            if ro.finalize is not None:
+                g, fin_updates = ro.finalize(agg)
+                updates.update(fin_updates)
+            else:
+                g = agg
+
+        if not est.update_params_first:
+            new_params, new_opt = param_update(cfg, old_params, g,
+                                               state["opt_state"])
+
+        new_state = {**state, **updates, "params": new_params, "g": g,
+                     "opt_state": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": ro.loss,
+                   **(ro.metrics or {}),
+                   "g_norm": jnp.sqrt(tu.tree_norm_sq(g))}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# method registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """A fully-assembled Byzantine-robust training method.
+
+    ``init(params, anchor, key) -> state`` and
+    ``step(state, batch, anchor, key) -> (state, metrics)`` run through the
+    shared engine; ``estimator`` is the plugged-in GradientEstimator.
+    """
+    name: str
+    estimator: GradientEstimator
+    init: Callable
+    step: Callable
+    cfg: Any
+
+    def round_bits(self, d: int, full_round: bool = True) -> int:
+        return self.estimator.round_bits(self.cfg, d, full_round)
+
+    def expected_bits(self, d: int) -> float:
+        return self.estimator.expected_bits(self.cfg, d)
+
+
+def make_method(name: str, cfg, loss_fn,
+                corrupt_fn: Optional[Callable] = None, **est_kw) -> Method:
+    """Assemble a registered method over the shared round engine.
+
+    name in ``list_methods()``: marina | sgd | sgdm | csgd | diana | mvr
+    | svrg. ``est_kw`` are estimator knobs (momentum, alpha, ...).
+    """
+    from repro.core import estimators as E
+    est = E.get_estimator(name, cfg, **est_kw)
+    return Method(
+        name=name, estimator=est, cfg=cfg,
+        init=make_engine_init(cfg, loss_fn, est, corrupt_fn),
+        step=make_engine_step(cfg, loss_fn, est, corrupt_fn))
+
+
+def list_methods():
+    from repro.core import estimators as E
+    return sorted(E.ESTIMATORS)

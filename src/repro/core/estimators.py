@@ -1,0 +1,420 @@
+"""Gradient estimators pluggable into the round engine (DESIGN.md §2).
+
+Each estimator owns exactly what distinguishes its method from the others:
+its per-worker candidate computation, any extra worker/server state, and its
+communication cost. Everything else — parameter update, data corruption,
+omniscient attacks, (δ,c)-robust aggregation, metrics — is the engine's.
+
+  marina — Byz-VR-MARINA (Alg. 1): the paper's contribution. Geometric coin
+           switches anchor full-gradients and compressed SARAH differences
+           g^k + Q(∇f(x^{k+1}) - ∇f(x^k)). With agg_mode="sparse_support"
+           and common-randomness RandK, the VR round attacks + aggregates
+           only the shared K-coordinate support.
+  sgd    — Parallel-SGD with (robust) averaging (Zinkevich et al. 2010).
+  sgdm   — BR-SGDm: worker momenta are attacked & aggregated (Karimireddy
+           et al. 2021/22).
+  csgd   — compressed SGD; with a robust aggregator = BR-CSGD.
+  diana  — BR-DIANA: worker shifts h_i, uploads Q(g_i - h_i) (Mishchenko et
+           al. 2019 + robust aggregation).
+  mvr    — BR-MVR / STORM momentum variance reduction (Karimireddy 2021).
+  svrg   — Byrd-SVRG (loopless; App. B.4 proxy of Byrd-SAGA, Wu et al. 2020).
+
+Follow-up estimators (e.g. Byz-EF21 of Rammal et al. 2023, compressed
+momentum filtering of Liu et al. 2024) slot in as new subclasses — see
+ROADMAP "Open items".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tree_utils as tu
+from repro.core.engine import (GradientEstimator, RoundOutput, aggregate,
+                               apply_attack, stacked_grads)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+
+
+class CompressedUploadBits:
+    """Comm accounting for estimators whose every upload is Q(·)."""
+
+    def round_bits(self, cfg, d, full_round=True):
+        return int(cfg.compressor.bits_per_vector(d))
+
+    def expected_bits(self, cfg, d):
+        return float(cfg.compressor.bits_per_vector(d))
+
+
+# ---------------------------------------------------------------------------
+# Byz-VR-MARINA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MarinaEstimator(GradientEstimator):
+    """Alg. 1 (lines 4-10): c_k ~ Be(p) picks anchor full-gradients or the
+    compressed variance-reduced difference estimator."""
+    name = "marina"
+    rng = ("bern", "grad", "q", "attack", "agg")
+    update_params_first = True
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        # paper: g^0 = ARAgg(∇f_1(x^0), ..., ∇f_n(x^0))
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        wkeys = tu.per_worker_keys(k_grad, cfg.n_workers)
+        _, grads = stacked_grads(loss_fn, params, anchor, wkeys)
+        sent = apply_attack(cfg, k_attack, grads)
+        return aggregate(cfg, k_agg, sent), {}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        n = cfg.n_workers
+        c_k = jax.random.bernoulli(keys["bern"], cfg.p)
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+
+        def full_branch(_):
+            return stacked_grads(loss_fn, params, anchor, wkeys)
+
+        def vr_branch(_):
+            qkeys = tu.per_worker_keys(
+                keys["q"], n, common=cfg.compressor.common_randomness)
+
+            def one(b, kg, kq):
+                ln, gn = jax.value_and_grad(loss_fn)(params, b, kg)
+                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
+                delta = tu.tree_sub(gn, go)
+                return ln, tu.compress_tree(cfg.compressor, kq, delta)
+
+            losses, qs = jax.vmap(one)(batch, wkeys, qkeys)
+            cand = jax.tree.map(lambda g0, q: g0[None] + q, state["g"], qs)
+            return jnp.mean(losses), cand
+
+        loss, cand = lax.cond(c_k, full_branch, vr_branch, operand=None)
+        return RoundOutput(loss=loss, cand=cand,
+                           metrics={"c_k": c_k.astype(jnp.int32)})
+
+    def round_bits(self, cfg, d, full_round=True):
+        if full_round:
+            return 32 * d
+        return int(cfg.compressor.bits_per_vector(d))
+
+    def expected_bits(self, cfg, d):
+        return (cfg.p * 32 * d
+                + (1 - cfg.p) * cfg.compressor.bits_per_vector(d))
+
+
+@dataclasses.dataclass
+class MarinaSparseEstimator(MarinaEstimator):
+    """§Perf sparse-support variant: common-randomness RandK means every
+    worker sends the SAME K coordinates, so only the K-sized support is
+    attacked, gathered, and aggregated; off-support coordinates keep g^k
+    exactly (the paper's own remark: the server bans senders outside the
+    agreed support). Owns its whole message phase, so attack + aggregation
+    live inside the c_k branches."""
+    name = "marina_sparse"
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        from repro.core.compressors import unit_partition
+
+        n = cfg.n_workers
+        ratio = cfg.compressor.ratio   # validated by _marina_factory
+        c_k = jax.random.bernoulli(keys["bern"], cfg.p)
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+
+        def support_take(leaf_flat, idx, blk, d):
+            pad = (-d) % blk
+            xf = jnp.pad(leaf_flat, (0, pad)).reshape(-1, blk)
+            return xf[idx]                               # (k_units, blk)
+
+        def support_put(leaf, idx, blk, vals):
+            d = leaf.size
+            pad = (-d) % blk
+            xf = jnp.pad(leaf.reshape(-1).astype(jnp.float32), (0, pad))
+            xf = xf.reshape(-1, blk).at[idx].set(vals)
+            return xf.reshape(-1)[:d].reshape(leaf.shape).astype(leaf.dtype)
+
+        def full_branch(_):
+            loss, grads = stacked_grads(loss_fn, params, anchor, wkeys)
+            sent = apply_attack(cfg, keys["attack"], grads)
+            return loss, cfg.aggregator.tree(keys["agg"], sent)
+
+        def sparse_branch(_):
+            # shared per-leaf supports (same key for every worker)
+            g_leaves, treedef = jax.tree.flatten(state["g"])
+            meta = []
+            for i, gl in enumerate(g_leaves):
+                d = gl.size
+                blk, n_units = unit_partition(d)
+                k_units = max(int(ratio * n_units), 1)
+                kk = jax.random.fold_in(keys["q"], i)
+                idx = jax.random.permutation(kk, n_units)[:k_units]
+                meta.append((blk, n_units, k_units, idx,
+                             n_units / k_units, d))
+
+            def one(b, kg):
+                ln, gn = jax.value_and_grad(loss_fn)(params, b, kg)
+                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
+                delta = tu.tree_sub(gn, go)
+                d_leaves = jax.tree.leaves(delta)
+                vals = []
+                for (blk, nu, ku, idx, scale, d), dl in zip(meta, d_leaves):
+                    v = support_take(dl.reshape(-1).astype(jnp.float32),
+                                     idx, blk, d) * scale
+                    vals.append(v)
+                return ln, tuple(vals)
+
+            losses, dvals = jax.vmap(one)(batch, wkeys)
+            # candidates on the support: g^k|support + scaled delta
+            cand = []
+            for (blk, nu, ku, idx, scale, d), gl, dv in zip(
+                    meta, g_leaves, dvals):
+                base = support_take(gl.reshape(-1).astype(jnp.float32),
+                                    idx, blk, d)
+                cand.append(base[None] + dv)
+            sent = apply_attack(cfg, keys["attack"], tuple(cand))
+            agg_vals = cfg.aggregator.tree(keys["agg"], sent)
+            new_leaves = [support_put(gl, m[3], m[0], av)
+                          for m, gl, av in zip(meta, g_leaves, agg_vals)]
+            return jnp.mean(losses), jax.tree.unflatten(treedef, new_leaves)
+
+        loss, g_new = lax.cond(c_k, full_branch, sparse_branch, operand=None)
+        return RoundOutput(loss=loss, g_new=g_new,
+                           metrics={"c_k": c_k.astype(jnp.int32)})
+
+
+# ---------------------------------------------------------------------------
+# SGD / BR-SGDm
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SGDEstimator(GradientEstimator):
+    """momentum=0 -> Parallel-SGD; momentum>0 -> BR-SGDm (worker momenta are
+    what gets attacked & aggregated, per Karimireddy et al. 2021)."""
+    momentum: float = 0.0
+    name = "sgd"
+    rng = ("grad", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        g0 = (_zeros_like_f32(params) if self.momentum > 0.0
+              else tu.tree_zeros_like(params))
+        return g0, {"worker_m": tu.tree_broadcast_leading(
+            _zeros_like_f32(params), cfg.n_workers)}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        wkeys = tu.per_worker_keys(keys["grad"], cfg.n_workers)
+        loss, grads = stacked_grads(loss_fn, params, batch, wkeys)
+        if self.momentum > 0.0:
+            m_new = jax.tree.map(
+                lambda m, g: ((1 - self.momentum) * g.astype(jnp.float32)
+                              + self.momentum * m.astype(jnp.float32)),
+                state["worker_m"], grads)
+            cand = m_new
+        else:
+            m_new = state["worker_m"]
+            cand = grads
+        return RoundOutput(loss=loss, cand=cand,
+                           updates={"worker_m": m_new})
+
+
+# ---------------------------------------------------------------------------
+# CSGD / BR-CSGD
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CSGDEstimator(CompressedUploadBits, GradientEstimator):
+    name = "csgd"
+    rng = ("grad", "q", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        return tu.tree_zeros_like(params), {}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        n = cfg.n_workers
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+        qkeys = tu.per_worker_keys(keys["q"], n,
+                                   common=cfg.compressor.common_randomness)
+
+        def one(b, kg, kq):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            return ln, tu.compress_tree(cfg.compressor, kq, g)
+
+        losses, cand = jax.vmap(one)(batch, wkeys, qkeys)
+        return RoundOutput(loss=jnp.mean(losses), cand=cand)
+
+
+# ---------------------------------------------------------------------------
+# BR-DIANA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DianaEstimator(CompressedUploadBits, GradientEstimator):
+    """DIANA: worker i keeps a shift h_i, uploads Q(g_i - h_i); the server
+    adds the aggregated compressed difference to the shift mean. alpha
+    defaults to 1/(1+omega) (Mishchenko et al. 2019)."""
+    alpha: Optional[float] = None
+    d_hint: Optional[int] = None
+    name = "diana"
+    rng = ("grad", "q", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        d = int(self.d_hint if self.d_hint is not None
+                else tu.tree_size(params))
+        omega = cfg.compressor.omega(d)
+        a = self.alpha if self.alpha is not None else 1.0 / (1.0 + omega)
+        extras = {
+            "worker_h": tu.tree_broadcast_leading(_zeros_like_f32(params),
+                                                  cfg.n_workers),
+            "alpha": jnp.asarray(a, jnp.float32),
+        }
+        return _zeros_like_f32(params), extras
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        n = cfg.n_workers
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+        qkeys = tu.per_worker_keys(keys["q"], n,
+                                   common=cfg.compressor.common_randomness)
+        h = state["worker_h"]                              # stacked (n, ...)
+        a = state["alpha"]
+
+        def one(b, kg, kq, h_i):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            diff = tu.tree_sub(g, h_i)
+            return ln, tu.compress_tree(cfg.compressor, kq, diff)
+
+        losses, qdiff = jax.vmap(one)(batch, wkeys, qkeys, h)
+        h_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), h)
+        h_new = jax.tree.map(lambda hh, q: hh + a * q, h, qdiff)
+
+        def finalize(agg_diff):
+            return tu.tree_add(h_mean, agg_diff), {"worker_h": h_new}
+
+        return RoundOutput(loss=jnp.mean(losses), cand=qdiff,
+                           finalize=finalize)
+
+
+# ---------------------------------------------------------------------------
+# BR-MVR (STORM)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MVREstimator(GradientEstimator):
+    """BR-MVR (Karimireddy et al. 2021): momentum variance reduction
+    (STORM/MVR estimator) per worker + robust aggregation.
+
+        v_i^k = g_i(x^k) + (1-α)(v_i^{k-1} - g_i(x^{k-1}))
+    """
+    alpha: float = 0.1
+    name = "mvr"
+    rng = ("grad", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        wkeys = tu.per_worker_keys(key, cfg.n_workers)
+        _, grads = stacked_grads(loss_fn, params, anchor, wkeys)
+        v0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return _zeros_like_f32(params), {"prev_params": params,
+                                         "worker_v": v0}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        wkeys = tu.per_worker_keys(keys["grad"], cfg.n_workers)
+        prev = state["prev_params"]
+        alpha = self.alpha
+
+        def one(b, kg, v_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gp = jax.value_and_grad(loss_fn)(prev, b, kg)
+            v_new = jax.tree.map(
+                lambda g, vv, go: g.astype(jnp.float32)
+                + (1 - alpha) * (vv - go.astype(jnp.float32)),
+                gx, v_i, gp)
+            return ln, v_new
+
+        losses, v = jax.vmap(one)(batch, wkeys, state["worker_v"])
+        return RoundOutput(loss=jnp.mean(losses), cand=v,
+                           updates={"prev_params": params, "worker_v": v})
+
+
+# ---------------------------------------------------------------------------
+# Byrd-SVRG (App. B.4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SVRGEstimator(GradientEstimator):
+    """Loopless SVRG: with prob p refresh the snapshot w <- x and the full
+    worker gradients; each round worker i sends
+    v_i = g_i(x, mb) - g_i(w, mb) + full_i, aggregated with RFA (geometric
+    median) per Wu et al. (2020)."""
+    name = "svrg"
+    rng = ("bern", "grad", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        wkeys = tu.per_worker_keys(key, cfg.n_workers)
+        _, fulls = stacked_grads(loss_fn, params, anchor, wkeys)
+        return tu.tree_zeros_like(params), {"snapshot": params,
+                                            "worker_full": fulls}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        c_k = jax.random.bernoulli(keys["bern"], cfg.p)
+        wkeys = tu.per_worker_keys(keys["grad"], cfg.n_workers)
+
+        def refresh(_):
+            _, fulls = stacked_grads(loss_fn, params, anchor, wkeys)
+            return params, fulls
+
+        def keep(_):
+            return state["snapshot"], state["worker_full"]
+
+        w, fulls = lax.cond(c_k, refresh, keep, operand=None)
+
+        def one(b, kg, full_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gw = jax.value_and_grad(loss_fn)(w, b, kg)
+            return ln, tu.tree_add(tu.tree_sub(gx, gw), full_i)
+
+        losses, cand = jax.vmap(one)(batch, wkeys, fulls)
+        return RoundOutput(loss=jnp.mean(losses), cand=cand,
+                           updates={"snapshot": w, "worker_full": fulls})
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _marina_factory(cfg, **kw):
+    if cfg.agg_mode == "sparse_support":
+        comp = cfg.compressor
+        if not (comp.common_randomness and comp.ratio is not None):
+            raise ValueError(
+                "agg_mode='sparse_support' needs a common-randomness RandK "
+                f"compressor, got {comp.name!r}")
+        return MarinaSparseEstimator(**kw)
+    return MarinaEstimator(**kw)
+
+
+ESTIMATORS = {
+    "marina": _marina_factory,
+    "sgd": lambda cfg, **kw: SGDEstimator(momentum=kw.pop("momentum", 0.0),
+                                          **kw),
+    "sgdm": lambda cfg, **kw: SGDEstimator(momentum=kw.pop("momentum", 0.9),
+                                           **kw),
+    "csgd": lambda cfg, **kw: CSGDEstimator(**kw),
+    "diana": lambda cfg, **kw: DianaEstimator(**kw),
+    "mvr": lambda cfg, **kw: MVREstimator(**kw),
+    "svrg": lambda cfg, **kw: SVRGEstimator(**kw),
+}
+
+
+def get_estimator(name: str, cfg, **kw) -> GradientEstimator:
+    if name not in ESTIMATORS:
+        raise KeyError(f"unknown method {name!r}; known: {sorted(ESTIMATORS)}")
+    return ESTIMATORS[name](cfg, **kw)

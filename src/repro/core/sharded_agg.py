@@ -1,4 +1,15 @@
-"""Beyond-paper §Perf: distributed robust aggregation via all_to_all.
+"""Beyond-paper §Perf: the non-default aggregation backends.
+
+Two backends live here, both reachable through the engine's ``agg_mode``
+dispatch (core/engine.py):
+
+* ``all_to_all``  — distributed robust aggregation via shard_map (below).
+* ``pallas``      — single-host/default-trainer dense path: the candidate
+                    pytree is flattened to one (n, D) matrix and routed
+                    through the fused bucket+sort Pallas kernel
+                    (kernels/robust_agg), so the one-HBM-sweep kernel serves
+                    the default (non-shard_map) trainer too. Norm-based
+                    rules (RFA/Krum) fall back to the jnp tree path.
 
 Paper-faithful aggregation gathers every worker's full vector to every
 device (GSPMD all-gather: n x d_local bytes in, n x d_local held in memory)
@@ -31,6 +42,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregators import (_bucketize_perm, coord_median,
                                     coord_trimmed_mean)
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map (new API, check_vma) with a fallback to
+    jax.experimental.shard_map (check_rep) on older jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 # route the per-device coordinate rule through the Pallas kernel
@@ -92,7 +114,42 @@ def tree_aggregate_all_to_all(cfg, key, sent):
             g = lax.all_gather(a, w_axes, axis=0, tiled=True)
             return g[:dl].reshape(x.shape[1:]).astype(x.dtype)
 
-        return jax.shard_map(body, mesh=mesh, in_specs=(in_spec, P()),
-                             out_specs=out_spec, check_vma=False)(leaf, key)
+        return _shard_map(body, mesh, (in_spec, P()), out_spec)(leaf, key)
 
     return jax.tree.map(agg_leaf, sent, specs)
+
+
+# ---------------------------------------------------------------------------
+# pallas dense backend (agg_mode="pallas")
+# ---------------------------------------------------------------------------
+
+def tree_aggregate_pallas(cfg, key, sent):
+    """Flatten the stacked candidate pytree to one (n, D) matrix and run the
+    fused bucket-mean + coordinate-rule kernel (kernels/robust_agg) in a
+    single sweep; split the (D,) aggregate back into the tree.
+
+    Semantics match the gspmd tree path exactly: one shared bucketing
+    permutation across all leaves (coordinate-wise rules commute with the
+    flatten/split), fp32 accumulation, per-leaf output dtype preserved.
+    RFA/Krum are not coordinate-wise — they fall back to the jnp tree path.
+    """
+    agg = cfg.aggregator
+    if not agg.coordinatewise:
+        return agg.tree(key, sent)
+    from repro.kernels.ops import robust_agg as pallas_agg
+
+    leaves, treedef = jax.tree.flatten(sent)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+    rule = {"cm": "median", "tm": "trimmed", "mean": "mean"}[agg.rule]
+    bucketed = agg.bucket_size > 1 and agg.rule != "mean"
+    out = pallas_agg(flat, key if bucketed else None,
+                     bucket_size=agg.bucket_size if bucketed else 1,
+                     rule=rule, trim=agg.trim)
+    outs, off = [], 0
+    for l in leaves:
+        sz = l[0].size
+        outs.append(out[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, outs)

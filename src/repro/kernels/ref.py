@@ -14,8 +14,14 @@ def robust_agg_ref(x, *, bucket_size: int = 1, rule: str = "median",
     n, d = x.shape
     xf = x.astype(jnp.float32)
     if bucket_size > 1:
-        nb = n // bucket_size
-        xf = xf[: nb * bucket_size].reshape(nb, bucket_size, d).mean(axis=1)
+        # Alg. 2 semantics (aggregators._bucketize_perm): a partial last
+        # bucket is padded with the stacked mean, not dropped.
+        nb = -(-n // bucket_size)
+        pad = nb * bucket_size - n
+        if pad:
+            fill = jnp.broadcast_to(xf.mean(axis=0, keepdims=True), (pad, d))
+            xf = jnp.concatenate([xf, fill], axis=0)
+        xf = xf.reshape(nb, bucket_size, d).mean(axis=1)
     m = xf.shape[0]
     if rule == "mean":
         return xf.mean(axis=0)

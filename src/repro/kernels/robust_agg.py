@@ -27,8 +27,16 @@ DEFAULT_TILE_D = 2048     # (64 workers x 2048 lanes x 4B = 512 KiB in VMEM)
 def _agg_kernel(x_ref, o_ref, *, bucket_size, rule, trim, n):
     x = x_ref[...].astype(jnp.float32)            # (n, TILE_D)
     if bucket_size > 1:
-        nb = n // bucket_size
-        x = x[: nb * bucket_size].reshape(nb, bucket_size, -1).mean(axis=1)
+        # matches aggregators._bucketize_perm (Alg. 2): when n is not a
+        # bucket multiple the last bucket is padded with the stacked mean,
+        # so no trailing worker is silently dropped.
+        nb = -(-n // bucket_size)
+        pad = nb * bucket_size - n
+        if pad:
+            fill = jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                    (pad, x.shape[1]))
+            x = jnp.concatenate([x, fill], axis=0)
+        x = x.reshape(nb, bucket_size, -1).mean(axis=1)
     m = x.shape[0]
     if rule == "mean":
         o_ref[...] = jnp.mean(x, axis=0)

@@ -34,7 +34,7 @@ from repro.configs import (ATTN, SWA, INPUT_SHAPES, ASSIGNED_ARCHS,
                            get_config)
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_step)
+                        get_compressor, list_methods, make_method)
 from repro.launch import hlo_analysis
 from repro.launch.mesh import (make_production_mesh, n_workers,
                                sanitize_specs, worker_axes)
@@ -142,11 +142,35 @@ def make_byz_config(n_work: int, mesh, *, agg="cm", bucket=2, compressor=None,
         mesh=mesh if agg_mode == "all_to_all" else None)
 
 
+def _train_state_specs(state_abs, pspecs, w_spec):
+    """PartitionSpecs for an engine train state: params-shaped entries get
+    the model sharding, ``worker_*`` stacked entries get the worker axis
+    prepended, scalars replicate."""
+    def worker_specs(ps):
+        return jax.tree.map(
+            lambda s: P(w_spec, *(tuple(s) if s is not None else ())), ps,
+            is_leaf=lambda s: isinstance(s, P) or s is None)
+
+    out = {}
+    for k, sub in state_abs.items():
+        if k in ("params", "g", "prev_params", "snapshot"):
+            out[k] = pspecs
+        elif k.startswith("worker_"):
+            out[k] = worker_specs(pspecs)
+        elif k == "opt_state":
+            out[k] = None
+        else:                                   # step / alpha / scalars
+            out[k] = P()
+    return out
+
+
 def build_train(cfg: ArchConfig, mesh, shape: InputShape, *,
                 byz_overrides=None, xent_chunk=1024):
+    overrides = dict(byz_overrides or {})
+    method_name = overrides.pop("method", "marina")
     n_work = n_workers(mesh)
     w_axes = worker_axes(mesh)
-    bcfg = make_byz_config(n_work, mesh, **(byz_overrides or {}))
+    bcfg = make_byz_config(n_work, mesh, **overrides)
 
     def loss(params, batch, key):
         return M.loss_fn(params, cfg, batch, remat=True,
@@ -158,18 +182,24 @@ def build_train(cfg: ArchConfig, mesh, shape: InputShape, *,
     if bcfg.agg_mode == "all_to_all":
         bcfg = dataclasses.replace(
             bcfg, grad_specs=sanitize_specs(mesh, params_abs, pspecs))
-    step = make_step(bcfg, loss)
-
-    state_abs = {"params": params_abs, "g": params_abs, "opt_state": None,
-                 "step": _sds((), jnp.int32)}
-    state_specs = {"params": pspecs, "g": pspecs, "opt_state": None,
-                   "step": P()}
+    method = make_method(method_name, bcfg, loss)
+    step = method.step
     specs_in = input_specs(cfg, shape, n_work)
 
+    if method_name == "marina":
+        # no extra estimator state; skip tracing the init
+        state_abs = {"params": params_abs, "g": params_abs,
+                     "opt_state": None, "step": _sds((), jnp.int32)}
+    else:
+        state_abs = dict(jax.eval_shape(
+            method.init, params_abs, specs_in["anchor"],
+            _sds((2,), jnp.uint32)))
+    w_spec = tuple(w_axes) if len(w_axes) > 1 else w_axes[0]
+    state_specs = _train_state_specs(state_abs, pspecs, w_spec)
+
     def batch_spec(b):
-        return jax.tree.map(lambda s: P(*((tuple(w_axes) if len(w_axes) > 1
-                                           else w_axes[0]),
-                                          *([None] * (len(s.shape) - 1)))), b)
+        return jax.tree.map(
+            lambda s: P(w_spec, *([None] * (len(s.shape) - 1))), b)
 
     batch_specs = batch_spec(specs_in["batch"])
     anchor_specs = batch_spec(specs_in["anchor"])
@@ -424,8 +454,11 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=16)
     ap.add_argument("--agg", default="cm")
+    ap.add_argument("--method", default="marina", choices=list_methods(),
+                    help="gradient estimator plugged into the round engine")
     ap.add_argument("--agg-mode", default="gspmd",
-                    choices=["gspmd", "all_to_all", "sparse_support"])
+                    choices=["gspmd", "all_to_all", "sparse_support",
+                             "pallas"])
     ap.add_argument("--attn-impl", default="chunked",
                     choices=["chunked", "online"])
     ap.add_argument("--moe-ep-constraint", action="store_true")
@@ -441,7 +474,7 @@ def main():
     comp = get_compressor(args.compressor, **(
         {"ratio": args.compress_ratio} if args.compressor == "randk" else {}))
     overrides = {"agg": args.agg, "compressor": comp,
-                 "agg_mode": args.agg_mode}
+                 "agg_mode": args.agg_mode, "method": args.method}
 
     if args.capacity_factor is not None:
         import repro.configs.base as _cb
@@ -471,6 +504,8 @@ def main():
                 tag = f"{arch}__{shape}__{mesh_kind}"
                 if args.model_parallel != 16:
                     tag += f"__mp{args.model_parallel}"
+                if args.method != "marina":
+                    tag += f"__{args.method}"
                 if args.agg_mode != "gspmd":
                     tag += f"__{args.agg_mode}"
                 if args.attn_impl != "chunked":

@@ -1,10 +1,17 @@
-"""Training driver: Byzantine-robust LM training with Byz-VR-MARINA.
+"""Training driver: Byzantine-robust LM training through the unified round
+engine — any registered method (Byz-VR-MARINA or a baseline estimator), any
+aggregation backend.
 
 Runs end-to-end on whatever devices exist (1 CPU here; the production mesh on
 a pod — same code path, mesh size is the only difference). Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \\
-      --steps 100 --n-workers 8 --n-byz 2 --attack ALIE --agg cm
+      --steps 100 --n-workers 8 --n-byz 2 --attack ALIE --agg cm \\
+      --method marina --agg-mode auto
+
+--method picks the gradient estimator (core/estimators.py registry);
+--agg-mode picks the aggregation backend: "auto" resolves to the fused
+Pallas kernel path on TPU and the paper-faithful gspmd path elsewhere.
 """
 from __future__ import annotations
 
@@ -19,26 +26,43 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
+                        get_compressor, list_methods, make_method)
 from repro.data import TokenStream, corrupt_labels_lm
 from repro.models import init_params, loss_fn
 from repro.optim import get_optimizer
+
+
+def resolve_agg_mode(mode: str) -> str:
+    if mode != "auto":
+        return mode
+    # the fused one-HBM-sweep kernel is the default server-side backend on
+    # real TPU backends; interpret-mode pallas would only slow a CPU host.
+    return "pallas" if jax.default_backend() == "tpu" else "gspmd"
 
 
 def build(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    agg_mode = resolve_agg_mode(args.agg_mode)
+    if agg_mode == "sparse_support":
+        compressor = get_compressor(
+            "randk",
+            ratio=args.compress_ratio if args.compress_ratio < 1.0 else 0.1,
+            common_randomness=True)
+    elif args.compress_ratio < 1.0:
+        compressor = get_compressor("randk", ratio=args.compress_ratio)
+    else:
+        compressor = get_compressor("identity")
     bcfg = ByzVRMarinaConfig(
         n_workers=args.n_workers,
         n_byz=args.n_byz,
         p=args.p,
         lr=args.lr,
         aggregator=get_aggregator(args.agg, bucket_size=args.bucket),
-        compressor=(get_compressor("randk", ratio=args.compress_ratio)
-                    if args.compress_ratio < 1.0 else
-                    get_compressor("identity")),
+        compressor=compressor,
         attack=get_attack(args.attack),
+        agg_mode=agg_mode,
         optimizer=(get_optimizer(args.opt, lr=args.lr)
                    if args.opt != "none" else None),
     )
@@ -59,6 +83,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--method", default="marina", choices=list_methods(),
+                    help="gradient estimator plugged into the round engine")
+    ap.add_argument("--agg-mode", default="auto",
+                    choices=["auto", "gspmd", "pallas", "sparse_support"],
+                    help="server-side aggregation backend")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--per-worker-batch", type=int, default=4)
@@ -85,28 +114,38 @@ def main():
     params = init_params(k_init, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"[train] {args.arch} ({'reduced' if args.reduced else 'full'}): "
-          f"{n_params/1e6:.1f}M params, {args.n_workers} workers "
-          f"({args.n_byz} byzantine, attack={args.attack}, "
-          f"agg={bcfg.aggregator.name})")
+          f"{n_params/1e6:.1f}M params, method={args.method}, "
+          f"{args.n_workers} workers ({args.n_byz} byzantine, "
+          f"attack={args.attack}, agg={bcfg.aggregator.name}, "
+          f"backend={bcfg.agg_mode})")
 
-    init = make_init(bcfg, loss, corrupt_labels_lm)
-    step = jax.jit(make_step(bcfg, loss, corrupt_labels_lm))
-    state = init(params, stream.anchor(0), k_run)
+    method = make_method(args.method, bcfg, loss, corrupt_labels_lm)
+    step = jax.jit(method.step)
+    state = method.init(params, stream.anchor(0), k_run)
 
     history = []
-    t0 = time.time()
+    comm_bits_total = 0.0
+    pending_ck = []          # device arrays; synced only on log steps so the
+    t0 = time.time()         # loop keeps JAX's async dispatch pipelined
     for it in range(args.steps):
         k_it = jax.random.fold_in(k_run, it + 1)
         state, metrics = step(state, stream.minibatch(it), stream.anchor(it),
                               k_it)
+        pending_ck.append(metrics["c_k"] if "c_k" in metrics else None)
         if it % args.log_every == 0 or it == args.steps - 1:
+            for ck in pending_ck:
+                comm_bits_total += method.round_bits(
+                    n_params, True if ck is None else bool(ck))
+            pending_ck.clear()
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = it
             m["wall_s"] = round(time.time() - t0, 2)
+            m["comm_gbits"] = round(comm_bits_total / 1e9, 4)
             history.append(m)
+            ck = f" c_k={int(m['c_k'])}" if "c_k" in m else ""
             print(f"  step {it:5d} loss {m['loss']:.4f} "
-                  f"|g| {m['g_norm']:.3e} c_k={int(m['c_k'])} "
-                  f"({m['wall_s']}s)")
+                  f"|g| {m['g_norm']:.3e}{ck} "
+                  f"comm {m['comm_gbits']:.3g}Gb ({m['wall_s']}s)")
 
     if args.checkpoint:
         save_checkpoint(args.checkpoint, state["params"],

@@ -1,0 +1,433 @@
+"""FROZEN pre-refactor step implementations — parity reference only.
+
+These are verbatim copies of the seed-era ``core/byz_vr_marina.py`` /
+``core/baselines.py`` step factories, kept so tests/test_engine_parity.py
+can assert that the unified round engine (core/engine.py +
+core/estimators.py) reproduces every legacy trajectory bit-for-bit on a
+fixed seed. Do NOT import from application code and do NOT "improve" —
+any behavioural change here defeats the parity guarantee.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tree_utils as tu
+
+
+def apply_attack(cfg, key, cand):
+    if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
+        return cand
+    mask = cfg.byz_mask()
+    good = ~mask
+    means, stds = tu.masked_mean_std(cand, good)
+
+    def leaf(h, m, s):
+        v = cfg.attack.apply(key, h, m, s).astype(h.dtype)
+        bm = mask.reshape((-1,) + (1,) * (h.ndim - 1))
+        return jnp.where(bm, v, h)
+
+    return jax.tree.map(leaf, cand, means, stds)
+
+
+def _stacked_grads(loss_fn, params, batches, keys):
+    def one(batch, key):
+        return jax.value_and_grad(loss_fn)(params, batch, key)
+
+    losses, grads = jax.vmap(one)(batches, keys)
+    return jnp.mean(losses), grads
+
+
+def _aggregate(cfg, key, sent):
+    # the legacy gspmd/sparse_support dense path (parity tests run on one
+    # host, so the all_to_all branch is irrelevant here)
+    assert cfg.agg_mode in ("gspmd", "sparse_support")
+    return cfg.aggregator.tree(key, sent)
+
+
+def _sgd_update(params, g, lr):
+    return jax.tree.map(
+        lambda x, gg: (x.astype(jnp.float32) - lr * gg.astype(jnp.float32)
+                       ).astype(x.dtype), params, g)
+
+
+def _maybe_corrupt(cfg, corrupt_fn, batch):
+    if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+        return corrupt_fn(batch, cfg.byz_mask())
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Byz-VR-MARINA (seed core/byz_vr_marina.py)
+# ---------------------------------------------------------------------------
+
+def make_step(cfg, loss_fn, corrupt_fn=None):
+    if cfg.agg_mode == "sparse_support":
+        return _make_step_sparse(cfg, loss_fn, corrupt_fn)
+    n = cfg.n_workers
+    opt = cfg.optimizer
+
+    def maybe_corrupt(batch):
+        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+            return corrupt_fn(batch, cfg.byz_mask())
+        return batch
+
+    def step(state, batch, anchor, key):
+        k_bern, k_grad, k_q, k_attack, k_agg = jax.random.split(key, 5)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+        old_params = state["params"]
+
+        if opt is None:
+            new_params = jax.tree.map(
+                lambda x, gg: (x.astype(jnp.float32)
+                               - cfg.lr * gg.astype(jnp.float32)
+                               ).astype(x.dtype),
+                old_params, state["g"])
+            new_opt = state["opt_state"]
+        else:
+            new_params, new_opt = opt.update(state["g"], state["opt_state"],
+                                             old_params)
+
+        batch = maybe_corrupt(batch)
+        anchor = maybe_corrupt(anchor)
+        wkeys = tu.per_worker_keys(k_grad, n)
+
+        def full_branch(_):
+            loss, grads = _stacked_grads(loss_fn, new_params, anchor, wkeys)
+            return loss, grads
+
+        def vr_branch(_):
+            qkeys = tu.per_worker_keys(
+                k_q, n, common=cfg.compressor.common_randomness)
+
+            def one(b, kg, kq):
+                ln, gn = jax.value_and_grad(loss_fn)(new_params, b, kg)
+                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
+                delta = tu.tree_sub(gn, go)
+                q = tu.compress_tree(cfg.compressor, kq, delta)
+                return ln, q
+
+            losses, qs = jax.vmap(one)(batch, wkeys, qkeys)
+            cand = jax.tree.map(lambda g0, q: g0[None] + q, state["g"], qs)
+            return jnp.mean(losses), cand
+
+        loss, cand = lax.cond(c_k, full_branch, vr_branch, operand=None)
+        sent = apply_attack(cfg, k_attack, cand)
+        g_new = _aggregate(cfg, k_agg, sent)
+
+        metrics = {
+            "loss": loss,
+            "c_k": c_k.astype(jnp.int32),
+            "g_norm": jnp.sqrt(tu.tree_norm_sq(g_new)),
+        }
+        new_state = {"params": new_params, "g": g_new, "opt_state": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step
+
+
+def _make_step_sparse(cfg, loss_fn, corrupt_fn=None):
+    from repro.core.compressors import unit_partition
+
+    n = cfg.n_workers
+    opt = cfg.optimizer
+    comp = cfg.compressor
+    assert comp.common_randomness and comp.ratio is not None
+    ratio = comp.ratio
+
+    def maybe_corrupt(batch):
+        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+            return corrupt_fn(batch, cfg.byz_mask())
+        return batch
+
+    def support_take(leaf_flat, idx, blk, d):
+        pad = (-d) % blk
+        xf = jnp.pad(leaf_flat, (0, pad)).reshape(-1, blk)
+        return xf[idx]
+
+    def support_put(leaf, idx, blk, vals):
+        d = leaf.size
+        pad = (-d) % blk
+        xf = jnp.pad(leaf.reshape(-1).astype(jnp.float32), (0, pad))
+        xf = xf.reshape(-1, blk).at[idx].set(vals)
+        return xf.reshape(-1)[:d].reshape(leaf.shape).astype(leaf.dtype)
+
+    def step(state, batch, anchor, key):
+        k_bern, k_grad, k_q, k_attack, k_agg = jax.random.split(key, 5)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+        old_params = state["params"]
+        if opt is None:
+            new_params = jax.tree.map(
+                lambda x, gg: (x.astype(jnp.float32)
+                               - cfg.lr * gg.astype(jnp.float32)
+                               ).astype(x.dtype), old_params, state["g"])
+            new_opt = state["opt_state"]
+        else:
+            new_params, new_opt = opt.update(state["g"], state["opt_state"],
+                                             old_params)
+        batch = maybe_corrupt(batch)
+        anchor = maybe_corrupt(anchor)
+        wkeys = tu.per_worker_keys(k_grad, n)
+
+        def full_branch(_):
+            loss, grads = _stacked_grads(loss_fn, new_params, anchor, wkeys)
+            sent = apply_attack(cfg, k_attack, grads)
+            return loss, cfg.aggregator.tree(k_agg, sent)
+
+        def sparse_branch(_):
+            g_leaves, treedef = jax.tree.flatten(state["g"])
+            meta = []
+            for i, gl in enumerate(g_leaves):
+                d = gl.size
+                blk, n_units = unit_partition(d)
+                k_units = max(int(ratio * n_units), 1)
+                kk = jax.random.fold_in(k_q, i)
+                idx = jax.random.permutation(kk, n_units)[:k_units]
+                meta.append((blk, n_units, k_units, idx,
+                             n_units / k_units, d))
+
+            def one(b, kg):
+                ln, gn = jax.value_and_grad(loss_fn)(new_params, b, kg)
+                _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
+                delta = tu.tree_sub(gn, go)
+                d_leaves = jax.tree.leaves(delta)
+                vals = []
+                for (blk, nu, ku, idx, scale, d), dl in zip(meta, d_leaves):
+                    v = support_take(dl.reshape(-1).astype(jnp.float32),
+                                     idx, blk, d) * scale
+                    vals.append(v)
+                return ln, tuple(vals)
+
+            losses, dvals = jax.vmap(one)(batch, wkeys)
+            cand = []
+            for (blk, nu, ku, idx, scale, d), gl, dv in zip(
+                    meta, g_leaves, dvals):
+                base = support_take(gl.reshape(-1).astype(jnp.float32),
+                                    idx, blk, d)
+                cand.append(base[None] + dv)
+            cand = tuple(cand)
+            sent = apply_attack(cfg, k_attack, cand)
+            agg_vals = cfg.aggregator.tree(k_agg, sent)
+            new_leaves = [support_put(gl, m[3], m[0], av)
+                          for m, gl, av in zip(meta, g_leaves, agg_vals)]
+            g_new = jax.tree.unflatten(treedef, new_leaves)
+            return jnp.mean(losses), g_new
+
+        loss, g_new = lax.cond(c_k, full_branch, sparse_branch, operand=None)
+        metrics = {"loss": loss, "c_k": c_k.astype(jnp.int32),
+                   "g_norm": jnp.sqrt(tu.tree_norm_sq(g_new))}
+        return ({"params": new_params, "g": g_new, "opt_state": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return step
+
+
+def make_init(cfg, loss_fn, corrupt_fn=None):
+    def init(params, anchor, key):
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        if corrupt_fn is not None and cfg.attack.flips_labels and cfg.n_byz:
+            anchor = corrupt_fn(anchor, cfg.byz_mask())
+        wkeys = tu.per_worker_keys(k_grad, cfg.n_workers)
+        _, grads = _stacked_grads(loss_fn, params, anchor, wkeys)
+        sent = apply_attack(cfg, k_attack, grads)
+        g0 = _aggregate(cfg, k_agg, sent)
+        opt_state = (cfg.optimizer.init(params)
+                     if cfg.optimizer is not None else None)
+        return {"params": params, "g": g0, "opt_state": opt_state,
+                "step": jnp.asarray(0, jnp.int32)}
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# baselines (seed core/baselines.py)
+# ---------------------------------------------------------------------------
+
+def make_sgd_step(cfg, loss_fn, corrupt_fn=None, momentum: float = 0.0):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        loss, grads = _stacked_grads(loss_fn, state["params"], batch, wkeys)
+        if momentum > 0.0:
+            m_new = jax.tree.map(
+                lambda m, g: ((1 - momentum) * g.astype(jnp.float32)
+                              + momentum * m.astype(jnp.float32)),
+                state["worker_m"], grads)
+            cand = m_new
+        else:
+            m_new = state["worker_m"]
+            cand = grads
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        new_state = {"params": params, "worker_m": m_new,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss,
+                           "g_norm": jnp.sqrt(tu.tree_norm_sq(g))}
+
+    def init(params):
+        return {"params": params,
+                "worker_m": tu.tree_broadcast_leading(
+                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                 params), n),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_csgd_step(cfg, loss_fn, corrupt_fn=None):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        qkeys = tu.per_worker_keys(k_q, n,
+                                   common=cfg.compressor.common_randomness)
+
+        def one(b, kg, kq):
+            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
+            return ln, tu.compress_tree(cfg.compressor, kq, g)
+
+        losses, cand = jax.vmap(one)(batch, wkeys, qkeys)
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        return ({"params": params, "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params):
+        return {"params": params, "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_diana_step(cfg, loss_fn, corrupt_fn=None, alpha=None):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_q, k_attack, k_agg = jax.random.split(key, 4)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        qkeys = tu.per_worker_keys(k_q, n,
+                                   common=cfg.compressor.common_randomness)
+        h = state["worker_h"]
+        a = state["alpha"]
+
+        def one(b, kg, kq, h_i):
+            ln, g = jax.value_and_grad(loss_fn)(state["params"], b, kg)
+            diff = tu.tree_sub(g, h_i)
+            return ln, tu.compress_tree(cfg.compressor, kq, diff)
+
+        losses, qdiff = jax.vmap(one)(batch, wkeys, qkeys, h)
+        sent = apply_attack(cfg, k_attack, qdiff)
+        agg_diff = _aggregate(cfg, k_agg, sent)
+        h_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), h)
+        g = tu.tree_add(h_mean, agg_diff)
+        h_new = jax.tree.map(lambda hh, q: hh + a * q, h, qdiff)
+        params = _sgd_update(state["params"], g, cfg.lr)
+        return ({"params": params, "worker_h": h_new, "alpha": a,
+                 "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, d_hint: int = 1):
+        omega = cfg.compressor.omega(int(d_hint))
+        a = alpha if alpha is not None else 1.0 / (1.0 + omega)
+        return {"params": params,
+                "worker_h": tu.tree_broadcast_leading(
+                    jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                                 params), n),
+                "alpha": jnp.asarray(a, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_br_mvr_step(cfg, loss_fn, corrupt_fn=None, alpha: float = 0.1):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        params, prev = state["params"], state["prev_params"]
+
+        def one(b, kg, v_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gp = jax.value_and_grad(loss_fn)(prev, b, kg)
+            v_new = jax.tree.map(
+                lambda g, vv, go: g.astype(jnp.float32)
+                + (1 - alpha) * (vv - go.astype(jnp.float32)),
+                gx, v_i, gp)
+            return ln, v_new
+
+        losses, v = jax.vmap(one)(batch, wkeys, state["worker_v"])
+        sent = apply_attack(cfg, k_attack, v)
+        g = _aggregate(cfg, k_agg, sent)
+        new_params = _sgd_update(params, g, cfg.lr)
+        return ({"params": new_params, "prev_params": params,
+                 "worker_v": v, "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, batch, key):
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        wkeys = tu.per_worker_keys(key, n)
+        _, grads = _stacked_grads(loss_fn, params, batch, wkeys)
+        v0 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return {"params": params, "prev_params": params, "worker_v": v0,
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step
+
+
+def make_byrd_svrg_step(cfg, loss_fn, corrupt_fn=None):
+    n = cfg.n_workers
+
+    def step(state, batch, anchor, key):
+        k_bern, k_grad, k_attack, k_agg = jax.random.split(key, 4)
+        c_k = jax.random.bernoulli(k_bern, cfg.p)
+        batch = _maybe_corrupt(cfg, corrupt_fn, batch)
+        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
+        wkeys = tu.per_worker_keys(k_grad, n)
+        params = state["params"]
+
+        def refresh(_):
+            _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
+            return params, fulls
+
+        def keep(_):
+            return state["snapshot"], state["worker_full"]
+
+        w, fulls = lax.cond(c_k, refresh, keep, operand=None)
+
+        def one(b, kg, full_i):
+            ln, gx = jax.value_and_grad(loss_fn)(params, b, kg)
+            _, gw = jax.value_and_grad(loss_fn)(w, b, kg)
+            v = tu.tree_add(tu.tree_sub(gx, gw), full_i)
+            return ln, v
+
+        losses, cand = jax.vmap(one)(batch, wkeys, fulls)
+        sent = apply_attack(cfg, k_attack, cand)
+        g = _aggregate(cfg, k_agg, sent)
+        new_params = _sgd_update(params, g, cfg.lr)
+        return ({"params": new_params, "snapshot": w, "worker_full": fulls,
+                 "step": state["step"] + 1},
+                {"loss": jnp.mean(losses),
+                 "g_norm": jnp.sqrt(tu.tree_norm_sq(g))})
+
+    def init(params, anchor, key):
+        anchor = _maybe_corrupt(cfg, corrupt_fn, anchor)
+        wkeys = tu.per_worker_keys(key, n)
+        _, fulls = _stacked_grads(loss_fn, params, anchor, wkeys)
+        return {"params": params, "snapshot": params, "worker_full": fulls,
+                "step": jnp.zeros((), jnp.int32)}
+
+    return init, step

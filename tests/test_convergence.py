@@ -14,6 +14,9 @@ from repro.core.baselines import make_sgd_step
 from repro.data import (corrupt_labels_logreg, init_logreg_params,
                         logreg_loss, make_logreg_data)
 
+# full-length convergence runs: minutes of wall clock -> opt-in
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 DIM = 25
 

@@ -12,6 +12,9 @@ import sys
 
 import pytest
 
+# each case spawns a fresh 8-device jax subprocess -> opt-in
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -30,6 +30,26 @@ def test_robust_agg_bucketing(n, s):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("n,s", [(5, 2), (7, 2), (9, 4), (15, 4)])
+@pytest.mark.parametrize("rule", ["mean", "median", "trimmed"])
+def test_robust_agg_bucketing_non_divisible(n, s, rule):
+    """n % bucket_size != 0: the kernel must pad the last bucket with the
+    stacked mean like aggregators._bucketize_perm (Alg. 2), not drop the
+    trailing workers."""
+    from repro.core.aggregators import _bucketize_perm, coord_median, \
+        coord_trimmed_mean
+    x = jax.random.normal(jax.random.fold_in(KEY, 13 * n + s), (n, 1500))
+    got = robust_agg(x, bucket_size=s, rule=rule, interpret=True)
+    want = ref.robust_agg_ref(x, bucket_size=s, rule=rule)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # and the oracle itself must match the real Alg. 2 implementation
+    y = _bucketize_perm(x, jnp.arange(n), s)
+    alg2 = {"mean": lambda a: jnp.mean(a, axis=0),
+            "median": coord_median,
+            "trimmed": lambda a: coord_trimmed_mean(a, 1)}[rule](y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(alg2), atol=1e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_robust_agg_dtypes(dtype):
     x = jax.random.normal(KEY, (16, 2048)).astype(dtype)
