@@ -7,68 +7,54 @@
                  b ≳ max{∛(cδm²), √m}.
 * IS vs US     — Example E.2: importance sampling reaches the target in
                  fewer rounds when 𝓛±(IS) ≪ 𝓛±(US).
-"""
-import jax
-import jax.numpy as jnp
 
-from benchmarks.common import emit, make_logreg_problem
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_method, theory)
-from repro.data import corrupt_labels_logreg, init_logreg_params
+Every knob is a ``Sweep`` axis over one base ``RunSpec`` (importance
+sampling is ``data_kwargs.sampling``); specs are emitted per row."""
+from benchmarks.common import emit, final_gap, logreg_reference
+from repro.api import RunSpec, Sweep, build
+from repro.core import theory
 
-KEY = jax.random.PRNGKey(5)
 DIM = 30
+BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
+               p=0.1, lr=0.5, attack="ALIE", aggregator="cm", bucket_size=2,
+               steps=400,
+               data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 5})
 
 
-def _final_gap(data, loss_fn, full, f_star, cfg, iters=400, sampler=None):
-    method = make_method("marina", cfg, loss_fn, corrupt_labels_logreg)
-    step = jax.jit(method.step)
-    anchor = data.stacked()
-    state = method.init(init_logreg_params(DIM), anchor, KEY)
-    k = KEY
-    for it in range(iters):
-        k, k1, k2 = jax.random.split(k, 3)
-        mb = sampler(k1) if sampler else data.sample_batches(k1, 32)
-        state, _ = step(state, mb, anchor, k2)
-    return float(loss_fn(state["params"], full)) - f_star
+def _gap(spec, full, f_star):
+    exp = build(spec)
+    return final_gap(exp, exp.run(log_every=spec.steps), full, f_star)
 
 
 def run():
-    data, loss_fn, full, f_star = make_logreg_problem(KEY, dim=DIM)
-    base = dict(n_workers=5, n_byz=1, lr=0.5,
-                aggregator=get_aggregator("cm", bucket_size=2),
-                attack=get_attack("ALIE"))
+    full, f_star = logreg_reference(build(BASE))
 
-    for p in [0.02, 0.1, 0.5]:
-        cfg = ByzVRMarinaConfig(p=p, **base)
-        gap = _final_gap(data, loss_fn, full, f_star, cfg)
-        emit(f"ablate/p{p}", 0.0, f"gap={gap:.2e}")
+    for _, spec in Sweep(BASE, {"p": (0.02, 0.1, 0.5)}).expand():
+        emit(f"ablate/p{spec.p}", 0.0, f"gap={_gap(spec, full, f_star):.2e}",
+             spec=spec)
 
-    for s in [1, 2, 4]:
-        kw = dict(base)
-        kw["aggregator"] = get_aggregator("cm", bucket_size=s)
-        cfg = ByzVRMarinaConfig(p=0.1, **kw)
-        gap = _final_gap(data, loss_fn, full, f_star, cfg)
-        emit(f"ablate/bucket{s}", 0.0, f"gap={gap:.2e}")
+    for _, spec in Sweep(BASE, {"bucket_size": (1, 2, 4)}).expand():
+        emit(f"ablate/bucket{spec.bucket_size}", 0.0,
+             f"gap={_gap(spec, full, f_star):.2e}", spec=spec)
 
-    for b in [8, 32, 128]:
-        cfg = ByzVRMarinaConfig(p=0.1, **base)
-        gap = _final_gap(data, loss_fn, full, f_star, cfg, iters=300,
-                         sampler=lambda k: data.sample_batches(k, b))
-        emit(f"ablate/batch{b}", 0.0, f"gap={gap:.2e}")
+    batch_sweep = Sweep(BASE.replace(steps=300),
+                        {"data_kwargs.batch_size": (8, 32, 128)})
+    for _, spec in batch_sweep.expand():
+        emit(f"ablate/batch{spec.data_kwargs['batch_size']}", 0.0,
+             f"gap={_gap(spec, full, f_star):.2e}", spec=spec)
 
     # importance vs uniform sampling (Example E.2)
-    probs, lbar = theory.importance_weights(data.features, 0.01)
-    pc = theory.logreg_constants(data.features, 0.01, n_workers=5)
-    cfg = ByzVRMarinaConfig(p=0.1, **base)
-    gap_us = _final_gap(data, loss_fn, full, f_star, cfg, iters=250)
-    gap_is = _final_gap(
-        data, loss_fn, full, f_star, cfg, iters=250,
-        sampler=lambda k: data.sample_batches_importance(k, 32, probs))
-    emit("ablate/sampling-uniform", 0.0,
-         f"gap={gap_us:.2e};calL={pc.calL_pm:.2f}")
-    emit("ablate/sampling-importance", 0.0,
-         f"gap={gap_is:.2e};calL={lbar:.2f}")
+    exp = build(BASE)
+    _, lbar = theory.importance_weights(exp.data.features, 0.01)
+    pc = theory.logreg_constants(exp.data.features, 0.01, n_workers=5)
+    sampling = Sweep(BASE.replace(steps=250),
+                     {"data_kwargs.sampling": ("uniform", "importance")})
+    call = {"uniform": pc.calL_pm, "importance": lbar}
+    for _, spec in sampling.expand():
+        mode = spec.data_kwargs["sampling"]
+        emit(f"ablate/sampling-{mode}", 0.0,
+             f"gap={_gap(spec, full, f_star):.2e};calL={call[mode]:.2f}",
+             spec=spec)
 
 
 if __name__ == "__main__":

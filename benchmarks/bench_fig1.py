@@ -2,48 +2,41 @@
 under 5 attacks (NA, LF, BF, ALIE, IPM), homogeneous data, 4 good + 1
 byzantine worker, with and without RandK (K = 0.1 d) compression.
 
-Emits one CSV row per (compression, aggregator, attack): the final
-optimality gap after ``iters`` rounds plus wall time per round.
+The whole grid is ONE declarative ``Sweep`` over a base ``RunSpec``; each
+emitted row carries the resolved spec JSON (experiments/bench/), so any cell
+reproduces with ``RunSpec.from_dict(artifact["spec"]).run()``.
 """
-import time
+from benchmarks.common import emit, final_gap, logreg_reference
+from repro.api import RunSpec, Sweep, build
 
-import jax
-
-from benchmarks.common import emit, make_logreg_problem
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
-from repro.data import corrupt_labels_logreg, init_logreg_params
-
-KEY = jax.random.PRNGKey(0)
-ATTACKS = ["NA", "LF", "BF", "ALIE", "IPM"]
-AGGS = [("avg", "mean", 0), ("cm", "cm", 2), ("rfa", "rfa", 2)]
 DIM = 30
+BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
+               p=0.1, lr=0.5, seed=0,
+               data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 0})
+
+GRID = {
+    "compressor_kwargs.ratio": (1.0, 0.1),          # none vs RandK(0.1d)
+    "aggregator": ("mean", "cm", "rfa"),
+    "attack": ("NA", "LF", "BF", "ALIE", "IPM"),
+}
+_AGG_LABEL = {"mean": "avg", "cm": "cm", "rfa": "rfa"}
 
 
 def run(iters=500):
-    data, loss_fn, full, f_star = make_logreg_problem(KEY, dim=DIM)
-    anchor = data.stacked()
-    for comp_name, comp in [("none", get_compressor("identity")),
-                            ("randk0.1", get_compressor("randk", ratio=0.1))]:
-        for agg_label, agg_rule, bucket in AGGS:
-            for attack in ATTACKS:
-                cfg = ByzVRMarinaConfig(
-                    n_workers=5, n_byz=1, p=0.1, lr=0.5,
-                    aggregator=get_aggregator(agg_rule, bucket_size=bucket),
-                    compressor=comp, attack=get_attack(attack))
-                step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
-                state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-                    init_logreg_params(DIM), anchor, KEY)
-                k = KEY
-                t0 = time.perf_counter()
-                for it in range(iters):
-                    k, k1, k2 = jax.random.split(k, 3)
-                    state, _ = step(state, data.sample_batches(k1, 32),
-                                    anchor, k2)
-                us = (time.perf_counter() - t0) / iters * 1e6
-                gap = float(loss_fn(state["params"], full)) - f_star
-                emit(f"fig1/{comp_name}/{agg_label}/{attack}", us,
-                     f"gap={gap:.3e}")
+    base = BASE.replace(steps=iters, compressor="randk")
+    full, f_star = logreg_reference(build(base))
+    for _, spec in Sweep(base=base, grid=GRID).expand():
+        ratio = spec.compressor_kwargs["ratio"]
+        if ratio >= 1.0:    # identity wire format, not RandK(d)
+            spec = spec.replace(compressor="identity", compressor_kwargs={})
+        if spec.aggregator == "mean":
+            spec = spec.replace(bucket_size=0)
+        exp = build(spec)
+        result = exp.run(log_every=iters)
+        gap = final_gap(exp, result, full, f_star)
+        comp_name = "none" if ratio >= 1.0 else f"randk{ratio}"
+        emit(f"fig1/{comp_name}/{_AGG_LABEL[spec.aggregator]}/{spec.attack}",
+             result.wall_s / iters * 1e6, f"gap={gap:.3e}", spec=spec)
 
 
 if __name__ == "__main__":

@@ -2,41 +2,33 @@
 optimality gap vs transmitted bits under the ALIE attack.
 
 Emits gap checkpoints as a function of cumulative uploaded bits per worker
-for Byz-VR-MARINA with and without RandK(0.1d)."""
-import jax
+for Byz-VR-MARINA with and without RandK(0.1d). Each curve is one
+``RunSpec`` driven through the shared runner (checkpoints via the runner's
+log callback; bits from the estimator's own accounting); the resolved spec
+JSON lands next to each CSV row in experiments/bench/."""
+from benchmarks.common import emit, logreg_reference
+from repro.api import RunSpec, build
 
-from benchmarks.common import emit, make_logreg_problem
-from repro.core import (ByzVRMarinaConfig, comm_bits, get_aggregator,
-                        get_attack, get_compressor, make_init, make_step)
-from repro.data import corrupt_labels_logreg, init_logreg_params
-
-KEY = jax.random.PRNGKey(2)
 DIM = 30
+BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
+               p=0.1, lr=0.5, attack="ALIE", aggregator="cm", bucket_size=2,
+               data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 2})
 
 
-def run(iters=600):
-    data, loss_fn, full, f_star = make_logreg_problem(KEY, dim=DIM)
-    anchor = data.stacked()
-    d = DIM + 1
-    for comp_name, comp in [("none", get_compressor("identity")),
-                            ("randk0.1", get_compressor("randk", ratio=0.1))]:
-        cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, p=0.1, lr=0.5,
-                                aggregator=get_aggregator("cm",
-                                                          bucket_size=2),
-                                compressor=comp, attack=get_attack("ALIE"))
-        step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
-        state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-            init_logreg_params(DIM), anchor, KEY)
-        k = KEY
-        bits = 0
-        for it in range(iters):
-            k, k1, k2 = jax.random.split(k, 3)
-            state, m = step(state, data.sample_batches(k1, 32), anchor, k2)
-            bits += comm_bits(cfg, d, bool(m["c_k"]))
-            if (it + 1) % 150 == 0:
-                gap = float(loss_fn(state["params"], full)) - f_star
-                emit(f"fig8/{comp_name}/round{it+1}", 0.0,
-                     f"bits={bits};gap={gap:.3e}")
+def run(iters=600, log_every=150):
+    full, f_star = logreg_reference(build(BASE))
+    rows = [("none", BASE.replace(steps=iters)),
+            ("randk0.1", BASE.replace(steps=iters, compressor="randk",
+                                      compressor_kwargs={"ratio": 0.1}))]
+    for comp_name, spec in rows:
+        exp = build(spec)
+
+        def probe(it, state, m, spec=spec, exp=exp):
+            gap = float(exp.loss_fn(state["params"], full)) - f_star
+            emit(f"fig8/{comp_name}/round{it + 1}", 0.0,
+                 f"bits={m['comm_bits']:.0f};gap={gap:.3e}", spec=spec)
+
+        exp.run(log_every=iters, callback=probe, callback_every=log_every)
 
 
 if __name__ == "__main__":

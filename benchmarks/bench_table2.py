@@ -3,64 +3,53 @@ optimality gap, Byz-VR-MARINA vs BR-SGDm / BR-CSGD / BR-DIANA / Byrd-SVRG,
 under the ALIE attack. Also reports uploaded bits per worker to reach the
 target (the compression win).
 
-Every contender is one ``make_method`` call — the registry is the row key,
-and per-round communication comes from the estimator's own accounting."""
-import jax
+Every contender is one ``RunSpec`` — the method name is the row key, and
+per-round communication comes from the estimator's own accounting. The
+resolved spec JSON is emitted next to each row."""
+from benchmarks.common import emit, logreg_reference
+from repro.api import RunSpec, build
 
-from benchmarks.common import emit, make_logreg_problem
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_method)
-from repro.data import corrupt_labels_logreg, init_logreg_params
-
-KEY = jax.random.PRNGKey(1)
 DIM = 30
 TARGET = 1e-3
 MAX_ROUNDS = 1200
+CHECK_EVERY = 25
+
+BASE = RunSpec(task="logreg", n_workers=5, n_byz=1, p=0.1, lr=0.5,
+               attack="ALIE", aggregator="cm", bucket_size=2,
+               steps=MAX_ROUNDS,
+               data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 1})
+
+RANDK = {"compressor": "randk", "compressor_kwargs": {"ratio": 0.1}}
+ROWS = [
+    ("byz-vr-marina", BASE.replace(method="marina")),
+    ("byz-vr-marina+randk", BASE.replace(method="marina", **RANDK)),
+    ("br-sgdm", BASE.replace(method="sgdm")),
+    ("br-csgd+randk", BASE.replace(method="csgd", **RANDK)),
+    ("br-diana+randk", BASE.replace(method="diana", **RANDK)),
+    ("byrd-svrg", BASE.replace(method="svrg", aggregator="rfa")),
+]
 
 
-def _rounds_to_target(data, loss_fn, full, f_star, state, step):
-    k = KEY
-    check = jax.jit(lambda p: loss_fn(p, full))
-    anchor = data.stacked()
-    for it in range(MAX_ROUNDS):
-        k, k1, k2 = jax.random.split(k, 3)
-        state, _ = step(state, data.sample_batches(k1, 32), anchor, k2)
-        if (it + 1) % 25 == 0:
-            if float(check(state["params"])) - f_star < TARGET:
-                return it + 1
-    return -1
+def run(max_rounds=MAX_ROUNDS):
+    full, f_star = logreg_reference(build(BASE))
+    for label, spec in ROWS:
+        spec = spec.replace(steps=max_rounds)
+        exp = build(spec)
+        hit = []
 
+        def probe(it, state, m, exp=exp, hit=hit):
+            if float(exp.loss_fn(state["params"], full)) - f_star < TARGET:
+                hit.append(it + 1)
+            return bool(hit)
 
-def run():
-    data, loss_fn, full, f_star = make_logreg_problem(KEY, dim=DIM)
-    anchor = data.stacked()
-    d = DIM + 1
-    agg = get_aggregator("cm", bucket_size=2)
-    atk = get_attack("ALIE")
-    randk = get_compressor("randk", ratio=0.1)
-
-    base = dict(n_workers=5, n_byz=1, p=0.1, lr=0.5, aggregator=agg,
-                attack=atk)
-    rows = [
-        ("byz-vr-marina", "marina", {}),
-        ("byz-vr-marina+randk", "marina", {"compressor": randk}),
-        ("br-sgdm", "sgdm", {}),
-        ("br-csgd+randk", "csgd", {"compressor": randk}),
-        ("br-diana+randk", "diana", {"compressor": randk}),
-        ("byrd-svrg", "svrg",
-         {"aggregator": get_aggregator("rfa", bucket_size=2)}),
-    ]
-    for label, method_name, cfg_kw in rows:
-        cfg = ByzVRMarinaConfig(**{**base, **cfg_kw})
-        method = make_method(method_name, cfg, loss_fn,
-                             corrupt_labels_logreg)
-        state = method.init(init_logreg_params(DIM), anchor, KEY)
-        rounds = _rounds_to_target(data, loss_fn, full, f_star, state,
-                                   jax.jit(method.step))
-        bits_per_round = method.expected_bits(d)
+        exp.run(log_every=max_rounds, callback=probe,
+                callback_every=CHECK_EVERY)
+        rounds = hit[0] if hit else -1
+        bits_per_round = exp.method.expected_bits(DIM + 1)
         bits = rounds * bits_per_round if rounds > 0 else float("inf")
         emit(f"table2/{label}", float(rounds),
-             f"rounds_to_{TARGET:g}={rounds};bits/worker={bits:.3g}")
+             f"rounds_to_{TARGET:g}={rounds};bits/worker={bits:.3g}",
+             spec=spec)
 
 
 if __name__ == "__main__":

@@ -1,69 +1,43 @@
 """System throughput: wall-clock steps/s of the full Byzantine-robust
 trainer on this host (single device; the distributed step is the same code
 jitted onto the mesh). One row per (model, method, aggregator, compressor)
-with tokens/s — every method runs through the unified round engine
-(core/engine.py), so the estimator is the only thing that varies.
+with tokens/s — every row is one ``RunSpec`` driven through the shared
+runner (warmup=True compiles before the timer starts), and the resolved
+spec JSON is emitted per row.
 """
-import time
-
-import jax
-
 from benchmarks.common import emit
-from repro.configs import get_config
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_method)
-from repro.data import TokenStream, corrupt_labels_lm
-from repro.models import init_params, loss_fn
+from repro.api import RunSpec, run as run_spec
 
-KEY = jax.random.PRNGKey(0)
+N, BW, S = 4, 2, 64
+ITERS = 8
+
+ROWS = [
+    ("marina", "mean", "identity"),
+    ("marina", "cm", "identity"),
+    ("marina", "cm", "randk"),
+    ("marina", "rfa", "identity"),
+    ("sgdm", "cm", "identity"),
+    ("csgd", "cm", "randk"),
+]
 
 
 def run():
-    n, bw, s = 4, 2, 64
     for arch in ["qwen3-1.7b", "mamba2-130m", "phi3.5-moe-42b-a6.6b"]:
-        cfg = get_config(arch).reduced()
-        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=s,
-                             n_workers=n, per_worker_batch=bw,
-                             num_codebooks=cfg.num_codebooks,
-                             frontend_tokens=cfg.frontend_tokens,
-                             d_model=cfg.d_model)
-
-        def loss(params, batch, key):
-            return loss_fn(params, cfg, batch)
-
-        for method_name, agg_name, comp_name in [
-                ("marina", "mean", "identity"),
-                ("marina", "cm", "identity"),
-                ("marina", "cm", "randk"),
-                ("marina", "rfa", "identity"),
-                ("sgdm", "cm", "identity"),
-                ("csgd", "cm", "randk")]:
-            comp = (get_compressor("randk", ratio=0.25)
-                    if comp_name == "randk" else get_compressor("identity"))
-            bcfg = ByzVRMarinaConfig(
-                n_workers=n, n_byz=1, p=0.25, lr=1e-2,
-                aggregator=get_aggregator(agg_name,
-                                          bucket_size=0 if agg_name == "mean"
-                                          else 2),
-                compressor=comp, attack=get_attack("ALIE"))
-            method = make_method(method_name, bcfg, loss, corrupt_labels_lm)
-            step = jax.jit(method.step)
-            state = method.init(init_params(KEY, cfg), stream.anchor(0), KEY)
-            # warmup (compile)
-            state, _ = step(state, stream.minibatch(0), stream.anchor(0),
-                            KEY)
-            jax.block_until_ready(state["g"])
-            iters = 8
-            t0 = time.perf_counter()
-            for it in range(iters):
-                state, m = step(state, stream.minibatch(it),
-                                stream.anchor(it),
-                                jax.random.fold_in(KEY, it))
-            jax.block_until_ready(state["g"])
-            dt = (time.perf_counter() - t0) / iters
-            toks = n * bw * s
-            emit(f"trainer/{arch}/{method_name}/{agg_name}+{comp_name}",
-                 dt * 1e6, f"tokens_per_s={toks/dt:.0f}")
+        for method, agg, comp in ROWS:
+            spec = RunSpec(
+                task="lm", arch=arch, method=method,
+                n_workers=N, n_byz=1, p=0.25, lr=1e-2, attack="ALIE",
+                aggregator=agg, bucket_size=0 if agg == "mean" else 2,
+                compressor=comp,
+                compressor_kwargs={"ratio": 0.25} if comp == "randk" else {},
+                steps=ITERS, seed=0,
+                data_kwargs={"reduced": True, "seq_len": S,
+                             "per_worker_batch": BW})
+            result = run_spec(spec, log_every=ITERS, warmup=True)
+            dt = result.wall_s / ITERS
+            toks = N * BW * S
+            emit(f"trainer/{arch}/{method}/{agg}+{comp}", dt * 1e6,
+                 f"tokens_per_s={toks/dt:.0f}", spec=spec)
 
 
 if __name__ == "__main__":

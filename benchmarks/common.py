@@ -1,8 +1,19 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+``emit(name, us, derived, spec=...)`` prints the CSV row every suite always
+printed AND, when given the ``RunSpec`` that produced the number, writes
+``{name, us, derived, spec}`` JSON under ``experiments/bench/`` (override
+with BENCH_ART_DIR) — so every benchmark trajectory is reproducible from its
+artifact alone: ``RunSpec.from_dict(json.load(f)["spec"]).run()``.
+"""
+import json
+import os
 import time
 
 import jax
-import jax.numpy as jnp
+
+
+ART_DIR = os.environ.get("BENCH_ART_DIR", "experiments/bench")
 
 
 def time_fn(fn, *args, warmup=2, iters=10):
@@ -16,20 +27,25 @@ def time_fn(fn, *args, warmup=2, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
-def emit(name, us, derived=""):
+def emit(name, us, derived="", spec=None):
     print(f"{name},{us:.1f},{derived}")
+    if spec is not None:
+        path = os.path.join(ART_DIR, name.replace("/", "__") + ".json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"name": name, "us": us, "derived": derived,
+                       "spec": spec.to_dict()}, f, indent=1)
 
 
-def make_logreg_problem(key, *, dim=30, n_samples=400, n_workers=5,
-                        homogeneous=True, lam=0.01):
-    from repro.data import make_logreg_data, logreg_loss, init_logreg_params
-    data = make_logreg_data(key, n_samples=n_samples, dim=dim,
-                            n_workers=n_workers, homogeneous=homogeneous)
-    loss_fn = logreg_loss(lam)
-    full = {"x": data.features, "y": data.labels}
-    p = init_logreg_params(dim)
-    gd = jax.jit(lambda q: jax.tree.map(
-        lambda a, g: a - 0.5 * g, q, jax.grad(loss_fn)(q, full)))
-    for _ in range(2500):
-        p = gd(p)
-    return data, loss_fn, full, float(loss_fn(p, full))
+def logreg_reference(exp, *, gd_iters=2500, gd_lr=0.5):
+    """(full_batch, f_star) for a spec-built logreg Experiment: the exact-GD
+    optimum on the pooled dataset, shared by every cell of a sweep."""
+    from repro.data import logreg_reference as _reference
+    full = {"x": exp.data.features, "y": exp.data.labels}
+    _, f_star = _reference(exp.loss_fn, full, iters=gd_iters, lr=gd_lr)
+    return full, f_star
+
+
+def final_gap(exp, result, full, f_star):
+    """Optimality gap of a RunResult against the shared reference."""
+    return float(exp.loss_fn(result.params, full)) - f_star

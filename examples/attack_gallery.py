@@ -2,6 +2,9 @@
 without compression, printed as the paper's grid. Feeds EXPERIMENTS.md
 §Paper-validation.
 
+The grid is one ``Sweep`` over a base ``RunSpec`` — the same declarative
+object benchmarks/bench_fig1.py emits as its reproducibility artifact.
+
   PYTHONPATH=src python examples/attack_gallery.py [--iters 600]
 """
 import argparse
@@ -9,12 +12,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, make_init, make_step)
-from repro.data import (corrupt_labels_logreg, init_logreg_params,
-                        logreg_loss, make_logreg_data)
+from repro.api import RunSpec, Sweep, build
+from repro.data import logreg_reference
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--iters", type=int, default=600)
@@ -24,44 +23,33 @@ ap.add_argument("--heterogeneous", action="store_true")
 args = ap.parse_args()
 
 DIM = 30
-key = jax.random.PRNGKey(0)
-data = make_logreg_data(key, n_samples=600, dim=DIM,
-                        n_workers=args.n_workers,
-                        homogeneous=not args.heterogeneous)
-loss_fn = logreg_loss(0.01)
-full = {"x": data.features, "y": data.labels}
-p_star = init_logreg_params(DIM)
-gd = jax.jit(lambda p: jax.tree.map(
-    lambda a, g: a - 0.5 * g, p, jax.grad(loss_fn)(p, full)))
-for _ in range(3000):
-    p_star = gd(p_star)
-f_star = float(loss_fn(p_star, full))
+BASE = RunSpec(
+    task="logreg", method="marina", n_workers=args.n_workers,
+    n_byz=args.n_byz, p=0.1, lr=0.5, steps=args.iters,
+    data_kwargs={"n_samples": 600, "dim": DIM,
+                 "homogeneous": not args.heterogeneous})
 
-ATTACKS = ["NA", "LF", "BF", "ALIE", "IPM"]
+exp0 = build(BASE)
+full = {"x": exp0.data.features, "y": exp0.data.labels}
+_, f_star = logreg_reference(exp0.loss_fn, full, iters=3000)
+
+ATTACKS = ("NA", "LF", "BF", "ALIE", "IPM")
 AGGS = [("AVG", "mean", 0), ("CM", "cm", 2), ("RFA", "rfa", 2)]
 
-for comp_name, comp in [("no compression", get_compressor("identity")),
-                        ("RandK K=0.1d", get_compressor("randk", ratio=0.1))]:
+for comp_name, comp_spec in [
+        ("no compression", {}),
+        ("RandK K=0.1d", {"compressor": "randk",
+                          "compressor_kwargs": {"ratio": 0.1}})]:
     print(f"\n=== Byz-VR-MARINA, {comp_name} "
           f"({args.n_workers} workers, {args.n_byz} byzantine) ===")
     print(f"{'agg':>5} | " + " | ".join(f"{a:>9}" for a in ATTACKS))
     for label, rule, bucket in AGGS:
+        base = BASE.replace(aggregator=rule, bucket_size=bucket, **comp_spec)
         row = []
-        for attack in ATTACKS:
-            cfg = ByzVRMarinaConfig(
-                n_workers=args.n_workers, n_byz=args.n_byz, p=0.1, lr=0.5,
-                aggregator=get_aggregator(rule, bucket_size=bucket),
-                compressor=comp, attack=get_attack(attack))
-            step = jax.jit(make_step(cfg, loss_fn, corrupt_labels_logreg))
-            anchor = data.stacked()
-            state = make_init(cfg, loss_fn, corrupt_labels_logreg)(
-                init_logreg_params(DIM), anchor, key)
-            k = jax.random.PRNGKey(1)
-            for it in range(args.iters):
-                k, k1, k2 = jax.random.split(k, 3)
-                state, _ = step(state, data.sample_batches(k1, 32), anchor,
-                                k2)
-            gap = float(loss_fn(state["params"], full)) - f_star
+        for _, spec in Sweep(base, {"attack": ATTACKS}).expand():
+            exp = build(spec)
+            result = exp.run(log_every=args.iters)
+            gap = float(exp.loss_fn(result.params, full)) - f_star
             row.append(f"{gap:9.1e}")
         print(f"{label:>5} | " + " | ".join(row))
 print("\n(cells = final optimality gap f(x)-f*; the paper's Fig. 1 pattern: "

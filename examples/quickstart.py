@@ -1,10 +1,11 @@
-"""Quickstart: Byzantine-robust training in ~40 lines (paper Fig. 1 setup).
+"""Quickstart: Byzantine-robust training in ~30 lines (paper Fig. 1 setup).
 
 Four good workers + one Byzantine running the ALIE attack on ℓ2-regularized
-logistic regression. Byz-VR-MARINA with CM∘bucketing converges linearly to
-the optimum; try --agg mean to watch plain averaging get poisoned, or
---method sgdm/csgd/diana/mvr/svrg to race any baseline estimator through
-the same round engine.
+logistic regression. The whole experiment is ONE declarative ``RunSpec``:
+Byz-VR-MARINA with CM∘bucketing converges linearly to the optimum; try
+--agg mean to watch plain averaging get poisoned, or --method
+sgdm/csgd/diana/mvr/svrg to race any baseline estimator through the same
+round engine.
 
   PYTHONPATH=src python examples/quickstart.py [--attack ALIE] [--agg cm]
 """
@@ -13,59 +14,45 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, list_methods, make_method)
-from repro.data import (corrupt_labels_logreg, init_logreg_params,
-                        logreg_loss, make_logreg_data)
+from repro.api import RunSpec, build, components
+from repro.data import logreg_reference
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--method", default="marina", choices=list_methods())
-ap.add_argument("--attack", default="ALIE",
-                choices=["NA", "LF", "BF", "ALIE", "IPM"])
-ap.add_argument("--agg", default="cm", choices=["mean", "cm", "rfa", "krum"])
+ap.add_argument("--method", default="marina", choices=components("method"))
+ap.add_argument("--attack", default="ALIE", choices=components("attack"))
+ap.add_argument("--agg", default="cm", choices=components("aggregator"))
 ap.add_argument("--randk", type=float, default=0.1,
                 help="RandK ratio (1.0 = no compression)")
 ap.add_argument("--iters", type=int, default=600)
 args = ap.parse_args()
 
-key = jax.random.PRNGKey(0)
-data = make_logreg_data(key, n_samples=500, dim=30, n_workers=5)
-loss_fn = logreg_loss(lam=0.01)
+spec = RunSpec(
+    task="logreg", method=args.method, n_workers=5, n_byz=1,
+    p=0.1, lr=0.5, attack=args.attack,
+    aggregator=args.agg, bucket_size=0 if args.agg == "mean" else 2,
+    compressor="randk" if args.randk < 1 else "identity",
+    compressor_kwargs={"ratio": args.randk} if args.randk < 1 else {},
+    steps=args.iters,
+    data_kwargs={"n_samples": 500, "dim": 30})
 
-# reference optimum f* (exact GD)
-full = {"x": data.features, "y": data.labels}
-p_star = init_logreg_params(30)
-gd = jax.jit(lambda p: jax.tree.map(
-    lambda a, g: a - 0.5 * g, p, jax.grad(loss_fn)(p, full)))
-for _ in range(3000):
-    p_star = gd(p_star)
-f_star = float(loss_fn(p_star, full))
+exp = build(spec)
 
-cfg = ByzVRMarinaConfig(
-    n_workers=5, n_byz=1, p=0.1, lr=0.5,
-    aggregator=get_aggregator(args.agg,
-                              bucket_size=0 if args.agg == "mean" else 2),
-    compressor=(get_compressor("randk", ratio=args.randk)
-                if args.randk < 1 else get_compressor("identity")),
-    attack=get_attack(args.attack))
+# reference optimum f* (exact GD on the pooled data)
+full = {"x": exp.data.features, "y": exp.data.labels}
+_, f_star = logreg_reference(exp.loss_fn, full, iters=3000)
 
-method = make_method(args.method, cfg, loss_fn, corrupt_labels_logreg)
-step = jax.jit(method.step)
-anchor = data.stacked()
-state = method.init(init_logreg_params(30), anchor, key)
+print(f"method={spec.method} attack={spec.attack} "
+      f"aggregator={exp.cfg.aggregator.name} "
+      f"compressor={exp.cfg.compressor.name}  f*={f_star:.6f}")
 
-print(f"method={args.method} attack={args.attack} "
-      f"aggregator={cfg.aggregator.name} "
-      f"compressor={cfg.compressor.name}  f*={f_star:.6f}")
-k = jax.random.PRNGKey(42)
-for it in range(args.iters):
-    k, k1, k2 = jax.random.split(k, 3)
-    state, m = step(state, data.sample_batches(k1, 32), anchor, k2)
-    if (it + 1) % 100 == 0:
-        gap = float(loss_fn(state["params"], full)) - f_star
-        print(f"  round {it+1:4d}  f(x)-f* = {gap:.3e}")
+
+def report(it, state, m):
+    gap = float(exp.loss_fn(state["params"], full)) - f_star
+    print(f"  round {it+1:4d}  f(x)-f* = {gap:.3e}")
+
+
+result = exp.run(log_every=args.iters, callback=report, callback_every=100)
+final_gap = float(exp.loss_fn(result.params, full)) - f_star
 print("done — linear convergence to f* despite the Byzantine worker"
-      if float(loss_fn(state['params'], full)) - f_star < 1e-4 else
+      if final_gap < 1e-4 else
       "done — did NOT reach f* (expected for --agg mean under attack)")

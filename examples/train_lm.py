@@ -2,67 +2,42 @@
 technique at framework scale) for a few hundred Byzantine-robust steps.
 
 8 simulated workers, 2 Byzantine running IPM, CM∘bucketing aggregation,
-RandK(25%) compression. On this CPU container a 130M model steps slowly;
---small swaps in a ~7M variant so the example finishes in ~a minute.
+RandK(25%) compression — all declared in one ``RunSpec`` and driven by the
+shared runner (the same loop launch/train.py uses). On this CPU container a
+130M model steps slowly; --small swaps in a ~7M variant so the example
+finishes in ~a minute.
 
   PYTHONPATH=src python examples/train_lm.py --steps 300 [--small]
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
-import jax
-
-from repro.configs import get_config
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, list_methods, make_method)
-from repro.data import TokenStream, corrupt_labels_lm
-from repro.models import init_params, loss_fn as model_loss
+from repro.api import RunSpec, build, components
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)
 ap.add_argument("--small", action="store_true",
                 help="reduced config (CI-speed)")
 ap.add_argument("--seq-len", type=int, default=128)
-ap.add_argument("--attack", default="IPM")
-ap.add_argument("--method", default="marina", choices=list_methods())
+ap.add_argument("--attack", default="IPM", choices=components("attack"))
+ap.add_argument("--method", default="marina", choices=components("method"))
 args = ap.parse_args()
 
-cfg = get_config("mamba2-130m")
-if args.small:
-    cfg = cfg.reduced()
-n_workers, n_byz = 8, 2
-stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                     n_workers=n_workers, per_worker_batch=2)
+spec = RunSpec(
+    task="lm", arch="mamba2-130m", method=args.method,
+    n_workers=8, n_byz=2, p=0.125, lr=5e-3, attack=args.attack,
+    aggregator="cm", bucket_size=2,
+    compressor="randk", compressor_kwargs={"ratio": 0.25},
+    steps=args.steps,
+    data_kwargs={"reduced": args.small, "seq_len": args.seq_len,
+                 "per_worker_batch": 2})
 
-bcfg = ByzVRMarinaConfig(
-    n_workers=n_workers, n_byz=n_byz, p=0.125, lr=5e-3,
-    aggregator=get_aggregator("cm", bucket_size=2),
-    compressor=get_compressor("randk", ratio=0.25),
-    attack=get_attack(args.attack))
-
-
-def loss(params, batch, key):
-    return model_loss(params, cfg, batch)
-
-
-key = jax.random.PRNGKey(0)
-params = init_params(key, cfg)
-n_params = sum(x.size for x in jax.tree.leaves(params))
-print(f"mamba2 {n_params/1e6:.1f}M params | method={args.method} | "
-      f"{n_workers} workers ({n_byz} byzantine, {args.attack}) | "
+exp = build(spec)
+n_params = exp.arch_cfg.param_count()
+print(f"mamba2 ~{n_params/1e6:.1f}M params | method={spec.method} | "
+      f"{spec.n_workers} workers ({spec.n_byz} byzantine, {spec.attack}) | "
       f"CM∘bucketing + RandK(0.25)")
-
-method = make_method(args.method, bcfg, loss, corrupt_labels_lm)
-state = method.init(params, stream.anchor(0), key)
-step = jax.jit(method.step)
-t0 = time.time()
-for it in range(args.steps):
-    state, m = step(state, stream.minibatch(it), stream.anchor(it),
-                    jax.random.fold_in(key, it))
-    if it % 20 == 0 or it == args.steps - 1:
-        print(f"  step {it:4d}  loss {float(m['loss']):.4f} "
-              f"|g| {float(m['g_norm']):.3e}  ({time.time()-t0:.0f}s)")
+exp.run(log_every=20, verbose=True)
 print("done")

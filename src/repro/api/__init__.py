@@ -1,0 +1,19 @@
+"""Declarative experiment API (DESIGN.md §1.5).
+
+One serializable ``RunSpec`` describes any method x attack x backend
+experiment; ``build``/``run`` assemble and drive it through the unified
+round engine, ``Sweep`` expands grids, and ``registry`` enumerates every
+pluggable component from one source of truth.
+
+    from repro.api import RunSpec, run
+    result = run(RunSpec(task="logreg", method="marina", attack="ALIE",
+                         aggregator="cm", steps=300))
+"""
+from repro.api.registry import (  # noqa: F401
+    check, components, describe, kinds, resolve,
+)
+from repro.api.spec import RunSpec, resolve_agg_mode  # noqa: F401
+from repro.api.runner import (  # noqa: F401
+    Experiment, RunResult, build, run,
+)
+from repro.api.sweep import Sweep, run_sweep  # noqa: F401

@@ -1,0 +1,208 @@
+"""One namespaced component registry (DESIGN.md §1.5).
+
+Before this layer, five ad-hoc registries lived in five modules (estimator
+factories, attack factories, aggregator rules, compressor factories,
+optimizer classes) plus the arch-config registry — and every CLI hard-coded
+its own ``choices=[...]`` subset, which is how ``--agg-mode`` drifted out of
+sync with ``engine.AGG_BACKENDS``. This module folds them into ONE namespaced
+view so CLIs, docs, and ``RunSpec`` validation all enumerate from the same
+source of truth:
+
+    components("method")            -> ("csgd", "diana", ..., "svrg")
+    describe("attack", "ALIE")      -> one-line summary
+    resolve("compressor", "randk", ratio=0.1) -> Compressor instance
+    check("aggregator", "krun")     -> ValueError: ... did you mean 'krum'?
+
+The underlying per-module registries remain the single owners of their
+entries (this module only *references* them), so registering a new estimator
+in ``core/estimators.py`` or a new arch config automatically shows up here.
+"""
+from __future__ import annotations
+
+import difflib
+from typing import Any, Optional
+
+from repro.configs import get_config, list_configs
+from repro.core import aggregators as _aggregators
+from repro.core import attacks as _attacks
+from repro.core import compressors as _compressors
+from repro.core.engine import AGG_BACKENDS
+from repro.optim import optimizers as _optimizers
+
+
+# ---------------------------------------------------------------------------
+# per-kind descriptions (the factories' own docstrings are multi-paragraph;
+# these are the one-liners surfaced by `describe` / CLI help)
+# ---------------------------------------------------------------------------
+
+_METHOD_DESCRIPTIONS = {
+    "marina": "Byz-VR-MARINA (Alg. 1): geometric coin between anchor "
+              "full-gradients and compressed SARAH differences",
+    "sgd": "Parallel-SGD with (robust) averaging (Zinkevich et al. 2010)",
+    "sgdm": "BR-SGDm: worker momenta attacked & aggregated "
+            "(Karimireddy et al. 2021/22)",
+    "csgd": "compressed SGD; with a robust aggregator = BR-CSGD",
+    "diana": "BR-DIANA: worker shifts h_i, uploads Q(g_i - h_i) "
+             "(Mishchenko et al. 2019)",
+    "mvr": "BR-MVR / STORM momentum variance reduction "
+           "(Karimireddy et al. 2021)",
+    "svrg": "Byrd-SVRG: loopless SVRG + robust aggregation "
+            "(App. B.4, Wu et al. 2020)",
+}
+
+_ATTACK_DESCRIPTIONS = {
+    "NA": "no attack (clean training)",
+    "LF": "label flipping (data-level; update hook is identity)",
+    "BF": "bit flipping: send -honest",
+    "ALIE": "A Little Is Enough: mean - z*std (Baruch et al. 2019)",
+    "IPM": "inner-product manipulation: -eps*mean (Xie et al. 2020)",
+    "RN": "random gaussian noise",
+}
+
+_AGGREGATOR_DESCRIPTIONS = {
+    "mean": "plain averaging (not robust; the paper's AVG row)",
+    "cm": "coordinate-wise median (c=O(d), delta<1/2 with bucketing)",
+    "tm": "coordinate-wise trimmed mean",
+    "rfa": "geometric median via smoothed Weiszfeld (c=O(1), delta<1/2)",
+    "krum": "Krum selection rule (c=O(1), delta<1/4 with bucketing)",
+}
+
+_COMPRESSOR_DESCRIPTIONS = {
+    "identity": "no compression (32d bits per vector)",
+    "randk": "RandK sparsification, omega = d/K - 1 "
+             "(block selection above 2^22 units)",
+    "dither": "l2 random dithering / QSGD-style quantization "
+              "(Alistarh et al. 2017)",
+    "natural": "natural compression: stochastic power-of-two rounding, "
+               "omega = 1/8",
+    "sign": "sign(x)*||x||_1/d (BIASED; signSGD baselines only)",
+}
+
+_OPTIMIZER_DESCRIPTIONS = {
+    "none": "plain x <- x - lr*g (the paper's Alg. 1 update)",
+    "sgd": "SGD with optional momentum / weight decay on top of the "
+           "robust estimator",
+    "adam": "Adam(W) on top of the robust estimator",
+}
+
+_AGG_MODE_DESCRIPTIONS = {
+    "gspmd": "paper-faithful jnp over the stacked worker axis "
+             "(GSPMD all-gather on a mesh)",
+    "all_to_all": "shard_map sharded aggregation: ~2x d_local collective "
+                  "bytes, O(n) less memory (coordinate-wise rules only)",
+    "sparse_support": "common-randomness RandK: attack + aggregate only the "
+                      "shared K-coordinate support (marina)",
+    "pallas": "fused one-HBM-sweep kernel over the flattened candidate "
+              "pytree (RFA/Krum fall back to jnp)",
+}
+
+_TASK_DESCRIPTIONS = {
+    "logreg": "l2-regularized logistic regression on synthetic a9a-like "
+              "data (the paper's own experiments)",
+    "lm": "synthetic-token LM training on a registered arch config "
+          "(framework scale)",
+}
+
+TASKS = tuple(sorted(_TASK_DESCRIPTIONS))
+OPTIMIZER_CHOICES = ("none",) + tuple(sorted(_optimizers.OPTIMIZERS))
+
+
+# ---------------------------------------------------------------------------
+# kind table: name -> (component enumerator, describe fn, resolver)
+# ---------------------------------------------------------------------------
+
+def _method_names():
+    from repro.core.estimators import ESTIMATORS
+    return tuple(sorted(ESTIMATORS))
+
+
+def _resolve_method(name, **kw):
+    """Methods are (cfg, loss_fn)-bound; resolve returns the estimator
+    factory — use ``engine.make_method`` / ``RunSpec.method_kwargs`` to
+    configure one, so estimator knobs can't be dropped silently here."""
+    if kw:
+        raise TypeError(
+            f"resolve('method', {name!r}, ...) takes no kwargs — estimator "
+            "knobs go through make_method(...) or RunSpec.method_kwargs; "
+            f"got {sorted(kw)}")
+    from repro.core.estimators import ESTIMATORS
+    return ESTIMATORS[name]
+
+
+_KINDS = {
+    "method": (_method_names,
+               lambda n: _METHOD_DESCRIPTIONS.get(n, ""),
+               _resolve_method),
+    "attack": (lambda: tuple(sorted(_attacks.REGISTRY)),
+               lambda n: _ATTACK_DESCRIPTIONS.get(n, ""),
+               lambda n, **kw: _attacks.get_attack(n, **kw)),
+    "aggregator": (lambda: tuple(sorted(_aggregators.RULES)),
+                   lambda n: _AGGREGATOR_DESCRIPTIONS.get(n, ""),
+                   lambda n, **kw: _aggregators.get_aggregator(n, **kw)),
+    "compressor": (lambda: tuple(sorted(_compressors.REGISTRY)),
+                   lambda n: _COMPRESSOR_DESCRIPTIONS.get(n, ""),
+                   lambda n, **kw: _compressors.get_compressor(n, **kw)),
+    "optimizer": (lambda: OPTIMIZER_CHOICES,
+                  lambda n: _OPTIMIZER_DESCRIPTIONS.get(n, ""),
+                  lambda n, **kw: (None if n == "none"
+                                   else _optimizers.get_optimizer(n, **kw))),
+    "agg_mode": (lambda: tuple(AGG_BACKENDS),
+                 lambda n: _AGG_MODE_DESCRIPTIONS.get(n, ""),
+                 lambda n, **kw: n),
+    "arch": (lambda: tuple(list_configs()),
+             lambda n: (lambda c: f"{c.family}: {c.citation}")(get_config(n)),
+             lambda n, **kw: get_config(n)),
+    "task": (lambda: TASKS,
+             lambda n: _TASK_DESCRIPTIONS.get(n, ""),
+             lambda n, **kw: n),
+}
+
+
+def kinds() -> tuple:
+    """All registered component namespaces."""
+    return tuple(sorted(_KINDS))
+
+
+def components(kind: str) -> tuple:
+    """Registered names under ``kind``, sorted."""
+    _check_kind(kind)
+    return _KINDS[kind][0]()
+
+
+def describe(kind: str, name: Optional[str] = None):
+    """One-line summary of ``name``, or {name: summary} for the whole kind."""
+    _check_kind(kind)
+    if name is None:
+        return {n: _KINDS[kind][1](n) for n in components(kind)}
+    check(kind, name)
+    return _KINDS[kind][1](name)
+
+
+def check(kind: str, name: str) -> str:
+    """Validate ``name`` is registered under ``kind``; raise a did-you-mean
+    ValueError otherwise. Returns the name so it composes in expressions."""
+    _check_kind(kind)
+    known = components(kind)
+    if name not in known:
+        raise ValueError(_unknown(kind, name, known))
+    return name
+
+
+def resolve(kind: str, name: str, **kwargs) -> Any:
+    """Build the named component (e.g. a Compressor instance)."""
+    check(kind, name)
+    return _KINDS[kind][2](name, **kwargs)
+
+
+def _check_kind(kind: str) -> None:
+    if kind not in _KINDS:
+        raise ValueError(_unknown("registry kind", kind, sorted(_KINDS)))
+
+
+def _unknown(kind: str, name, known) -> str:
+    msg = f"unknown {kind} {name!r}; registered: {', '.join(known)}"
+    close = difflib.get_close_matches(str(name), [str(k) for k in known],
+                                      n=1, cutoff=0.6)
+    if close:
+        msg += f" — did you mean {close[0]!r}?"
+    return msg

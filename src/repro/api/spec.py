@@ -1,0 +1,242 @@
+"""``RunSpec`` — one frozen, serializable description of an experiment.
+
+The paper's experimental claim is a grid (methods x attacks x aggregators,
+with and without compression), and before this layer every benchmark/example
+hand-assembled its own ``ByzVRMarinaConfig`` + registry lookups. A ``RunSpec``
+is the declarative alternative: every component is named by its registry
+string plus a JSON-scalar kwargs dict, so a spec
+
+  * validates eagerly at construction (registry membership with did-you-mean
+    suggestions, ``agg_mode`` in ``AGG_BACKENDS``, ``p`` in (0,1], the
+    delta < 1/2 byzantine bound — before any jit tracing);
+  * round-trips exactly through ``to_dict``/``from_dict``/``to_json``, so
+    benchmarks can emit the resolved spec next to each result file and any
+    trajectory is reproducible from artifacts alone;
+  * builds the full experiment: ``spec.build_config()`` -> ByzVRMarinaConfig,
+    ``spec.build()`` -> Experiment (method + stream + loss + corrupt_fn),
+    ``spec.run()`` -> metrics via the shared training loop (api/runner.py).
+
+Grid expansion over any spec fields is ``api.sweep.Sweep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Optional
+
+from repro.api import registry
+from repro.core.engine import AGG_BACKENDS
+
+
+SCHEMA_VERSION = 1
+
+_KWARGS_FIELDS = ("method_kwargs", "attack_kwargs", "aggregator_kwargs",
+                  "compressor_kwargs", "optimizer_kwargs", "data_kwargs")
+
+
+def resolve_agg_mode(mode: str) -> str:
+    """CLI convenience: "auto" -> the fused Pallas kernel path on real TPU
+    backends, the paper-faithful gspmd path elsewhere (interpret-mode pallas
+    would only slow a CPU host). Specs always store the resolved mode."""
+    if mode != "auto":
+        return mode
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "gspmd"
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Declarative experiment description; every field is a JSON scalar or a
+    JSON-scalar dict, validated eagerly in ``__post_init__``."""
+
+    # task / model
+    task: str = "logreg"                 # registry "task": logreg | lm
+    arch: Optional[str] = None           # registry "arch" (lm task)
+    # gradient estimator (registry "method")
+    method: str = "marina"
+    # byzantine setup
+    n_workers: int = 5
+    n_byz: int = 1
+    attack: str = "ALIE"                 # registry "attack"
+    # robust aggregation
+    aggregator: str = "cm"               # registry "aggregator"
+    bucket_size: int = 2                 # Alg. 2 bucketing (0/1 = off)
+    agg_mode: str = "gspmd"              # engine.AGG_BACKENDS
+    # compression
+    compressor: str = "identity"         # registry "compressor"
+    # optimization
+    p: float = 0.1                       # full-gradient probability
+    lr: float = 0.5
+    optimizer: str = "none"              # registry "optimizer"
+    # schedule
+    steps: int = 100
+    seed: int = 0
+    # per-component kwargs (JSON scalars only)
+    method_kwargs: dict = dataclasses.field(default_factory=dict)
+    attack_kwargs: dict = dataclasses.field(default_factory=dict)
+    aggregator_kwargs: dict = dataclasses.field(default_factory=dict)
+    compressor_kwargs: dict = dataclasses.field(default_factory=dict)
+    optimizer_kwargs: dict = dataclasses.field(default_factory=dict)
+    data_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    # -- validation ---------------------------------------------------------
+    def __post_init__(self):
+        registry.check("task", self.task)
+        registry.check("method", self.method)
+        registry.check("attack", self.attack)
+        registry.check("aggregator", self.aggregator)
+        registry.check("compressor", self.compressor)
+        registry.check("optimizer", self.optimizer)
+        if self.arch is not None:
+            registry.check("arch", self.arch)
+        if self.agg_mode not in AGG_BACKENDS:
+            hint = (" — pass 'auto' through api.spec.resolve_agg_mode() "
+                    "first" if self.agg_mode == "auto" else "")
+            raise ValueError(
+                f"agg_mode {self.agg_mode!r} not in {AGG_BACKENDS}{hint}")
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(
+                f"p={self.p} must be in (0, 1] (full-gradient probability)")
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers={self.n_workers} must be >= 1")
+        if self.n_byz < 0:
+            raise ValueError(f"n_byz={self.n_byz} must be >= 0")
+        if 2 * self.n_byz >= self.n_workers:
+            raise ValueError(
+                f"n_byz={self.n_byz} of n_workers={self.n_workers} gives "
+                f"delta={self.n_byz / self.n_workers:.2f} >= 1/2 — no "
+                "(delta,c)-robust aggregator exists; reduce n_byz or add "
+                "workers")
+        s = max(self.bucket_size, 1)
+        if (self.aggregator != "mean" and s > 1
+                and 2 * self.n_byz * s >= self.n_workers):
+            warnings.warn(
+                f"after bucketing (s={s}) the byzantine fraction is "
+                f"{self.n_byz * s / self.n_workers:.2f} >= 1/2: Def. 2.1's "
+                "guarantee is void and convergence is only to the "
+                "heterogeneity floor; reduce bucket_size or n_byz",
+                stacklevel=2)
+        if self.bucket_size < 0:
+            raise ValueError(f"bucket_size={self.bucket_size} must be >= 0")
+        if self.steps < 0:
+            raise ValueError(f"steps={self.steps} must be >= 0")
+        if self.task == "lm" and self.arch is None:
+            raise ValueError(
+                "task='lm' needs arch=<name>; registered: "
+                + ", ".join(registry.components("arch")))
+        if self.method == "marina" and self.agg_mode == "sparse_support":
+            if (self.compressor != "randk"
+                    or not self.compressor_kwargs.get("common_randomness")):
+                raise ValueError(
+                    "agg_mode='sparse_support' needs compressor='randk' with "
+                    "compressor_kwargs={'ratio': ..., "
+                    "'common_randomness': True} so all workers share the "
+                    f"per-step support; got compressor={self.compressor!r} "
+                    f"kwargs={self.compressor_kwargs}")
+        for fname in _KWARGS_FIELDS:
+            val = getattr(self, fname)
+            if not isinstance(val, dict):
+                raise TypeError(f"{fname} must be a dict, got {type(val)}")
+            try:
+                ok = json.loads(json.dumps(val)) == val
+            except (TypeError, ValueError):
+                ok = False
+            if not ok:
+                raise ValueError(
+                    f"{fname}={val!r} must round-trip through JSON exactly "
+                    "(plain str/int/float/bool/None scalars, lists, dicts) "
+                    "so the spec stays a serializable artifact")
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain-JSON dict in field order; exact ``from_dict`` inverse."""
+        out = {"schema_version": SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = dict(v) if isinstance(v, dict) else v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunSpec":
+        d = dict(d)
+        version = d.pop("schema_version", SCHEMA_VERSION)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"spec schema_version {version} != {SCHEMA_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            import difflib
+            hints = []
+            for k in sorted(unknown):
+                close = difflib.get_close_matches(k, sorted(known), n=1)
+                hints.append(f"{k!r}"
+                             + (f" (did you mean {close[0]!r}?)"
+                                if close else ""))
+            raise ValueError("unknown RunSpec field(s): " + ", ".join(hints))
+        return cls(**d)
+
+    def to_json(self, **dumps_kw) -> str:
+        dumps_kw.setdefault("indent", 1)
+        return json.dumps(self.to_dict(), **dumps_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **updates) -> "RunSpec":
+        """``dataclasses.replace`` plus dotted-key merges into the kwargs
+        dicts: ``spec.replace(**{"compressor_kwargs.ratio": 0.1})``."""
+        merged: dict = {}
+        for key, val in updates.items():
+            if "." in key:
+                parent, sub = key.split(".", 1)
+                if parent not in _KWARGS_FIELDS:
+                    raise ValueError(
+                        f"dotted override {key!r}: {parent!r} is not one of "
+                        f"{_KWARGS_FIELDS}")
+                base = merged.get(parent, dict(getattr(self, parent)))
+                base[sub] = val
+                merged[parent] = base
+            else:
+                merged[key] = val
+        return dataclasses.replace(self, **merged)
+
+    # -- builders -----------------------------------------------------------
+    def build_config(self):
+        """Resolve the named components into a ``ByzVRMarinaConfig`` (the
+        engine-facing config; distributed extras like mesh/grad_specs are
+        added by the caller via ``dataclasses.replace``)."""
+        from repro.core.byz_vr_marina import ByzVRMarinaConfig
+        agg_kw = {"n_byz": self.n_byz, **self.aggregator_kwargs}
+        if self.aggregator == "mean":
+            agg_kw.pop("n_byz")          # mean ignores it; keep cfg minimal
+        opt_kw = {"lr": self.lr, **self.optimizer_kwargs}
+        return ByzVRMarinaConfig(
+            n_workers=self.n_workers,
+            n_byz=self.n_byz,
+            p=self.p,
+            lr=self.lr,
+            aggregator=registry.resolve("aggregator", self.aggregator,
+                                        bucket_size=self.bucket_size,
+                                        **agg_kw),
+            compressor=registry.resolve("compressor", self.compressor,
+                                        **self.compressor_kwargs),
+            attack=registry.resolve("attack", self.attack,
+                                    **self.attack_kwargs),
+            agg_mode=self.agg_mode,
+            optimizer=(None if self.optimizer == "none"
+                       else registry.resolve("optimizer", self.optimizer,
+                                             **opt_kw)),
+        )
+
+    def build(self):
+        """-> ``runner.Experiment`` (method, data stream, loss, corrupt_fn)."""
+        from repro.api import runner
+        return runner.build(self)
+
+    def run(self, **run_kw):
+        """Build and run via the shared training loop (api/runner.py)."""
+        from repro.api import runner
+        return runner.run(self, **run_kw)

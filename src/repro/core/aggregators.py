@@ -201,6 +201,11 @@ class Aggregator:
 
 # ---------------------------------------------------------------------------
 
+RULES = ("mean", "cm", "tm", "rfa", "krum")
+
+
 def get_aggregator(name: str, *, bucket_size: int = 0, **kw) -> Aggregator:
-    """name in {mean, cm, tm, rfa, krum}; paper default bucketing s=2."""
+    """name in ``RULES``; paper default bucketing s=2."""
+    if name not in RULES:
+        raise ValueError(f"unknown aggregation rule {name!r}; known: {RULES}")
     return Aggregator(rule=name, bucket_size=bucket_size, **kw)

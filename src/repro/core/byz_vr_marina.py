@@ -30,6 +30,7 @@ backends.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -37,8 +38,8 @@ import jax.numpy as jnp
 from repro.core.aggregators import Aggregator
 from repro.core.attacks import Attack, no_attack
 from repro.core.compressors import Compressor, identity
-from repro.core.engine import (apply_attack, make_method,      # noqa: F401
-                               stacked_grads, aggregate)
+from repro.core.engine import (AGG_BACKENDS, apply_attack,     # noqa: F401
+                               make_method, stacked_grads, aggregate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,32 @@ class ByzVRMarinaConfig:
     model_axis: Optional[str] = None
     mesh: Optional[object] = None        # jax Mesh (all_to_all mode)
     grad_specs: Optional[object] = None  # PartitionSpec pytree (all_to_all)
+
+    def __post_init__(self):
+        """Eager validation: a bad agg_mode / byzantine count used to
+        surface as a bare ValueError at call time *inside jit* (or as a
+        silently-poisoned aggregate); fail at construction instead."""
+        if self.agg_mode not in AGG_BACKENDS:
+            raise ValueError(
+                f"agg_mode {self.agg_mode!r} not in {AGG_BACKENDS} "
+                "(see engine.AGG_BACKENDS / DESIGN.md §3)")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"p={self.p} must be a probability in [0, 1]")
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers={self.n_workers} must be >= 1")
+        if not 0 <= self.n_byz or 2 * self.n_byz >= self.n_workers:
+            raise ValueError(
+                f"n_byz={self.n_byz} must satisfy 0 <= n_byz < n_workers/2 "
+                f"(= {self.n_workers / 2:g}): no (delta,c)-robust aggregator "
+                "exists for a byzantine majority (Def. 2.1)")
+        s = max(self.aggregator.bucket_size, 1)
+        if (self.aggregator.robust and s > 1
+                and 2 * self.n_byz * s >= self.n_workers):
+            warnings.warn(
+                f"after bucketing (s={s}) the byzantine fraction is "
+                f"{self.n_byz * s / self.n_workers:.2f} >= 1/2; Def. 2.1's "
+                "robustness guarantee is void — reduce bucket_size or n_byz",
+                stacklevel=2)
 
     def byz_mask(self):
         return jnp.arange(self.n_workers) < self.n_byz

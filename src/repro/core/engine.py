@@ -93,6 +93,8 @@ def aggregate(cfg, key, sent):
     if mode == "pallas":
         from repro.core.sharded_agg import tree_aggregate_pallas
         return tree_aggregate_pallas(cfg, key, sent)
+    # backstop only: ByzVRMarinaConfig/RunSpec validate agg_mode eagerly at
+    # construction, so a hand-rolled cfg is the only way to get here.
     raise ValueError(f"agg_mode {mode!r} not in {AGG_BACKENDS}")
 
 

@@ -1,4 +1,5 @@
 from repro.data.synthetic import (  # noqa: F401
     LogRegData, TokenStream, make_logreg_data, logreg_loss,
-    init_logreg_params, corrupt_labels_logreg, corrupt_labels_lm,
+    init_logreg_params, logreg_reference,
+    corrupt_labels_logreg, corrupt_labels_lm,
 )

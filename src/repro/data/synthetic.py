@@ -124,6 +124,18 @@ def init_logreg_params(dim):
             "b": jnp.zeros((), jnp.float32)}
 
 
+def logreg_reference(loss_fn, full, *, iters=2500, lr=0.5):
+    """Exact-GD reference optimum on the pooled batch ``full`` ->
+    (params*, f*). The shared yardstick for every optimality-gap report
+    (benchmarks and examples), so all gaps are against the same f*."""
+    p = init_logreg_params(full["x"].shape[1])
+    gd = jax.jit(lambda q: jax.tree.map(
+        lambda a, g: a - lr * g, q, jax.grad(loss_fn)(q, full)))
+    for _ in range(iters):
+        p = gd(p)
+    return p, float(loss_fn(p, full))
+
+
 def corrupt_labels_logreg(batch, byz_mask):
     """LF attack: y -> 1 - y on byzantine workers (paper Sec. 3)."""
     m = byz_mask.reshape((-1,) + (1,) * (batch["y"].ndim - 1))

@@ -30,11 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api import RunSpec, components
 from repro.configs import (ATTN, SWA, INPUT_SHAPES, ASSIGNED_ARCHS,
                            get_config)
 from repro.configs.base import ArchConfig, InputShape
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, list_methods, make_method)
+from repro.core import ByzVRMarinaConfig, list_methods, make_method
 from repro.launch import hlo_analysis
 from repro.launch.mesh import (make_production_mesh, n_workers,
                                sanitize_specs, worker_axes)
@@ -127,17 +127,26 @@ def decode_cache_capacity(cfg: ArchConfig, shape: InputShape) -> int:
 # step builders
 # ---------------------------------------------------------------------------
 
-def make_byz_config(n_work: int, mesh, *, agg="cm", bucket=2, compressor=None,
+def make_byz_config(n_work: int, mesh, *, agg="cm", bucket=2,
+                    compressor="randk", compressor_kwargs=None,
                     agg_mode="gspmd") -> ByzVRMarinaConfig:
+    """Declarative spec -> engine config; the mesh extras (worker axes /
+    grad specs) are attached afterwards because they are not serializable."""
+    ckw = dict(compressor_kwargs if compressor_kwargs is not None
+               else {"ratio": 0.1})
     if agg_mode == "sparse_support":
-        comp = get_compressor("randk", ratio=0.1, common_randomness=True)
-    else:
-        comp = compressor or get_compressor("randk", ratio=0.1)
-    return ByzVRMarinaConfig(
-        n_workers=n_work, n_byz=max(n_work // 8, 1), p=0.1, lr=3e-3,
-        aggregator=get_aggregator(agg, bucket_size=bucket),
-        compressor=comp, attack=get_attack("ALIE"),
-        agg_mode=agg_mode,
+        compressor, ckw = "randk", {"ratio": ckw.get("ratio", 0.1),
+                                    "common_randomness": True}
+    # the spec's task/arch fields don't reach build_config (the dry-run owns
+    # model construction); validation of the byzantine geometry still applies,
+    # so clamp n_byz under the delta < 1/2 bound for tiny worker meshes
+    n_byz = min(max(n_work // 8, 1), max((n_work - 1) // 2, 0))
+    spec = RunSpec(
+        n_workers=n_work, n_byz=n_byz, p=0.1, lr=3e-3,
+        attack="ALIE", aggregator=agg, bucket_size=bucket,
+        compressor=compressor, compressor_kwargs=ckw, agg_mode=agg_mode)
+    return dataclasses.replace(
+        spec.build_config(),
         worker_axes=worker_axes(mesh), model_axis="model",
         mesh=mesh if agg_mode == "all_to_all" else None)
 
@@ -335,6 +344,15 @@ def _build(kind, cfg, mesh, shape, byz_overrides, xent_chunk=1024):
     return build_decode(cfg, mesh, shape)
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on older jax and a
+    one-element list of dicts on newer releases; normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _compile_costs(kind, cfg, mesh, shape, byz_overrides):
     """flops/bytes of a probe config with every inner scan fully unrolled
     (so cost_analysis counts each trip; memory behaviour matches the real
@@ -344,7 +362,7 @@ def _compile_costs(kind, cfg, mesh, shape, byz_overrides):
         jitted, args = _build(kind, cfg, mesh, shape, byz_overrides)
         with mesh:
             compiled = jitted.lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         return (float(cost.get("flops", 0.0) or 0.0),
                 float(cost.get("bytes accessed", 0.0) or 0.0))
     finally:
@@ -390,7 +408,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             compiled = lowered.compile()
             t2 = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         hlo = compiled.as_text()
         coll = hlo_analysis.collective_bytes(hlo)   # trip-count aware
         raw_flops = float(cost.get("flops", 0.0) or 0.0)
@@ -453,17 +471,17 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=16)
-    ap.add_argument("--agg", default="cm")
+    ap.add_argument("--agg", default="cm", choices=components("aggregator"))
     ap.add_argument("--method", default="marina", choices=list_methods(),
                     help="gradient estimator plugged into the round engine")
     ap.add_argument("--agg-mode", default="gspmd",
-                    choices=["gspmd", "all_to_all", "sparse_support",
-                             "pallas"])
+                    choices=components("agg_mode"))
     ap.add_argument("--attn-impl", default="chunked",
                     choices=["chunked", "online"])
     ap.add_argument("--moe-ep-constraint", action="store_true")
     ap.add_argument("--capacity-factor", type=float, default=None)
-    ap.add_argument("--compressor", default="randk")
+    ap.add_argument("--compressor", default="randk",
+                    choices=components("compressor"))
     ap.add_argument("--compress-ratio", type=float, default=0.1)
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
@@ -471,9 +489,10 @@ def main():
     Lyr.ATTN_IMPL[0] = args.attn_impl
     if args.moe_ep_constraint:
         Lyr.MOE_EP_CONSTRAINT[0] = "model"
-    comp = get_compressor(args.compressor, **(
-        {"ratio": args.compress_ratio} if args.compressor == "randk" else {}))
-    overrides = {"agg": args.agg, "compressor": comp,
+    comp_kw = ({"ratio": args.compress_ratio}
+               if args.compressor == "randk" else {})
+    overrides = {"agg": args.agg, "compressor": args.compressor,
+                 "compressor_kwargs": comp_kw,
                  "agg_mode": args.agg_mode, "method": args.method}
 
     if args.capacity_factor is not None:

@@ -1,160 +1,162 @@
-"""Training driver: Byzantine-robust LM training through the unified round
-engine — any registered method (Byz-VR-MARINA or a baseline estimator), any
-aggregation backend.
+"""Training driver: Byzantine-robust LM training through the declarative
+experiment API — any registered method, attack, and aggregation backend.
 
-Runs end-to-end on whatever devices exist (1 CPU here; the production mesh on
-a pod — same code path, mesh size is the only difference). Example:
+The CLI is *generated* from ``RunSpec``'s fields, with choices enumerated
+from the unified component registry (``repro.api.registry``), so a backend
+or method registered anywhere in the framework is immediately drivable here
+— no hand-maintained ``choices=[...]`` lists to drift out of sync. Legacy
+flags (``--agg``, ``--bucket``, ``--opt``, ``--compress-ratio``) keep
+working as aliases. Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \\
       --steps 100 --n-workers 8 --n-byz 2 --attack ALIE --agg cm \\
       --method marina --agg-mode auto
 
---method picks the gradient estimator (core/estimators.py registry);
---agg-mode picks the aggregation backend: "auto" resolves to the fused
-Pallas kernel path on TPU and the paper-faithful gspmd path elsewhere.
+--agg-mode "auto" resolves to the fused Pallas kernel path on TPU and the
+paper-faithful gspmd path elsewhere; "all_to_all" shards the worker axis
+over the visible devices (CPU: set
+XLA_FLAGS=--xla_force_host_platform_device_count=<n_workers>).
+
+``--spec path.json`` loads a serialized RunSpec instead of flags;
+``--spec-out path.json`` dumps the resolved spec next to the metrics, so
+every run is reproducible from its artifacts alone.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api import RunSpec, build, components, describe, resolve_agg_mode
 
-from repro.checkpoint import save_checkpoint
-from repro.configs import get_config
-from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
-                        get_compressor, list_methods, make_method)
-from repro.data import TokenStream, corrupt_labels_lm
-from repro.models import init_params, loss_fn
-from repro.optim import get_optimizer
-
-
-def resolve_agg_mode(mode: str) -> str:
-    if mode != "auto":
-        return mode
-    # the fused one-HBM-sweep kernel is the default server-side backend on
-    # real TPU backends; interpret-mode pallas would only slow a CPU host.
-    return "pallas" if jax.default_backend() == "tpu" else "gspmd"
+# spec fields whose CLI choices enumerate from the unified registry
+_CHOICE_KINDS = {"arch": "arch", "method": "method", "attack": "attack",
+                 "aggregator": "aggregator", "compressor": "compressor",
+                 "optimizer": "optimizer"}
+# pre-redesign flag spellings, kept as aliases of the spec-named flags
+_LEGACY_ALIASES = {"aggregator": ("--agg",), "bucket_size": ("--bucket",),
+                   "optimizer": ("--opt",)}
+# train-appropriate defaults where they differ from RunSpec's (logreg-tuned)
+_TRAIN_DEFAULTS = {"arch": "qwen3-1.7b", "n_workers": 8, "n_byz": 0,
+                   "attack": "NA", "lr": 3e-3,
+                   # None = derive from --compress-ratio (legacy behaviour)
+                   "compressor": None}
 
 
-def build(args):
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    agg_mode = resolve_agg_mode(args.agg_mode)
-    if agg_mode == "sparse_support":
-        compressor = get_compressor(
-            "randk",
-            ratio=args.compress_ratio if args.compress_ratio < 1.0 else 0.1,
-            common_randomness=True)
-    elif args.compress_ratio < 1.0:
-        compressor = get_compressor("randk", ratio=args.compress_ratio)
-    else:
-        compressor = get_compressor("identity")
-    bcfg = ByzVRMarinaConfig(
-        n_workers=args.n_workers,
-        n_byz=args.n_byz,
-        p=args.p,
-        lr=args.lr,
-        aggregator=get_aggregator(args.agg, bucket_size=args.bucket),
-        compressor=compressor,
-        attack=get_attack(args.attack),
-        agg_mode=agg_mode,
-        optimizer=(get_optimizer(args.opt, lr=args.lr)
-                   if args.opt != "none" else None),
-    )
-    stream = TokenStream(
-        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-        n_workers=args.n_workers, per_worker_batch=args.per_worker_batch,
-        num_codebooks=cfg.num_codebooks,
-        frontend_tokens=cfg.frontend_tokens, d_model=cfg.d_model,
-        heterogeneous=args.heterogeneous, seed=args.seed)
-
-    def loss(params, batch, key):
-        return loss_fn(params, cfg, batch, remat=args.remat)
-
-    return cfg, bcfg, stream, loss
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Byzantine-robust training via repro.api.RunSpec")
+    for f in dataclasses.fields(RunSpec):
+        if f.name == "task":        # this driver is the LM task
+            continue
+        flag = "--" + f.name.replace("_", "-")
+        flags = (flag,) + _LEGACY_ALIASES.get(f.name, ())
+        default = _TRAIN_DEFAULTS.get(f.name, f.default)
+        if f.name == "agg_mode":
+            ap.add_argument(flag, default="auto",
+                            choices=("auto",) + components("agg_mode"),
+                            help="server-side aggregation backend "
+                                 "(auto = pallas on TPU, gspmd elsewhere)")
+        elif f.name in _CHOICE_KINDS:
+            kind = _CHOICE_KINDS[f.name]
+            ap.add_argument(*flags, default=default,
+                            choices=components(kind),
+                            help=f"registry {kind!r}: "
+                                 + ", ".join(components(kind)))
+        elif f.default_factory is dict:          # per-component kwargs
+            ap.add_argument(flag, type=json.loads, default={},
+                            help=f"JSON dict merged into spec.{f.name}")
+        else:
+            ap.add_argument(flags[0], *flags[1:], type=type(f.default),
+                            default=default)
+    # stream/model knobs (forwarded into spec.data_kwargs)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--method", default="marina", choices=list_methods(),
-                    help="gradient estimator plugged into the round engine")
-    ap.add_argument("--agg-mode", default="auto",
-                    choices=["auto", "gspmd", "pallas", "sparse_support"],
-                    help="server-side aggregation backend")
-    ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--per-worker-batch", type=int, default=4)
-    ap.add_argument("--n-workers", type=int, default=8)
-    ap.add_argument("--n-byz", type=int, default=0)
-    ap.add_argument("--p", type=float, default=0.1)
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--agg", default="cm")
-    ap.add_argument("--bucket", type=int, default=2)
-    ap.add_argument("--attack", default="NA")
-    ap.add_argument("--compress-ratio", type=float, default=1.0)
-    ap.add_argument("--opt", default="none", choices=["none", "sgd", "adam"])
-    ap.add_argument("--remat", action="store_true")
     ap.add_argument("--heterogeneous", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--compress-ratio", type=float, default=1.0,
+                    help="legacy: <1.0 selects randk at this ratio when "
+                         "--compressor is not given")
+    # loop knobs (live in the shared runner, not the spec)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--metrics-out", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--spec", default=None,
+                    help="load a serialized RunSpec JSON (flags ignored)")
+    ap.add_argument("--spec-out", default=None,
+                    help="write the resolved spec JSON")
+    ap.add_argument("--list-components", action="store_true",
+                    help="print every registered component and exit")
+    return ap
 
-    cfg, bcfg, stream, loss = build(args)
-    key = jax.random.PRNGKey(args.seed)
-    k_init, k_run = jax.random.split(key)
-    params = init_params(k_init, cfg)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"[train] {args.arch} ({'reduced' if args.reduced else 'full'}): "
-          f"{n_params/1e6:.1f}M params, method={args.method}, "
-          f"{args.n_workers} workers ({args.n_byz} byzantine, "
-          f"attack={args.attack}, agg={bcfg.aggregator.name}, "
-          f"backend={bcfg.agg_mode})")
 
-    method = make_method(args.method, bcfg, loss, corrupt_labels_lm)
-    step = jax.jit(method.step)
-    state = method.init(params, stream.anchor(0), k_run)
+def spec_from_args(args) -> RunSpec:
+    """Resolve CLI flags (including the legacy --compress-ratio derivation)
+    into a concrete, serializable RunSpec."""
+    if args.spec:
+        with open(args.spec) as f:
+            return RunSpec.from_json(f.read())
+    agg_mode = resolve_agg_mode(args.agg_mode)
+    compressor, ckw = args.compressor, dict(args.compressor_kwargs)
+    if compressor is None:
+        if agg_mode == "sparse_support":
+            compressor = "randk"
+            ckw = {"ratio": (args.compress_ratio
+                             if args.compress_ratio < 1.0 else 0.1),
+                   "common_randomness": True, **ckw}
+        elif args.compress_ratio < 1.0:
+            compressor = "randk"
+            ckw = {"ratio": args.compress_ratio, **ckw}
+        else:
+            compressor = "identity"
+    elif compressor == "randk" and "ratio" not in ckw:
+        if args.compress_ratio < 1.0:
+            ckw["ratio"] = args.compress_ratio
+        if agg_mode == "sparse_support":
+            ckw.setdefault("common_randomness", True)
+    data_kwargs = {"seq_len": args.seq_len,
+                   "per_worker_batch": args.per_worker_batch,
+                   "reduced": args.reduced,
+                   "heterogeneous": args.heterogeneous,
+                   "remat": args.remat, **args.data_kwargs}
+    return RunSpec(
+        task="lm", arch=args.arch, method=args.method,
+        n_workers=args.n_workers, n_byz=args.n_byz, attack=args.attack,
+        aggregator=args.aggregator, bucket_size=args.bucket_size,
+        agg_mode=agg_mode, compressor=compressor, p=args.p, lr=args.lr,
+        optimizer=args.optimizer, steps=args.steps, seed=args.seed,
+        method_kwargs=args.method_kwargs, attack_kwargs=args.attack_kwargs,
+        aggregator_kwargs=args.aggregator_kwargs, compressor_kwargs=ckw,
+        optimizer_kwargs=args.optimizer_kwargs, data_kwargs=data_kwargs)
 
-    history = []
-    comm_bits_total = 0.0
-    pending_ck = []          # device arrays; synced only on log steps so the
-    t0 = time.time()         # loop keeps JAX's async dispatch pipelined
-    for it in range(args.steps):
-        k_it = jax.random.fold_in(k_run, it + 1)
-        state, metrics = step(state, stream.minibatch(it), stream.anchor(it),
-                              k_it)
-        pending_ck.append(metrics["c_k"] if "c_k" in metrics else None)
-        if it % args.log_every == 0 or it == args.steps - 1:
-            for ck in pending_ck:
-                comm_bits_total += method.round_bits(
-                    n_params, True if ck is None else bool(ck))
-            pending_ck.clear()
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = it
-            m["wall_s"] = round(time.time() - t0, 2)
-            m["comm_gbits"] = round(comm_bits_total / 1e9, 4)
-            history.append(m)
-            ck = f" c_k={int(m['c_k'])}" if "c_k" in m else ""
-            print(f"  step {it:5d} loss {m['loss']:.4f} "
-                  f"|g| {m['g_norm']:.3e}{ck} "
-                  f"comm {m['comm_gbits']:.3g}Gb ({m['wall_s']}s)")
 
-    if args.checkpoint:
-        save_checkpoint(args.checkpoint, state["params"],
-                        step=int(state["step"]))
-        print(f"[train] checkpoint -> {args.checkpoint}.npz")
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            json.dump(history, f, indent=1)
-    return history
+def main():
+    args = build_parser().parse_args()
+    if args.list_components:
+        for kind in ("arch", "method", "attack", "aggregator", "compressor",
+                     "optimizer", "agg_mode"):
+            print(f"{kind}:")
+            for name, summary in describe(kind).items():
+                print(f"  {name:<22} {summary}")
+        return []
+    spec = spec_from_args(args)
+    if args.spec_out:
+        with open(args.spec_out, "w") as f:
+            f.write(spec.to_json())
+
+    exp = build(spec)
+    acfg = exp.arch_cfg
+    print(f"[train] {spec.arch} "
+          f"({'reduced' if spec.data_kwargs.get('reduced') else 'full'}): "
+          f"~{acfg.param_count()/1e6:.1f}M params, method={spec.method}, "
+          f"{spec.n_workers} workers ({spec.n_byz} byzantine, "
+          f"attack={spec.attack}, agg={exp.cfg.aggregator.name}, "
+          f"backend={spec.agg_mode})")
+    result = exp.run(log_every=args.log_every, verbose=True,
+                     checkpoint=args.checkpoint,
+                     metrics_out=args.metrics_out)
+    return result.history
 
 
 if __name__ == "__main__":

@@ -84,5 +84,11 @@ class Adam:
         return _cast_like(new, params), {"m": m, "v": v, "t": t}
 
 
+OPTIMIZERS = {"sgd": SGD, "adam": Adam}
+
+
 def get_optimizer(name: str, **kw):
-    return {"sgd": SGD, "adam": Adam}[name](**kw)
+    if name not in OPTIMIZERS:
+        raise KeyError(
+            f"unknown optimizer {name!r}; known: {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](**kw)

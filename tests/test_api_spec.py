@@ -1,0 +1,272 @@
+"""repro.api surface: spec serialization round-trips, eager validation with
+actionable errors, the unified registry, and sweep expansion."""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.api import (RunSpec, Sweep, build, check, components, describe,
+                       kinds, resolve)
+from repro.core.engine import AGG_BACKENDS
+
+
+# ---------------------------------------------------------------------------
+# serialization: exact round-trip for every method x attack x aggregator
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_every_method_attack_aggregator_combination():
+    """Property-style (no tracing, fast): from_dict(to_dict(s)) == s and
+    from_json(to_json(s)) == s for the full registered cross product."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")      # bucketed-delta advisories
+        for method in components("method"):
+            for attack in components("attack"):
+                for agg in components("aggregator"):
+                    s = RunSpec(task="logreg", method=method, attack=attack,
+                                aggregator=agg, n_workers=6, n_byz=1,
+                                steps=3,
+                                compressor="randk",
+                                compressor_kwargs={"ratio": 0.5},
+                                data_kwargs={"dim": 7, "batch_size": 4})
+                    assert RunSpec.from_dict(s.to_dict()) == s
+                    assert RunSpec.from_json(s.to_json()) == s
+                    # to_dict is plain JSON (diffable artifact)
+                    assert json.loads(json.dumps(s.to_dict())) == s.to_dict()
+
+
+def test_roundtrip_preserves_all_fields():
+    s = RunSpec(task="lm", arch="mamba2-130m", method="diana",
+                n_workers=9, n_byz=2, attack="IPM", aggregator="tm",
+                bucket_size=3, agg_mode="pallas", compressor="natural",
+                p=0.25, lr=1e-3, optimizer="adam",
+                optimizer_kwargs={"b1": 0.8}, steps=17, seed=11,
+                method_kwargs={"alpha": 0.5},
+                attack_kwargs={"eps": 0.2},
+                aggregator_kwargs={"trim": 2},
+                data_kwargs={"seq_len": 32, "reduced": True})
+    d = s.to_dict()
+    assert d["schema_version"] == 1
+    for f in dataclasses.fields(RunSpec):
+        assert d[f.name] == getattr(s, f.name)
+    assert RunSpec.from_dict(d) == s
+
+
+def test_from_dict_rejects_unknown_fields_with_suggestion():
+    d = RunSpec(task="logreg").to_dict()
+    d["agregator"] = "cm"
+    with pytest.raises(ValueError, match="did you mean 'aggregator'"):
+        RunSpec.from_dict(d)
+
+
+def test_from_dict_rejects_schema_version_mismatch():
+    d = RunSpec(task="logreg").to_dict()
+    d["schema_version"] = 99
+    with pytest.raises(ValueError, match="schema_version"):
+        RunSpec.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# eager validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_component_names_suggest():
+    with pytest.raises(ValueError, match="did you mean 'marina'"):
+        RunSpec(method="marinna")
+    with pytest.raises(ValueError, match="did you mean 'ALIE'"):
+        RunSpec(attack="ALIEE")
+    with pytest.raises(ValueError, match="did you mean 'krum'"):
+        RunSpec(aggregator="krun")
+    with pytest.raises(ValueError, match="unknown compressor"):
+        RunSpec(compressor="topk")
+
+
+def test_agg_mode_validated_eagerly():
+    with pytest.raises(ValueError, match="agg_mode"):
+        RunSpec(agg_mode="pallass")
+    for mode in AGG_BACKENDS:
+        if mode == "sparse_support":
+            RunSpec(agg_mode=mode, compressor="randk",
+                    compressor_kwargs={"ratio": 0.5,
+                                       "common_randomness": True})
+        else:
+            RunSpec(agg_mode=mode)
+
+
+def test_p_bounds():
+    with pytest.raises(ValueError, match="p="):
+        RunSpec(p=0.0)
+    with pytest.raises(ValueError, match="p="):
+        RunSpec(p=1.5)
+    RunSpec(p=1.0)
+
+
+def test_byzantine_majority_rejected():
+    with pytest.raises(ValueError, match="delta"):
+        RunSpec(n_workers=4, n_byz=2)
+    with pytest.raises(ValueError, match="delta"):
+        RunSpec(n_workers=5, n_byz=3)
+
+
+def test_bucketed_delta_warns():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        RunSpec(n_workers=15, n_byz=5, aggregator="cm", bucket_size=2)
+    assert any("bucketing" in str(x.message) for x in w)
+
+
+def test_sparse_support_needs_common_randomness_randk():
+    with pytest.raises(ValueError, match="sparse_support"):
+        RunSpec(agg_mode="sparse_support")
+    with pytest.raises(ValueError, match="common_randomness"):
+        RunSpec(agg_mode="sparse_support", compressor="randk",
+                compressor_kwargs={"ratio": 0.5})
+
+
+def test_lm_task_requires_arch():
+    with pytest.raises(ValueError, match="arch"):
+        RunSpec(task="lm")
+
+
+def test_kwargs_must_be_json_scalars():
+    with pytest.raises(ValueError, match="JSON"):
+        RunSpec(compressor_kwargs={"ratio": (1, 2)})     # tuple != list
+
+
+def test_config_validates_eagerly_too():
+    """Satellite: a bad agg_mode / byzantine majority used to surface only
+    at call time inside jit; the config now fails at construction."""
+    from repro.core import ByzVRMarinaConfig
+    with pytest.raises(ValueError, match="agg_mode"):
+        ByzVRMarinaConfig(n_workers=4, agg_mode="nope")
+    with pytest.raises(ValueError, match="n_byz"):
+        ByzVRMarinaConfig(n_workers=4, n_byz=2)
+    with pytest.raises(ValueError, match="p="):
+        ByzVRMarinaConfig(n_workers=4, p=1.5)
+
+
+# ---------------------------------------------------------------------------
+# unified registry
+# ---------------------------------------------------------------------------
+
+def test_registry_kinds_and_components():
+    assert set(kinds()) >= {"method", "attack", "aggregator", "compressor",
+                            "optimizer", "agg_mode", "arch", "task"}
+    from repro.core.estimators import ESTIMATORS
+    assert components("method") == tuple(sorted(ESTIMATORS))
+    assert components("agg_mode") == tuple(AGG_BACKENDS)
+    assert "all_to_all" in components("agg_mode")
+    assert "none" in components("optimizer")
+    assert "qwen3-1.7b" in components("arch")
+
+
+def test_registry_describe_nonempty_everywhere():
+    for kind in kinds():
+        table = describe(kind)
+        assert table, kind
+        for name, summary in table.items():
+            assert summary, (kind, name)
+
+
+def test_registry_check_did_you_mean():
+    with pytest.raises(ValueError, match="did you mean 'gspmd'"):
+        check("agg_mode", "gspdm")
+    with pytest.raises(ValueError, match="unknown registry kind"):
+        components("methods")
+
+
+def test_registry_resolve_builds_components():
+    assert resolve("compressor", "randk", ratio=0.5).ratio == 0.5
+    assert resolve("attack", "ALIE").name == "ALIE"
+    assert resolve("aggregator", "cm", bucket_size=2).bucket_size == 2
+    assert resolve("optimizer", "none") is None
+    assert resolve("optimizer", "sgd", lr=0.1).lr == 0.1
+
+
+# ---------------------------------------------------------------------------
+# replace / sweep
+# ---------------------------------------------------------------------------
+
+def test_replace_dotted_keys():
+    s = RunSpec(task="logreg", compressor="randk",
+                compressor_kwargs={"ratio": 0.5})
+    s2 = s.replace(**{"compressor_kwargs.ratio": 0.1, "attack": "BF"})
+    assert s2.compressor_kwargs == {"ratio": 0.1}
+    assert s2.attack == "BF"
+    assert s.compressor_kwargs == {"ratio": 0.5}      # original untouched
+    with pytest.raises(ValueError, match="dotted"):
+        s.replace(**{"attack.z": 1.0})
+
+
+def test_sweep_expand_cartesian_and_stable_ids():
+    base = RunSpec(task="logreg", steps=1, compressor="randk",
+                   compressor_kwargs={"ratio": 0.5})
+    sweep = Sweep(base, {"attack": ("NA", "BF"),
+                         "compressor_kwargs.ratio": (0.1, 0.5)})
+    cells = list(sweep.expand())
+    assert len(cells) == len(sweep) == 4
+    ids = [rid for rid, _ in cells]
+    assert ids == ["attack=NA__compressor_kwargs.ratio=0.1",
+                   "attack=NA__compressor_kwargs.ratio=0.5",
+                   "attack=BF__compressor_kwargs.ratio=0.1",
+                   "attack=BF__compressor_kwargs.ratio=0.5"]
+    assert ids == [rid for rid, _ in sweep.expand()]   # stable
+    specs = dict(cells)
+    assert specs[ids[2]].attack == "BF"
+    assert specs[ids[2]].compressor_kwargs["ratio"] == 0.1
+
+
+def test_sweep_rejects_unknown_grid_field():
+    with pytest.raises(ValueError, match="not a RunSpec field"):
+        Sweep(RunSpec(task="logreg"), {"atack": ("NA",)})
+
+
+# ---------------------------------------------------------------------------
+# build surface
+# ---------------------------------------------------------------------------
+
+def test_build_config_resolves_components():
+    s = RunSpec(task="logreg", aggregator="tm", bucket_size=2,
+                aggregator_kwargs={"trim": 2}, compressor="randk",
+                compressor_kwargs={"ratio": 0.25}, attack="IPM",
+                optimizer="sgd", optimizer_kwargs={"momentum": 0.9},
+                lr=0.05)
+    cfg = s.build_config()
+    assert cfg.aggregator.rule == "tm" and cfg.aggregator.trim == 2
+    assert cfg.compressor.ratio == 0.25
+    assert cfg.attack.name == "IPM"
+    assert cfg.optimizer.momentum == 0.9 and cfg.optimizer.lr == 0.05
+    assert cfg.agg_mode == "gspmd"
+
+
+def test_runner_callback_every_and_early_stop():
+    from repro.api import run
+    s = RunSpec(task="logreg", steps=10,
+                data_kwargs={"dim": 5, "n_samples": 30, "batch_size": 4})
+    seen = []
+    run(s, log_every=10,
+        callback=lambda it, st, m: (seen.append(it), False)[1],
+        callback_every=3)
+    assert seen == [2, 5, 8, 9]          # every 3rd step + the last
+    stopped = []
+    result = run(s, log_every=10,
+                 callback=lambda it, st, m: (stopped.append(it), it >= 5)[1],
+                 callback_every=3)
+    assert stopped == [2, 5]             # truthy return stops the run
+    assert result.history[-1]["step"] == 5
+
+
+def test_registry_resolve_method_rejects_kwargs():
+    with pytest.raises(TypeError, match="method_kwargs"):
+        resolve("method", "sgdm", momentum=0.9)
+    assert resolve("method", "sgdm") is not None
+
+
+def test_build_assembles_experiment():
+    s = RunSpec(task="logreg", steps=2,
+                data_kwargs={"dim": 7, "n_samples": 40, "batch_size": 4})
+    exp = build(s)
+    assert exp.method.name == "marina"
+    assert exp.data.features.shape == (40, 7)
+    batch = exp.minibatch(0, __import__("jax").random.PRNGKey(0))
+    assert batch["x"].shape == (5, 4, 7)

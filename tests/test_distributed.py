@@ -156,6 +156,23 @@ assert l1 < l0 - 0.1, (l0, l1)
 print("SPARSE_OK", l0, l1)
 """
 
+SPEC_A2A_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+from repro.api import RunSpec, run
+
+spec = RunSpec(task="logreg", method="marina", n_workers=4, n_byz=1,
+               p=0.3, lr=0.3, attack="ALIE", aggregator="cm", bucket_size=2,
+               agg_mode="all_to_all", steps=4,
+               data_kwargs={"n_samples": 80, "dim": 12, "batch_size": 8})
+a2a = run(spec, log_every=1)
+ref = run(spec.replace(agg_mode="gspmd"), log_every=1)
+err = max(abs(a["loss"] - b["loss"])
+          for a, b in zip(a2a.history, ref.history))
+assert err < 1e-5, err
+print("SPEC_A2A_OK", err)
+"""
+
 MESH_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -198,6 +215,13 @@ def test_all_to_all_aggregation_matches_gspmd():
     r = _run(A2A_SCRIPT)
     assert "A2A_OK" in r.stdout, r.stdout + r.stderr
     assert "A2A_PALLAS_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_run_spec_all_to_all_matches_gspmd():
+    """The declarative API's agg_mode="all_to_all" (mesh derived from the
+    visible devices by api.runner) must match the gspmd trajectory."""
+    r = _run(SPEC_A2A_SCRIPT)
+    assert "SPEC_A2A_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_sparse_support_mode_trains():
