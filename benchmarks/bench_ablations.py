@@ -8,9 +8,14 @@
 * IS vs US     — Example E.2: importance sampling reaches the target in
                  fewer rounds when 𝓛±(IS) ≪ 𝓛±(US).
 
-Every knob is a ``Sweep`` axis over one base ``RunSpec`` (importance
-sampling is ``data_kwargs.sampling``); specs are emitted per row."""
-from benchmarks.common import emit, final_gap, logreg_reference
+Every knob is a ``Sweep`` axis over one base ``RunSpec``, executed through
+the sweep engine (``repro.exec``) so a diverging knob setting is isolated
+per cell; specs are emitted per row and the fold lands in
+``experiments/bench/ablations_summary.json``."""
+import os
+
+from benchmarks.common import ART_DIR, emit, final_gap, logreg_reference
+from repro import exec as xc
 from repro.api import RunSpec, Sweep, build
 from repro.core import theory
 
@@ -21,40 +26,61 @@ BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
                data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 5})
 
 
-def _gap(spec, full, f_star):
-    exp = build(spec)
-    return final_gap(exp, exp.run(log_every=spec.steps), full, f_star)
+def _run_grid(sweep, exp0, full, f_star):
+    """-> ({run_id: gap}, artifacts) for one knob sweep. The gap probe only
+    needs a loss_fn, identical across cells — reuse the base Experiment's."""
+    cells = list(sweep.expand())
+    srun = xc.run_cells(cells, run_kw={"log_every": sweep.base.steps})
+    gaps = {}
+    for run_id, spec in cells:
+        if run_id in srun.failures:
+            continue
+        gaps[run_id] = (spec, final_gap(exp0, srun[run_id], full, f_star))
+    return gaps, srun.artifacts
 
 
 def run():
-    full, f_star = logreg_reference(build(BASE))
+    exp0 = build(BASE)
+    full, f_star = logreg_reference(exp0)
+    artifacts = {}
 
-    for _, spec in Sweep(BASE, {"p": (0.02, 0.1, 0.5)}).expand():
-        emit(f"ablate/p{spec.p}", 0.0, f"gap={_gap(spec, full, f_star):.2e}",
+    gaps, arts = _run_grid(Sweep(BASE, {"p": (0.02, 0.1, 0.5)}), exp0,
+                           full, f_star)
+    artifacts.update(arts)
+    for spec, gap in gaps.values():
+        emit(f"ablate/p{spec.p}", 0.0, f"gap={gap:.2e}", spec=spec)
+
+    gaps, arts = _run_grid(Sweep(BASE, {"bucket_size": (1, 2, 4)}), exp0,
+                           full, f_star)
+    artifacts.update(arts)
+    for spec, gap in gaps.values():
+        emit(f"ablate/bucket{spec.bucket_size}", 0.0, f"gap={gap:.2e}",
              spec=spec)
 
-    for _, spec in Sweep(BASE, {"bucket_size": (1, 2, 4)}).expand():
-        emit(f"ablate/bucket{spec.bucket_size}", 0.0,
-             f"gap={_gap(spec, full, f_star):.2e}", spec=spec)
-
-    batch_sweep = Sweep(BASE.replace(steps=300),
-                        {"data_kwargs.batch_size": (8, 32, 128)})
-    for _, spec in batch_sweep.expand():
+    gaps, arts = _run_grid(
+        Sweep(BASE.replace(steps=300),
+              {"data_kwargs.batch_size": (8, 32, 128)}), exp0, full, f_star)
+    artifacts.update(arts)
+    for spec, gap in gaps.values():
         emit(f"ablate/batch{spec.data_kwargs['batch_size']}", 0.0,
-             f"gap={_gap(spec, full, f_star):.2e}", spec=spec)
+             f"gap={gap:.2e}", spec=spec)
 
     # importance vs uniform sampling (Example E.2)
-    exp = build(BASE)
-    _, lbar = theory.importance_weights(exp.data.features, 0.01)
-    pc = theory.logreg_constants(exp.data.features, 0.01, n_workers=5)
-    sampling = Sweep(BASE.replace(steps=250),
-                     {"data_kwargs.sampling": ("uniform", "importance")})
+    _, lbar = theory.importance_weights(exp0.data.features, 0.01)
+    pc = theory.logreg_constants(exp0.data.features, 0.01, n_workers=5)
     call = {"uniform": pc.calL_pm, "importance": lbar}
-    for _, spec in sampling.expand():
+    gaps, arts = _run_grid(
+        Sweep(BASE.replace(steps=250),
+              {"data_kwargs.sampling": ("uniform", "importance")}),
+        exp0, full, f_star)
+    artifacts.update(arts)
+    for spec, gap in gaps.values():
         mode = spec.data_kwargs["sampling"]
         emit(f"ablate/sampling-{mode}", 0.0,
-             f"gap={_gap(spec, full, f_star):.2e};calL={call[mode]:.2f}",
-             spec=spec)
+             f"gap={gap:.2e};calL={call[mode]:.2f}", spec=spec)
+
+    xc.write_summary(os.path.join(ART_DIR, "ablations_summary.json"),
+                     xc.summarize(artifacts))
 
 
 if __name__ == "__main__":

@@ -2,11 +2,18 @@
 under 5 attacks (NA, LF, BF, ALIE, IPM), homogeneous data, 4 good + 1
 byzantine worker, with and without RandK (K = 0.1 d) compression.
 
-The whole grid is ONE declarative ``Sweep`` over a base ``RunSpec``; each
-emitted row carries the resolved spec JSON (experiments/bench/), so any cell
-reproduces with ``RunSpec.from_dict(artifact["spec"]).run()``.
+The whole grid is ONE declarative ``Sweep`` executed through the batched
+engine (``repro.exec``): with ``seeds`` > 1 every (compressor, aggregator,
+attack) cell becomes a jit-signature group that runs as a single
+vmapped-over-seeds trajectory, and the mean±std-over-seeds table lands in
+``experiments/bench/fig1_summary.json``. Each emitted row still carries
+the resolved spec JSON, so any cell reproduces with
+``RunSpec.from_dict(artifact["spec"]).run()``.
 """
-from benchmarks.common import emit, final_gap, logreg_reference
+import os
+
+from benchmarks.common import ART_DIR, emit, logreg_reference
+from repro import exec as xc
 from repro.api import RunSpec, Sweep, build
 
 DIM = 30
@@ -22,21 +29,42 @@ GRID = {
 _AGG_LABEL = {"mean": "avg", "cm": "cm", "rfa": "rfa"}
 
 
-def run(iters=500):
+def cells(iters, seeds):
     base = BASE.replace(steps=iters, compressor="randk")
-    full, f_star = logreg_reference(build(base))
-    for _, spec in Sweep(base=base, grid=GRID).expand():
-        ratio = spec.compressor_kwargs["ratio"]
-        if ratio >= 1.0:    # identity wire format, not RandK(d)
+    grid = dict(GRID)
+    if len(seeds) > 1:
+        grid["seed"] = tuple(seeds)
+    out = []
+    for run_id, spec in Sweep(base=base, grid=grid).expand():
+        if spec.compressor_kwargs["ratio"] >= 1.0:
+            # identity wire format, not RandK(d)
             spec = spec.replace(compressor="identity", compressor_kwargs={})
         if spec.aggregator == "mean":
             spec = spec.replace(bucket_size=0)
-        exp = build(spec)
-        result = exp.run(log_every=iters)
-        gap = final_gap(exp, result, full, f_star)
+        out.append((run_id, spec))
+    return out
+
+
+def run(iters=500, seeds=(0,)):
+    exp0 = build(BASE.replace(steps=iters))
+    full, f_star = logreg_reference(exp0)
+    loss_fn = exp0.loss_fn
+    grid = cells(iters, seeds)
+    srun = xc.run_cells(grid, run_kw={"log_every": iters})
+    for run_id, spec in grid:
+        if run_id in srun.failures:
+            continue
+        result = srun[run_id]
+        gap = float(loss_fn(result.params, full)) - f_star
+        ratio = (spec.compressor_kwargs.get("ratio", 1.0)
+                 if spec.compressor == "randk" else 1.0)
         comp_name = "none" if ratio >= 1.0 else f"randk{ratio}"
-        emit(f"fig1/{comp_name}/{_AGG_LABEL[spec.aggregator]}/{spec.attack}",
+        tag = f"/seed{spec.seed}" if len(seeds) > 1 else ""
+        emit(f"fig1/{comp_name}/{_AGG_LABEL[spec.aggregator]}/"
+             f"{spec.attack}{tag}",
              result.wall_s / iters * 1e6, f"gap={gap:.3e}", spec=spec)
+    xc.write_summary(os.path.join(ART_DIR, "fig1_summary.json"),
+                     xc.summarize(srun.artifacts))
 
 
 if __name__ == "__main__":

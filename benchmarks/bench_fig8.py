@@ -2,11 +2,16 @@
 optimality gap vs transmitted bits under the ALIE attack.
 
 Emits gap checkpoints as a function of cumulative uploaded bits per worker
-for Byz-VR-MARINA with and without RandK(0.1d). Each curve is one
-``RunSpec`` driven through the shared runner (checkpoints via the runner's
-log callback; bits from the estimator's own accounting); the resolved spec
-JSON lands next to each CSV row in experiments/bench/."""
-from benchmarks.common import emit, logreg_reference
+for Byz-VR-MARINA with and without RandK(0.1d). Both curves run through
+the sweep-execution engine (``repro.exec``): the per-curve probe rides in
+as a ``cell_hook`` (host-side callbacks pin a cell to the serial
+in-process path), failures are isolated per cell, and the final-step
+summary lands in ``experiments/bench/fig8_summary.json`` next to the
+per-row resolved-spec artifacts."""
+import os
+
+from benchmarks.common import ART_DIR, emit, logreg_reference
+from repro import exec as xc
 from repro.api import RunSpec, build
 
 DIM = 30
@@ -14,21 +19,23 @@ BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
                p=0.1, lr=0.5, attack="ALIE", aggregator="cm", bucket_size=2,
                data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 2})
 
-
 def run(iters=600, log_every=150):
     full, f_star = logreg_reference(build(BASE))
-    rows = [("none", BASE.replace(steps=iters)),
-            ("randk0.1", BASE.replace(steps=iters, compressor="randk",
-                                      compressor_kwargs={"ratio": 0.1}))]
-    for comp_name, spec in rows:
-        exp = build(spec)
+    cells = [("none", BASE.replace(steps=iters)),
+             ("randk0.1", BASE.replace(steps=iters, compressor="randk",
+                                       compressor_kwargs={"ratio": 0.1}))]
 
-        def probe(it, state, m, spec=spec, exp=exp):
+    def hook(run_id, spec, exp):
+        def probe(it, state, m):
             gap = float(exp.loss_fn(state["params"], full)) - f_star
-            emit(f"fig8/{comp_name}/round{it + 1}", 0.0,
+            emit(f"fig8/{run_id}/round{it + 1}", 0.0,
                  f"bits={m['comm_bits']:.0f};gap={gap:.3e}", spec=spec)
 
-        exp.run(log_every=iters, callback=probe, callback_every=log_every)
+        return {"callback": probe, "callback_every": log_every}
+
+    srun = xc.run_cells(cells, run_kw={"log_every": iters}, cell_hook=hook)
+    xc.write_summary(os.path.join(ART_DIR, "fig8_summary.json"),
+                     xc.summarize(srun.artifacts))
 
 
 if __name__ == "__main__":

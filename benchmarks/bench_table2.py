@@ -3,10 +3,16 @@ optimality gap, Byz-VR-MARINA vs BR-SGDm / BR-CSGD / BR-DIANA / Byrd-SVRG,
 under the ALIE attack. Also reports uploaded bits per worker to reach the
 target (the compression win).
 
-Every contender is one ``RunSpec`` — the method name is the row key, and
-per-round communication comes from the estimator's own accounting. The
-resolved spec JSON is emitted next to each row."""
-from benchmarks.common import emit, logreg_reference
+Every contender is one ``RunSpec`` row executed through the
+sweep-execution engine (``repro.exec``): the early-stop probe attaches per
+cell via ``cell_hook`` (which also hands back the built Experiment for the
+estimator's own bits-per-round accounting), a diverging contender is
+isolated as a failed cell instead of killing the table, and the row
+summary lands in ``experiments/bench/table2_summary.json``."""
+import os
+
+from benchmarks.common import ART_DIR, emit, logreg_reference
+from repro import exec as xc
 from repro.api import RunSpec, build
 
 DIM = 30
@@ -32,24 +38,33 @@ ROWS = [
 
 def run(max_rounds=MAX_ROUNDS):
     full, f_star = logreg_reference(build(BASE))
-    for label, spec in ROWS:
-        spec = spec.replace(steps=max_rounds)
-        exp = build(spec)
-        hit = []
+    cells = [(label, spec.replace(steps=max_rounds)) for label, spec in ROWS]
+    hits, exps = {}, {}
 
-        def probe(it, state, m, exp=exp, hit=hit):
+    def hook(run_id, spec, exp):
+        exps[run_id] = exp
+        hit = hits.setdefault(run_id, [])
+
+        def probe(it, state, m):
             if float(exp.loss_fn(state["params"], full)) - f_star < TARGET:
                 hit.append(it + 1)
             return bool(hit)
 
-        exp.run(log_every=max_rounds, callback=probe,
-                callback_every=CHECK_EVERY)
-        rounds = hit[0] if hit else -1
-        bits_per_round = exp.method.expected_bits(DIM + 1)
+        return {"callback": probe, "callback_every": CHECK_EVERY}
+
+    srun = xc.run_cells(cells, run_kw={"log_every": max_rounds},
+                        cell_hook=hook)
+    for label, spec in cells:
+        if label in srun.failures:
+            continue
+        rounds = hits[label][0] if hits.get(label) else -1
+        bits_per_round = exps[label].method.expected_bits(DIM + 1)
         bits = rounds * bits_per_round if rounds > 0 else float("inf")
         emit(f"table2/{label}", float(rounds),
              f"rounds_to_{TARGET:g}={rounds};bits/worker={bits:.3g}",
              spec=spec)
+    xc.write_summary(os.path.join(ART_DIR, "table2_summary.json"),
+                     xc.summarize(srun.artifacts))
 
 
 if __name__ == "__main__":

@@ -1,12 +1,14 @@
 """System throughput: wall-clock steps/s of the full Byzantine-robust
 trainer on this host (single device; the distributed step is the same code
 jitted onto the mesh). One row per (model, method, aggregator, compressor)
-with tokens/s — every row is one ``RunSpec`` driven through the shared
-runner (warmup=True compiles before the timer starts), and the resolved
-spec JSON is emitted per row.
+with tokens/s — every row is one ``RunSpec`` executed through the sweep
+engine (``repro.exec``; LM cells are un-batchable so they take the serial
+path, with per-cell failure isolation), warmup=True compiles before the
+timer starts, and the resolved spec JSON is emitted per row.
 """
 from benchmarks.common import emit
-from repro.api import RunSpec, run as run_spec
+from repro import exec as xc
+from repro.api import RunSpec
 
 N, BW, S = 4, 2, 64
 ITERS = 8
@@ -22,6 +24,7 @@ ROWS = [
 
 
 def run():
+    cells = []
     for arch in ["qwen3-1.7b", "mamba2-130m", "phi3.5-moe-42b-a6.6b"]:
         for method, agg, comp in ROWS:
             spec = RunSpec(
@@ -33,11 +36,15 @@ def run():
                 steps=ITERS, seed=0,
                 data_kwargs={"reduced": True, "seq_len": S,
                              "per_worker_batch": BW})
-            result = run_spec(spec, log_every=ITERS, warmup=True)
-            dt = result.wall_s / ITERS
-            toks = N * BW * S
-            emit(f"trainer/{arch}/{method}/{agg}+{comp}", dt * 1e6,
-                 f"tokens_per_s={toks/dt:.0f}", spec=spec)
+            cells.append((f"trainer/{arch}/{method}/{agg}+{comp}", spec))
+    srun = xc.run_cells(cells, run_kw={"log_every": ITERS, "warmup": True})
+    for run_id, spec in cells:
+        if run_id in srun.failures:
+            continue
+        result = srun[run_id]
+        dt = result.wall_s / ITERS
+        toks = N * BW * S
+        emit(run_id, dt * 1e6, f"tokens_per_s={toks/dt:.0f}", spec=spec)
 
 
 if __name__ == "__main__":

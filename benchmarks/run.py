@@ -6,6 +6,7 @@
   agg       (system) server-side aggregation throughput, jnp vs Pallas
   compress  (system) compressor throughput + wire compression
   roofline  §Roofline terms from the dry-run artifacts
+  sweep     (system) sweep engine: serial vs vmapped-batched grid execution
 
 Prints ``name,us_per_call,derived`` CSV. Select a subset with argv, e.g.
 ``python -m benchmarks.run fig1 roofline``.
@@ -17,9 +18,11 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_ablations, bench_aggregators,
                             bench_compressors, bench_fig1, bench_fig8,
-                            bench_roofline, bench_table2, bench_trainer)
+                            bench_roofline, bench_sweep, bench_table2,
+                            bench_trainer)
     suites = {
         "ablate": bench_ablations.run,
+        "sweep": bench_sweep.run,
         "trainer": bench_trainer.run,
         "agg": bench_aggregators.run,
         "compress": bench_compressors.run,

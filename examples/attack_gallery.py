@@ -2,16 +2,20 @@
 without compression, printed as the paper's grid. Feeds EXPERIMENTS.md
 §Paper-validation.
 
-The grid is one ``Sweep`` over a base ``RunSpec`` — the same declarative
-object benchmarks/bench_fig1.py emits as its reproducibility artifact.
+The grid is one ``Sweep`` over a base ``RunSpec`` executed through the
+batched sweep engine (``repro.exec``): with ``--seeds k`` > 1 each
+(compressor, aggregator, attack) cell becomes a jit-signature group that
+runs as ONE vmapped-over-seeds trajectory (one compile per group instead
+of one per cell) and the table shows the mean gap over seeds.
 
-  PYTHONPATH=src python examples/attack_gallery.py [--iters 600]
+  PYTHONPATH=src python examples/attack_gallery.py [--iters 600] [--seeds 3]
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+from repro import exec as xc
 from repro.api import RunSpec, Sweep, build
 from repro.data import logreg_reference
 
@@ -19,6 +23,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--iters", type=int, default=600)
 ap.add_argument("--n-workers", type=int, default=5)
 ap.add_argument("--n-byz", type=int, default=1)
+ap.add_argument("--seeds", type=int, default=1,
+                help="seeds per cell; >1 runs each cell group vmapped")
 ap.add_argument("--heterogeneous", action="store_true")
 args = ap.parse_args()
 
@@ -35,22 +41,32 @@ _, f_star = logreg_reference(exp0.loss_fn, full, iters=3000)
 
 ATTACKS = ("NA", "LF", "BF", "ALIE", "IPM")
 AGGS = [("AVG", "mean", 0), ("CM", "cm", 2), ("RFA", "rfa", 2)]
+SEEDS = tuple(range(args.seeds))
 
 for comp_name, comp_spec in [
         ("no compression", {}),
         ("RandK K=0.1d", {"compressor": "randk",
                           "compressor_kwargs": {"ratio": 0.1}})]:
     print(f"\n=== Byz-VR-MARINA, {comp_name} "
-          f"({args.n_workers} workers, {args.n_byz} byzantine) ===")
+          f"({args.n_workers} workers, {args.n_byz} byzantine, "
+          f"{len(SEEDS)} seed{'s' if len(SEEDS) > 1 else ''}) ===")
     print(f"{'agg':>5} | " + " | ".join(f"{a:>9}" for a in ATTACKS))
     for label, rule, bucket in AGGS:
         base = BASE.replace(aggregator=rule, bucket_size=bucket, **comp_spec)
+        grid = {"attack": ATTACKS}
+        if len(SEEDS) > 1:
+            grid["seed"] = SEEDS
+        cells = list(Sweep(base, grid).expand())
+        srun = xc.run_cells(cells, run_kw={"log_every": args.iters})
         row = []
-        for _, spec in Sweep(base, {"attack": ATTACKS}).expand():
-            exp = build(spec)
-            result = exp.run(log_every=args.iters)
-            gap = float(exp.loss_fn(result.params, full)) - f_star
-            row.append(f"{gap:9.1e}")
+        for attack in ATTACKS:
+            gaps = [float(exp0.loss_fn(srun[rid].params, full)) - f_star
+                    for rid, spec in cells
+                    if spec.attack == attack and rid in srun]
+            row.append(f"{sum(gaps) / len(gaps):9.1e}" if gaps
+                       else f"{'failed':>9}")
         print(f"{label:>5} | " + " | ".join(row))
+        for rid, rec in srun.failures.items():
+            print(f"      ! {rid}: {rec['error']}")
 print("\n(cells = final optimality gap f(x)-f*; the paper's Fig. 1 pattern: "
       "CM/RFA rows reach ~0 everywhere, AVG breaks under BF/ALIE/IPM)")

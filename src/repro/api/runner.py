@@ -205,7 +205,17 @@ def run(spec, **run_kw) -> RunResult:
       verbose      — print per-log-step progress lines.
       warmup       — run one throwaway step first (compile) so wall_s is
                      steady-state; the trajectory is unchanged.
-      checkpoint   — path prefix: save final params via repro.checkpoint.
+      checkpoint   — path prefix: save the FULL engine state (params +
+                     estimator extras + step) via repro.checkpoint, at the
+                     end of the run and every ``checkpoint_every`` steps.
+      checkpoint_every — periodic checkpoint cadence in steps (needs
+                     ``checkpoint``); the crash-restart point.
+      resume       — checkpoint prefix to restart from: the engine state is
+                     restored and the loop continues at the saved step with
+                     the SAME key schedule, so an interrupted-and-resumed
+                     run reproduces the uninterrupted trajectory exactly.
+                     (history/comm_bits restart at the resume point — they
+                     cover the resumed segment only.)
       metrics_out  — path: dump ``RunResult.to_dict()`` JSON (spec included).
       callback     — fn(it, state, logged_metrics) probe (e.g. a benchmark's
                      gap-vs-f*); a truthy return stops the run early
@@ -221,6 +231,8 @@ def run(spec, **run_kw) -> RunResult:
 def _run_experiment(exp: Experiment, *, log_every: int = 10,
                     verbose: bool = False, warmup: bool = False,
                     checkpoint: Optional[str] = None,
+                    checkpoint_every: Optional[int] = None,
+                    resume: Optional[str] = None,
                     metrics_out: Optional[str] = None,
                     callback: Optional[Callable] = None,
                     callback_every: Optional[int] = None) -> RunResult:
@@ -230,6 +242,13 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
     params = exp.init_params(k_init)
     n_params = int(tu.tree_size(params))
     state = exp.method.init(params, exp.anchor(0), k_run)
+    start = 0
+    if resume:
+        from repro.checkpoint import load_checkpoint
+        state, ck_step = load_checkpoint(resume, like=state)
+        start = int(ck_step or 0)
+        if verbose:
+            print(f"[run] resumed from {resume}.npz at step {start}")
     step = jax.jit(exp.method.step)
 
     if warmup and spec.steps > 0:
@@ -239,11 +258,14 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
         jax.block_until_ready(thrown["g"])
         del thrown
 
+    if checkpoint:
+        from repro.checkpoint import save_checkpoint
+
     history = []
     comm_bits_total = 0.0
     pending_ck = []          # device arrays; synced only on log steps so the
     t0 = time.time()         # loop keeps JAX's async dispatch pipelined
-    for it in range(spec.steps):
+    for it in range(start, spec.steps):
         k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, it + 1))
         state, metrics = step(state, exp.minibatch(it, k_batch),
                               exp.anchor(it), k_step)
@@ -274,14 +296,21 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
                 if not do_log:           # record the stop point
                     history.append(m)
                 break                    # callback asked for early stop
+        if (checkpoint and checkpoint_every
+                and (it + 1) % checkpoint_every == 0 and not last):
+            save_checkpoint(checkpoint, state, step=int(state["step"]))
+            if verbose:
+                print(f"[run] checkpoint @ step {it + 1} -> "
+                      f"{checkpoint}.npz")
     jax.block_until_ready(state["g"])
     result = RunResult(spec=spec, history=history, state=state,
                        n_params=n_params, comm_bits=comm_bits_total,
                        wall_s=time.time() - t0)
 
     if checkpoint:
-        from repro.checkpoint import save_checkpoint
-        save_checkpoint(checkpoint, state["params"], step=int(state["step"]))
+        # the FULL engine state (params + estimator extras + step), so a
+        # later run(..., resume=checkpoint) restarts the exact trajectory
+        save_checkpoint(checkpoint, state, step=int(state["step"]))
         if verbose:
             print(f"[run] checkpoint -> {checkpoint}.npz")
     if metrics_out:

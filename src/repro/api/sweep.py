@@ -19,8 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import json
-import os
 import re
 from typing import Mapping, Sequence
 
@@ -65,17 +63,27 @@ class Sweep:
             yield self.run_id(overrides), self.base.replace(**overrides)
 
 
-def run_sweep(sweep: Sweep, *, out_dir: str = None, **run_kw) -> dict:
-    """Run every cell; returns {run_id: RunResult}. With ``out_dir``, each
-    cell's resolved spec + trajectory is written to ``<run_id>.json`` so the
-    sweep is reproducible from artifacts alone."""
-    results = {}
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-    for run_id, spec in sweep.expand():
-        result = spec.run(**run_kw)
-        results[run_id] = result
-        if out_dir:
-            with open(os.path.join(out_dir, run_id + ".json"), "w") as f:
-                json.dump(result.to_dict(), f, indent=1)
-    return results
+def run_sweep(sweep: Sweep, *, out_dir: str = None, resume: bool = False,
+              batch="auto", pool=None, ledger_path: str = None,
+              summary_out: str = None, cell_hook=None, **run_kw):
+    """Run every cell through the batched execution engine (repro.exec).
+
+    Returns a ``SweepRun`` — a mapping ``{run_id: result}`` exactly like
+    the old dict (live ``RunResult``s for cells run here, loaded
+    ``CompletedCell``s for resumed ones), plus ``.artifacts`` /
+    ``.failures`` / ``.stats``. Same-signature multi-seed cells run as ONE
+    vmapped jitted trajectory (``batch=False`` opts out); with
+    ``out_dir``, each cell writes ``<run_id>.json`` and the crash-safe
+    ledger (``ledger.jsonl``) makes ``resume=True`` skip completed cells.
+    ``pool=exec.WorkerPool(...)`` shards un-batchable cells over pinned
+    worker subprocesses; ``summary_out`` writes the mean±std-over-seeds
+    summary table (exec.aggregate). A failing cell is isolated and
+    recorded, not raised — check ``.failures``.
+    """
+    from repro import exec as xc
+    srun = xc.run_cells(list(sweep.expand()), out_dir=out_dir,
+                        ledger_path=ledger_path, resume=resume, batch=batch,
+                        pool=pool, run_kw=run_kw, cell_hook=cell_hook)
+    if summary_out:
+        xc.write_summary(summary_out, xc.summarize(srun.artifacts))
+    return srun

@@ -17,7 +17,6 @@ CM∘Bucketing (c=O(d), δ<1/2) all satisfy Def. 2.1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -57,12 +57,25 @@ def _shard_map(body, mesh, in_specs, out_specs):
 
 # route the per-device coordinate rule through the Pallas kernel
 # (kernels/robust_agg.py): fused bucket-mean + sort in VMEM, one HBM sweep.
-# Interpret-mode on CPU; compiled on TPU. Toggled by the launcher (§Perf).
-USE_PALLAS_AGG = [False]
+# None = auto: default-ON where the kernel compiles (TPU), off on CPU/GPU
+# hosts where interpret-mode would only slow the rule down. Explicit
+# True/False (tests, launchers) or REPRO_PALLAS_AGG=0/1 override auto.
+USE_PALLAS_AGG = [None]
+
+
+def use_pallas_agg() -> bool:
+    """Resolve the kernel toggle: explicit setting > env var > backend."""
+    if USE_PALLAS_AGG[0] is not None:
+        return bool(USE_PALLAS_AGG[0])
+    import os
+    env = os.environ.get("REPRO_PALLAS_AGG")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "off", "no")
+    return jax.default_backend() == "tpu"
 
 
 def _coord_rule(agg, y, key):
-    if USE_PALLAS_AGG[0] and agg.rule in ("cm", "tm", "mean"):
+    if use_pallas_agg() and agg.rule in ("cm", "tm", "mean"):
         from repro.kernels.ops import robust_agg as pallas_agg
         rule = {"cm": "median", "tm": "trimmed", "mean": "mean"}[agg.rule]
         k = key if agg.bucket_size > 1 else None
@@ -141,15 +154,15 @@ def tree_aggregate_pallas(cfg, key, sent):
     leaves, treedef = jax.tree.flatten(sent)
     n = leaves[0].shape[0]
     flat = jnp.concatenate(
-        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+        [x.reshape(n, -1).astype(jnp.float32) for x in leaves], axis=1)
     rule = {"cm": "median", "tm": "trimmed", "mean": "mean"}[agg.rule]
     bucketed = agg.bucket_size > 1 and agg.rule != "mean"
     out = pallas_agg(flat, key if bucketed else None,
                      bucket_size=agg.bucket_size if bucketed else 1,
                      rule=rule, trim=agg.trim)
     outs, off = [], 0
-    for l in leaves:
-        sz = l[0].size
-        outs.append(out[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+    for x in leaves:
+        sz = x[0].size
+        outs.append(out[off:off + sz].reshape(x.shape[1:]).astype(x.dtype))
         off += sz
     return jax.tree.unflatten(treedef, outs)

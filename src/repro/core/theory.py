@@ -11,7 +11,6 @@ import dataclasses
 import math
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 

@@ -1,0 +1,28 @@
+"""repro.exec — batched, resumable sweep execution (DESIGN.md §1.6).
+
+The paper's evidence is grids; this subsystem owns running them at scale:
+
+* ``batching``  — group cells by jit signature (spec minus seed) and run
+                  each group as ONE vmapped-over-seeds jitted trajectory.
+* ``scheduler`` — ``run_cells``: the orchestrator (vmapped groups
+                  in-process, un-batchable cells optionally sharded over a
+                  pinned subprocess ``WorkerPool``, failure isolation).
+* ``ledger``    — crash-safe append-only JSONL journal giving
+                  ``resume=True`` (skip done, re-run failed) + provenance.
+* ``aggregate`` — fold per-cell artifacts into mean±std-over-seeds
+                  summary tables (``experiments/bench/*_summary.json``).
+* ``worker``    — the ``python -m repro.exec.worker`` subprocess entry.
+
+CLI: ``python -m repro.launch.sweep`` (see README "Running paper grids").
+``api.sweep.run_sweep`` routes every sweep through this engine.
+"""
+from repro.exec.aggregate import (  # noqa: F401
+    load_artifacts, summarize, summarize_dir, write_summary,
+)
+from repro.exec.batching import (  # noqa: F401
+    can_batch, group_cells, group_key, run_group,
+)
+from repro.exec.ledger import Ledger, device_kind, git_sha  # noqa: F401
+from repro.exec.scheduler import (  # noqa: F401
+    CompletedCell, SweepRun, WorkerPool, run_cells,
+)

@@ -1,0 +1,159 @@
+"""Jit-signature grouping + vmapped multi-seed execution (DESIGN.md §1.6).
+
+A sweep cell's jit signature is its spec minus the ``seed`` field: two
+cells that differ only in seed trace to the *same* jitted trajectory, so a
+5-seed x 6-cell grid costs 6 compiles instead of 30 when each group runs
+as one ``jax.vmap``-over-seeds step. ``group_cells`` partitions cells by
+that signature; ``run_group`` executes one group as a single jitted
+``vmap(step)`` with the iteration index passed as a traced scalar, so the
+whole trajectory is exactly ONE compile (``stats["step_compiles"]``).
+
+Per-seed semantics mirror ``api.runner`` exactly — the same canonical key
+schedule (``split(fold_in(k_run, it + 1))``), log cadence, and per-seed
+communication accounting — so a vmapped trajectory is numerically
+equivalent to the serial one (bit-level differences are float
+reassociation only; pinned to ~1e-6 by tests/test_exec_batching.py).
+
+Batching eligibility (``can_batch``) is conservative: the logreg task
+(shared dataset; the LM TokenStream bakes the seed into its data stream)
+on the dense gspmd backend (vmap over shard_map / pallas grids is not
+supported), with no host-side callback in the loop knobs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Mapping, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.api.runner import RunResult, build
+from repro.core import tree_utils as tu
+
+GROUP_AXIS = "seed"
+
+# loop knobs a vmapped group understands; anything else forces serial cells
+_BATCHABLE_RUN_KW = {"log_every", "warmup", "verbose"}
+
+
+def group_key(spec) -> str:
+    """Canonical jit-signature key: the spec dict minus the seed axis."""
+    d = spec.to_dict()
+    d.pop(GROUP_AXIS, None)
+    return json.dumps(d, sort_keys=True)
+
+
+def group_cells(cells: Sequence[Tuple[str, object]]):
+    """[(run_id, spec)] -> [(key, [(run_id, spec), ...])] preserving the
+    first-seen order of both groups and members."""
+    groups: dict = {}
+    order = []
+    for run_id, spec in cells:
+        key = group_key(spec)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append((run_id, spec))
+    return [(key, groups[key]) for key in order]
+
+
+def can_batch(cells: Sequence[Tuple[str, object]],
+              run_kw: Mapping = None) -> bool:
+    """True when a same-signature group can run as one vmapped trajectory."""
+    if len(cells) < 2:
+        return False                     # nothing to amortize
+    if run_kw and set(run_kw) - _BATCHABLE_RUN_KW:
+        return False                     # callbacks/checkpoints are per-cell
+    spec = cells[0][1]
+    if spec.task != "logreg":
+        return False                     # TokenStream data is seed-baked
+    if spec.agg_mode != "gspmd":
+        return False                     # shard_map/pallas don't vmap
+    seen = set()
+    for _, s in cells:
+        if group_key(s) != group_key(spec) or s.seed in seen:
+            return False
+        seen.add(s.seed)
+    return True
+
+
+def run_group(cells: Sequence[Tuple[str, object]], *, log_every: int = 10,
+              warmup: bool = False, verbose: bool = False):
+    """Run one same-signature group as a single vmapped trajectory.
+
+    Returns ``({run_id: RunResult}, stats)``; each RunResult carries the
+    per-seed slice of the batched state and its own history/communication
+    accounting, shaped exactly like the serial runner's.
+    """
+    assert can_batch(cells), "run_group needs a batchable group"
+    exp = build(cells[0][1])
+    spec0 = exp.spec
+    seeds = jax.numpy.asarray([s.seed for _, s in cells])
+    k = len(cells)
+    anchor = exp.anchor(0)               # logreg: constant anchor set
+
+    def init_one(seed):
+        k_init, k_run = jax.random.split(jax.random.PRNGKey(seed))
+        params = exp.init_params(k_init)
+        return exp.method.init(params, anchor, k_run), k_run
+
+    states, k_runs = jax.vmap(init_one)(seeds)
+    n_params = int(tu.tree_size(exp.init_params(jax.random.PRNGKey(0))))
+
+    def step_one(state, k_run, it):
+        k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, it + 1))
+        return exp.method.step(state, exp.minibatch(it, k_batch), anchor,
+                               k_step)
+
+    # `it` is a traced scalar, so every round of every seed shares ONE
+    # compilation — the whole point of the batched engine.
+    vstep = jax.jit(jax.vmap(step_one, in_axes=(0, 0, None)))
+
+    if warmup and spec0.steps > 0:
+        thrown, _ = vstep(states, k_runs, 0)
+        jax.block_until_ready(thrown["g"])
+        del thrown
+
+    histories = [[] for _ in range(k)]
+    comm_bits = [0.0] * k
+    pending_ck = []                      # per-step (k,) arrays; synced lazily
+    t0 = time.time()
+    metrics = {}
+    for it in range(spec0.steps):
+        states, metrics = vstep(states, k_runs, it)
+        pending_ck.append(metrics.get("c_k"))
+        last = it == spec0.steps - 1
+        if it % max(log_every, 1) == 0 or last:
+            for ck in pending_ck:
+                cks = None if ck is None else np.asarray(ck)
+                for i in range(k):
+                    comm_bits[i] += exp.method.round_bits(
+                        n_params, True if cks is None else bool(cks[i]))
+            pending_ck.clear()
+            mats = {name: np.asarray(v) for name, v in metrics.items()}
+            wall = round(time.time() - t0, 2)
+            for i in range(k):
+                m = {name: float(v[i]) for name, v in mats.items()}
+                m["step"] = it
+                m["wall_s"] = wall
+                m["comm_bits"] = comm_bits[i]
+                m["comm_gbits"] = round(comm_bits[i] / 1e9, 4)
+                histories[i].append(m)
+            if verbose:
+                loss = mats.get("loss")
+                print(f"  [group x{k}] step {it:5d} "
+                      f"loss {np.mean(loss):.4f} ({wall}s)")
+    jax.block_until_ready(states["g"])
+    wall_s = time.time() - t0
+
+    results = {}
+    for i, (run_id, spec) in enumerate(cells):
+        state_i = jax.tree.map(lambda x, i=i: x[i], states)
+        results[run_id] = RunResult(
+            spec=spec, history=histories[i], state=state_i,
+            n_params=n_params, comm_bits=comm_bits[i], wall_s=wall_s)
+    cache_size = getattr(vstep, "_cache_size", lambda: 1)()
+    stats = {"group_size": k, "steps": spec0.steps,
+             "step_compiles": cache_size}
+    return results, stats

@@ -1,0 +1,45 @@
+"""Subprocess worker entry point for the sweep scheduler.
+
+``python -m repro.exec.worker --spec cell.spec.json --out cell.json``
+runs ONE sweep cell in a fresh process and writes the artifact JSON
+(``RunResult.to_dict()``) atomically. The scheduler launches this with
+per-worker ``CUDA_VISIBLE_DEVICES`` / ``JAX_PLATFORMS`` already pinned in
+the environment — device selection must happen before jax initializes,
+which is exactly why un-batchable cells get a process each. Exit code 0
+means the artifact was written; anything else (traceback on stderr) is a
+failed cell the scheduler records and isolates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="run one sweep cell")
+    ap.add_argument("--spec", required=True,
+                    help="path to the cell's RunSpec JSON")
+    ap.add_argument("--out", required=True,
+                    help="artifact path for RunResult.to_dict() JSON")
+    ap.add_argument("--run-kw", default="{}",
+                    help="JSON dict of loop knobs (log_every, warmup, ...)")
+    args = ap.parse_args(argv)
+
+    from repro.api import RunSpec, run
+    with open(args.spec) as f:
+        spec = RunSpec.from_json(f.read())
+    result = run(spec, **json.loads(args.run_kw))
+
+    payload = result.to_dict()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    tmp = args.out + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,7 +80,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "--compressor is not given")
     # loop knobs (live in the shared runner, not the spec)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint", default=None,
+                    help="path prefix: save the full engine state (final + "
+                         "every --checkpoint-every steps)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="periodic checkpoint cadence in steps")
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="restart from a checkpoint prefix the runner "
+                         "wrote; the trajectory continues exactly where "
+                         "the interrupted run left off")
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--spec", default=None,
                     help="load a serialized RunSpec JSON (flags ignored)")
@@ -155,6 +163,8 @@ def main():
           f"backend={spec.agg_mode})")
     result = exp.run(log_every=args.log_every, verbose=True,
                      checkpoint=args.checkpoint,
+                     checkpoint_every=args.checkpoint_every,
+                     resume=args.resume,
                      metrics_out=args.metrics_out)
     return result.history
 

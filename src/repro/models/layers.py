@@ -7,7 +7,6 @@ plain nested dicts so the whole model is a vanilla pytree (no framework dep).
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -57,7 +57,8 @@ class Adam:
     weight_decay: float = 0.0     # decoupled (AdamW)
 
     def init(self, params):
-        z = lambda x: jnp.zeros_like(x, jnp.float32)
+        def z(x):
+            return jnp.zeros_like(x, jnp.float32)
         return {"m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params),
                 "t": jnp.zeros((), jnp.int32)}

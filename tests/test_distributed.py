@@ -111,14 +111,19 @@ for k in sent:
                                rtol=1e-5, atol=1e-6)
 print("A2A_OK")
 
-# Pallas-kernel aggregation path inside the shard_map body (future-work #3)
+# Pallas-kernel aggregation path inside the shard_map body: default-on for
+# TPU backends (use_pallas_agg auto), pinned here via the env-var override
 from repro.core import sharded_agg
-sharded_agg.USE_PALLAS_AGG[0] = True
+assert sharded_agg.use_pallas_agg() == (jax.default_backend() == "tpu")
+os.environ["REPRO_PALLAS_AGG"] = "1"
+assert sharded_agg.use_pallas_agg()
 try:
     with mesh:
         got_p = jax.jit(lambda s: tree_aggregate_all_to_all(cfg, key, s))(sent)
 finally:
-    sharded_agg.USE_PALLAS_AGG[0] = False
+    os.environ["REPRO_PALLAS_AGG"] = "0"
+    assert not sharded_agg.use_pallas_agg()
+    del os.environ["REPRO_PALLAS_AGG"]
 for k in sent:
     np.testing.assert_allclose(np.asarray(got_p[k]), np.asarray(want[k]),
                                rtol=1e-5, atol=1e-6)

@@ -1,0 +1,166 @@
+"""exec/ledger + scheduler resume semantics: crash-safe JSONL round-trip,
+skip-completed / re-run-failed, and the killed-and-resumed-sweep ≡
+uninterrupted-sweep bit-for-bit guarantee."""
+import json
+import os
+
+from repro import exec as xc
+from repro.api import RunSpec, Sweep
+
+STEPS = 3
+
+
+def _base(**kw):
+    d = dict(task="logreg", method="marina", n_workers=5, n_byz=1, p=0.3,
+             lr=0.25, attack="ALIE", aggregator="cm", bucket_size=2,
+             steps=STEPS,
+             data_kwargs={"n_samples": 60, "dim": 8, "batch_size": 8,
+                          "data_seed": 0})
+    d.update(kw)
+    return RunSpec(**d)
+
+
+def _cells(grid=None):
+    return list(Sweep(_base(), grid or {"aggregator": ("mean", "cm"),
+                                        "seed": (0, 1, 2)}).expand())
+
+
+def _summary_bytes(out_dir):
+    path = xc.write_summary(os.path.join(out_dir, "x_summary.json"),
+                            xc.summarize_dir(out_dir))
+    with open(path, "rb") as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# ledger round-trip
+# ---------------------------------------------------------------------------
+
+def test_ledger_roundtrip(tmp_path):
+    led = xc.Ledger(str(tmp_path / "ledger.jsonl"))
+    led.append("a", "started", spec={"seed": 0})
+    led.append("a", "done", wall_s=1.5)
+    led.append("b", "started")
+    led.append("c", "failed", error="ValueError: boom")
+    assert led.completed() == {"a"}
+    assert led.failed() == {"c"}
+    assert led.record("a")["wall_s"] == 1.5
+    assert led.record("b")["status"] == "started"
+    recs = list(led.iter_records())
+    assert [r["run_id"] for r in recs] == ["a", "a", "b", "c"]
+
+
+def test_ledger_tolerates_torn_trailing_line(tmp_path):
+    led = xc.Ledger(str(tmp_path / "ledger.jsonl"))
+    led.append("a", "done")
+    with open(led.path, "a") as f:
+        f.write('{"run_id": "b", "status": "do')     # killed mid-write
+    assert led.completed() == {"a"}
+    led.append("b", "done")                          # appends still work
+    assert led.completed() == {"a", "b"}
+
+
+# ---------------------------------------------------------------------------
+# resume semantics
+# ---------------------------------------------------------------------------
+
+def test_killed_and_resumed_sweep_is_bit_identical(tmp_path):
+    """Kill mid-sweep (mid-group, even), resume, and the summary must be
+    byte-for-byte the uninterrupted sweep's."""
+    cells = _cells()
+    d1, d2 = str(tmp_path / "full"), str(tmp_path / "killed")
+    xc.run_cells(cells, out_dir=d1, run_kw={"log_every": 1})
+    # "kill" after 4 of 6 cells: the first vmapped group committed, the
+    # second is torn mid-group
+    xc.run_cells(cells[:4], out_dir=d2, run_kw={"log_every": 1})
+    srun = xc.run_cells(cells, out_dir=d2, resume=True,
+                        run_kw={"log_every": 1})
+    # the finished group was skipped; the torn group re-ran at full width
+    assert len(srun.skipped) == 3
+    assert srun.stats["executed_cells"] == 3
+    assert _summary_bytes(d1) == _summary_bytes(d2)
+
+
+def test_resume_skips_done_and_reruns_failed(tmp_path):
+    cells = _cells({"seed": (0, 1)})
+    out = str(tmp_path / "sweep")
+    first = xc.run_cells(cells, out_dir=out, run_kw={"log_every": 1})
+    assert first.stats["executed_cells"] == 2
+    # mark one cell failed (as a crashed worker would) + drop its artifact
+    rid = cells[0][0]
+    led = xc.Ledger(os.path.join(out, "ledger.jsonl"))
+    led.append(rid, "failed", error="simulated")
+    os.unlink(os.path.join(out, rid + ".json"))
+    srun = xc.run_cells(cells, out_dir=out, resume=True,
+                        run_kw={"log_every": 1})
+    # the failed cell re-ran; with its group partial, full-width re-run
+    # covers both members (bit-identical policy), never fewer
+    assert srun.stats["executed_cells"] == 2
+    assert led.completed() == {c[0] for c in cells}
+
+
+def test_resume_serial_cells_skip_individually(tmp_path):
+    cells = _cells({"aggregator": ("mean", "cm")})    # 1 seed -> serial
+    out = str(tmp_path / "sweep")
+    xc.run_cells(cells[:1], out_dir=out, run_kw={"log_every": 1})
+    srun = xc.run_cells(cells, out_dir=out, resume=True,
+                        run_kw={"log_every": 1})
+    assert srun.skipped == {cells[0][0]}
+    assert srun.stats["executed_cells"] == 1
+    assert len(srun) == 2
+
+
+def test_failure_isolation_records_and_continues(tmp_path, monkeypatch):
+    cells = _cells({"aggregator": ("mean", "cm")})
+    real_run = xc.scheduler.run_spec
+
+    def boom(spec, **kw):
+        if spec.aggregator == "mean":
+            raise RuntimeError("diverged")
+        return real_run(spec, **kw)
+
+    monkeypatch.setattr(xc.scheduler, "run_spec", boom)
+    srun = xc.run_cells(cells, out_dir=str(tmp_path),
+                        run_kw={"log_every": 1})
+    assert set(srun.failures) == {cells[0][0]}
+    assert "diverged" in srun.failures[cells[0][0]]["error"]
+    assert cells[1][0] in srun                         # grid kept going
+    led = xc.Ledger(str(tmp_path / "ledger.jsonl"))
+    assert led.failed() == {cells[0][0]}
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+def test_summary_shape_and_determinism(tmp_path):
+    cells = _cells()
+    srun = xc.run_cells(cells, out_dir=str(tmp_path),
+                        run_kw={"log_every": 1})
+    s1 = xc.summarize(srun.artifacts)
+    s2 = xc.summarize_dir(str(tmp_path))               # via artifacts on disk
+    assert json.dumps(s1, sort_keys=True) == json.dumps(s2, sort_keys=True)
+    assert s1["n_cells"] == 6 and s1["n_groups"] == 2
+    labels = {g["label"] for g in s1["groups"]}
+    assert labels == {"aggregator=mean", "aggregator=cm"}
+    for g in s1["groups"]:
+        assert g["seeds"] == [0, 1, 2] and g["n_seeds"] == 3
+        assert "wall_s" not in g["final"]              # timing excluded
+        assert g["final"]["loss"]["n"] == 3
+    assert s1["best"]["metric"] == "loss"
+
+
+def test_ledger_records_provenance(tmp_path):
+    cells = _cells({"seed": (0,)})
+    xc.run_cells(cells, out_dir=str(tmp_path), run_kw={"log_every": 1})
+    done = [r for r in
+            xc.Ledger(str(tmp_path / "ledger.jsonl")).iter_records()
+            if r["status"] == "done"]
+    assert done
+    for rec in done:
+        assert rec["git_sha"]
+        assert rec["device_kind"].split(":")[0] in ("cpu", "gpu", "tpu")
+        assert rec["engine"] in ("serial", "vmapped", "subprocess")
+    started = xc.Ledger(str(tmp_path / "ledger.jsonl")).iter_records()
+    spec_recs = [r for r in started if r["status"] == "started"]
+    assert spec_recs[0]["spec"] == cells[0][1].to_dict()

@@ -1,0 +1,60 @@
+"""sharded_agg.USE_PALLAS_AGG auto default: ON for TPU backends, off on
+CPU/GPU hosts, env-var override both ways — and the per-device coordinate
+rule the a2a path routes through the fused kernel must match the jnp rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sharded_agg
+from repro.core.aggregators import get_aggregator
+
+
+@pytest.fixture
+def pallas_auto(monkeypatch):
+    """Reset the toggle to auto and scrub the env override."""
+    old = sharded_agg.USE_PALLAS_AGG[0]
+    sharded_agg.USE_PALLAS_AGG[0] = None
+    monkeypatch.delenv("REPRO_PALLAS_AGG", raising=False)
+    yield
+    sharded_agg.USE_PALLAS_AGG[0] = old
+
+
+def test_auto_default_keys_on_backend(pallas_auto):
+    assert sharded_agg.use_pallas_agg() == \
+           (jax.default_backend() == "tpu")
+
+
+def test_env_var_opt_in_and_out(pallas_auto, monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_AGG", "1")
+    assert sharded_agg.use_pallas_agg()
+    monkeypatch.setenv("REPRO_PALLAS_AGG", "0")
+    assert not sharded_agg.use_pallas_agg()
+    monkeypatch.setenv("REPRO_PALLAS_AGG", "off")
+    assert not sharded_agg.use_pallas_agg()
+
+
+def test_explicit_toggle_beats_env(pallas_auto, monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_AGG", "0")
+    sharded_agg.USE_PALLAS_AGG[0] = True
+    assert sharded_agg.use_pallas_agg()
+    monkeypatch.setenv("REPRO_PALLAS_AGG", "1")
+    sharded_agg.USE_PALLAS_AGG[0] = False
+    assert not sharded_agg.use_pallas_agg()
+
+
+@pytest.mark.parametrize("rule,bucket", [("cm", 1), ("cm", 2), ("tm", 2),
+                                         ("mean", 1)])
+def test_coord_rule_pallas_matches_jnp(pallas_auto, rule, bucket):
+    """Parity pin for the a2a path's per-device rule: the fused kernel
+    (interpret mode on CPU) ≡ the jnp rule, bucketing included."""
+    agg = get_aggregator(rule, bucket_size=bucket, n_byz=1)
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(jax.random.PRNGKey(1), (8, 96), jnp.float32)
+
+    sharded_agg.USE_PALLAS_AGG[0] = False
+    want = sharded_agg._coord_rule(agg, y, key)
+    sharded_agg.USE_PALLAS_AGG[0] = True
+    got = sharded_agg._coord_rule(agg, y, key)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
