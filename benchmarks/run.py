@@ -3,7 +3,10 @@
   fig1      Fig. 1  — 3 aggregators x 5 attacks optimality gaps (+ RandK)
   table2    Tbl. 2  — rounds-to-epsilon, Byz-VR-MARINA vs baselines
   fig8      Fig. 8  — optimality gap vs transmitted bits
-  agg       (system) server-side aggregation throughput, jnp vs Pallas
+  agg       (system) aggregation throughput, jnp vs Pallas, ALL five rules
+            x bucketing; analytic HBM-sweep roofline accounting ->
+            experiments/bench/BENCH_agg.json (the aggregator-perf
+            trajectory, uploaded by the CI bench job)
   compress  (system) compressor throughput + wire compression
   roofline  §Roofline terms from the dry-run artifacts
   sweep     (system) sweep engine: serial vs vmapped-batched grid execution

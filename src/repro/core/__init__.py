@@ -15,7 +15,7 @@ from repro.core.attacks import Attack, get_attack              # noqa: F401
 from repro.core.compressors import Compressor, get_compressor  # noqa: F401
 from repro.core.engine import (                                # noqa: F401
     AGG_BACKENDS, GradientEstimator, Method, aggregate, apply_attack,
-    list_methods, make_method,
+    list_methods, make_method, message_phase,
 )
 from repro.core.byz_vr_marina import (                         # noqa: F401
     ByzVRMarinaConfig, make_step, make_init, train_state,

@@ -138,6 +138,13 @@ class Aggregator:
         all_to_all sharded-aggregation path (DESIGN.md §3)."""
         return self.rule in ("mean", "cm", "tm")
 
+    @property
+    def norm_based(self) -> bool:
+        """RFA/Krum: rules driven by global inter-worker distances. Served
+        by the fused kernels/norm_agg path under agg_mode=pallas; this jnp
+        tree path is their parity oracle."""
+        return self.rule in ("rfa", "krum")
+
     # -- flat path ---------------------------------------------------------
     def __call__(self, key, x, axis_name=None):
         if self.bucket_size > 1 and self.rule != "mean":
@@ -201,6 +208,10 @@ class Aggregator:
 # ---------------------------------------------------------------------------
 
 RULES = ("mean", "cm", "tm", "rfa", "krum")
+
+# registry rule name -> kernels/robust_agg coordinate-rule name (the single
+# translation point for every kernel dispatch site)
+COORD_KERNEL_RULE = {"mean": "mean", "cm": "median", "tm": "trimmed"}
 
 
 def get_aggregator(name: str, *, bucket_size: int = 0, **kw) -> Aggregator:

@@ -17,14 +17,45 @@ it actually sends:
 good_mean/good_std are the coordinate-wise mean/std over the good workers'
 updates — the standard omniscient-adversary model. In the distributed trainer
 these are computed with masked psums over the worker mesh axis.
+
+Deterministic per-coordinate attacks (BF/ALIE/IPM) additionally carry a
+``coord_apply(x2d, mean_row, std_row) -> attacked2d`` form — a pure
+elementwise/broadcast function over a (n, TILE_D) block — so the pallas
+aggregation backend can inject the attack inside the kernel's VMEM load and
+never write the attacked (n, d) ``sent`` tensor to HBM (DESIGN.md §3). RN
+stays kernel-unfusable (it needs the exact jax.random normal stream).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordAttack:
+    """Kernel-fusable attack form: (x (n, t), mean (1, t) | None,
+    std (1, t) | None) -> attacked (n, t), pure elementwise/broadcast.
+
+    A frozen dataclass (hash/eq by (kind, param)) rather than a closure on
+    purpose: it rides as a STATIC jit argument through the Pallas kernel
+    wrappers, so two configs built from the same logical attack hit the
+    same compiled kernels instead of re-tracing per ``get_attack()`` call
+    (and pinning every dead closure in the jit caches).
+    """
+    kind: str                       # BF | ALIE | IPM
+    param: float = 0.0              # ALIE z / IPM eps
+
+    def __call__(self, x, m, s):
+        if self.kind == "BF":
+            return -x
+        if self.kind == "ALIE":
+            return jnp.broadcast_to(m - self.param * s, x.shape)
+        if self.kind == "IPM":
+            return jnp.broadcast_to(-self.param * m, x.shape)
+        raise ValueError(self.kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +63,10 @@ class Attack:
     name: str
     apply: Callable                 # (key, honest, good_mean, good_std) -> v
     flips_labels: bool = False
+    # kernel-fusable form; None = attack must materialize via ``apply``.
+    coord_apply: Optional[CoordAttack] = None
+    needs_mean: bool = False        # which omniscient stats coord_apply reads
+    needs_std: bool = False
 
 
 def no_attack() -> Attack:
@@ -44,21 +79,26 @@ def label_flip() -> Attack:
 
 
 def bit_flip() -> Attack:
-    return Attack("BF", lambda key, h, m, s: -h)
+    return Attack("BF", lambda key, h, m, s: -h,
+                  coord_apply=CoordAttack("BF"))
 
 
 def alie(z: float = 1.06) -> Attack:
     """mu_G - z * sigma_G: hides just outside the honest cluster."""
     def apply(key, h, m, s):
         return jnp.broadcast_to((m - z * s).astype(h.dtype), h.shape)
-    return Attack("ALIE", apply)
+
+    return Attack("ALIE", apply, coord_apply=CoordAttack("ALIE", z),
+                  needs_mean=True, needs_std=True)
 
 
 def ipm(eps: float = 0.1) -> Attack:
     """-(eps) * mean of good updates: flips the aggregate's inner product."""
     def apply(key, h, m, s):
         return jnp.broadcast_to((-eps * m).astype(h.dtype), h.shape)
-    return Attack("IPM", apply)
+
+    return Attack("IPM", apply, coord_apply=CoordAttack("IPM", eps),
+                  needs_mean=True)
 
 
 def random_noise(scale: float = 10.0) -> Attack:

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.byz_vr_marina import ByzVRMarinaConfig   # noqa: F401
-from repro.core.engine import aggregate, apply_attack, make_method
+from repro.core.engine import make_method, message_phase
 from repro.core import tree_utils as tu
 
 
@@ -166,8 +166,7 @@ def make_byrd_saga_step(cfg: ByzVRMarinaConfig, grad_sample_fn, n_samples,
         v, tables, means = jax.vmap(
             lambda t, tm, x, y, i: one_worker(params, t, tm, x, y, i)
         )(state["tables"], state["table_means"], xw, yw, idx)
-        sent = apply_attack(cfg, k_attack, v)
-        g = aggregate(cfg, k_agg, sent)
+        g = message_phase(cfg, k_attack, k_agg, v)
         new_params = _sgd_update(params, g, cfg.lr)
         return ({"params": new_params, "tables": tables,
                  "table_means": means, "step": state["step"] + 1},

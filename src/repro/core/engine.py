@@ -28,9 +28,12 @@ Aggregation-backend dispatch (``aggregate``):
   * ``sparse_support`` — common-randomness RandK support-only aggregation
                          (handled inside the MARINA estimator; dense rounds
                          stay gspmd).
-  * ``pallas``         — the fused one-HBM-sweep kernel (kernels/robust_agg)
-                         over the flattened candidate pytree, for
-                         coordinate-wise rules; jnp fallback for RFA/Krum.
+  * ``pallas``         — one-sweep-per-pass Pallas kernels for EVERY rule
+                         (kernels/robust_agg + kernels/norm_agg), launched
+                         leaf-wise with the bucketing permutation carried
+                         on-chip; ``message_phase`` additionally fuses
+                         kernel-fusable attacks into the aggregation load so
+                         the attacked tensor never hits HBM.
 """
 from __future__ import annotations
 
@@ -96,6 +99,35 @@ def aggregate(cfg, key, sent):
     # backstop only: ByzVRMarinaConfig/RunSpec validate agg_mode eagerly at
     # construction, so a hand-rolled cfg is the only way to get here.
     raise ValueError(f"agg_mode {mode!r} not in {AGG_BACKENDS}")
+
+
+def message_phase(cfg, attack_key, agg_key, cand):
+    """Lines 9-10 of the round: omniscient attack, then robust aggregation.
+
+    For ``agg_mode="pallas"`` with a kernel-fusable attack (BF/ALIE/IPM via
+    ``Attack.coord_apply``; NA/LF and n_byz=0 trivially) the injection
+    happens inside the aggregation kernels' VMEM load — the attacked
+    ``sent`` tensor is never written to HBM (DESIGN.md §3). RN (needs the
+    exact jax.random stream) and the other backends materialize ``sent``
+    via ``apply_attack`` as before.
+    """
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import AttackCtx, tree_aggregate_pallas
+        clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
+        if clean:
+            return tree_aggregate_pallas(cfg, agg_key, cand)
+        if cfg.attack.coord_apply is not None:
+            mask = cfg.byz_mask()
+            means = stds = None
+            if cfg.attack.needs_mean or cfg.attack.needs_std:
+                means, stds = tu.masked_mean_std(cand, ~mask)
+                if not cfg.attack.needs_std:
+                    stds = None
+            ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
+                            means=means, stds=stds)
+            return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx)
+    sent = apply_attack(cfg, attack_key, cand)
+    return aggregate(cfg, agg_key, sent)
 
 
 def param_update(cfg, params, g, opt_state):
@@ -217,8 +249,7 @@ def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
         if ro.g_new is not None:
             g = ro.g_new
         else:
-            sent = apply_attack(cfg, keys["attack"], ro.cand)
-            agg = aggregate(cfg, keys["agg"], sent)
+            agg = message_phase(cfg, keys["attack"], keys["agg"], ro.cand)
             if ro.finalize is not None:
                 g, fin_updates = ro.finalize(agg)
                 updates.update(fin_updates)

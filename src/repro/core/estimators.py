@@ -33,8 +33,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import tree_utils as tu
-from repro.core.engine import (GradientEstimator, RoundOutput, aggregate,
-                               apply_attack, stacked_grads)
+from repro.core.engine import (GradientEstimator, RoundOutput,
+                               apply_attack, message_phase, stacked_grads)
 
 
 def _zeros_like_f32(params):
@@ -68,8 +68,7 @@ class MarinaEstimator(GradientEstimator):
         k_grad, k_attack, k_agg = jax.random.split(key, 3)
         wkeys = tu.per_worker_keys(k_grad, cfg.n_workers)
         _, grads = stacked_grads(loss_fn, params, anchor, wkeys)
-        sent = apply_attack(cfg, k_attack, grads)
-        return aggregate(cfg, k_agg, sent), {}
+        return message_phase(cfg, k_attack, k_agg, grads), {}
 
     def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
               keys):

@@ -4,12 +4,17 @@ Two backends live here, both reachable through the engine's ``agg_mode``
 dispatch (core/engine.py):
 
 * ``all_to_all``  — distributed robust aggregation via shard_map (below).
-* ``pallas``      — single-host/default-trainer dense path: the candidate
-                    pytree is flattened to one (n, D) matrix and routed
-                    through the fused bucket+sort Pallas kernel
-                    (kernels/robust_agg), so the one-HBM-sweep kernel serves
-                    the default (non-shard_map) trainer too. Norm-based
-                    rules (RFA/Krum) fall back to the jnp tree path.
+* ``pallas``      — single-host/default-trainer dense path: every rule
+                    (mean/cm/tm via kernels/robust_agg, RFA/Krum via
+                    kernels/norm_agg) runs as one-HBM-sweep-per-pass Pallas
+                    kernels. Zero-copy: leaves launch kernels LEAF-WISE
+                    sharing one on-chip bucketing operator (no concatenated
+                    (n, D) flat matrix), many tiny leaves pack into a single
+                    donated preallocated flat buffer, and a kernel-fusable
+                    omniscient attack (engine.message_phase) is injected in
+                    the kernels' VMEM load so the attacked ``sent`` tensor
+                    never hits HBM. The jnp tree path (Aggregator.tree) is
+                    kept as the parity oracle.
 
 Paper-faithful aggregation gathers every worker's full vector to every
 device (GSPMD all-gather: n x d_local bytes in, n x d_local held in memory)
@@ -35,13 +40,16 @@ touches local contiguous shards and the re-layout disappears.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.aggregators import (_bucketize_perm, coord_median,
-                                    coord_trimmed_mean)
+from repro.core.aggregators import (COORD_KERNEL_RULE, _bucketize_perm,
+                                    coord_median, coord_trimmed_mean)
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -77,7 +85,7 @@ def use_pallas_agg() -> bool:
 def _coord_rule(agg, y, key):
     if use_pallas_agg() and agg.rule in ("cm", "tm", "mean"):
         from repro.kernels.ops import robust_agg as pallas_agg
-        rule = {"cm": "median", "tm": "trimmed", "mean": "mean"}[agg.rule]
+        rule = COORD_KERNEL_RULE[agg.rule]
         k = key if agg.bucket_size > 1 else None
         return pallas_agg(y.astype(jnp.float32), k,
                           bucket_size=max(agg.bucket_size, 1), rule=rule,
@@ -90,6 +98,22 @@ def _coord_rule(agg, y, key):
     if agg.rule == "cm":
         return coord_median(y)
     return coord_trimmed_mean(y, agg.trim)
+
+
+def flat_rule(agg, y, key):
+    """One (n, d) stack -> (d,) through the kernel backend when enabled —
+    ALL five rules, norm-based included — else the jnp Aggregator path."""
+    if use_pallas_agg():
+        if agg.coordinatewise:
+            return _coord_rule(agg, y, key)
+        from repro.kernels import ops
+        k = key if agg.bucket_size > 1 else None
+        if agg.rule == "rfa":
+            return ops.rfa_agg(y, k, bucket_size=max(agg.bucket_size, 1),
+                               iters=agg.iters, eps=agg.eps)
+        return ops.krum_agg(y, k, bucket_size=max(agg.bucket_size, 1),
+                            n_byz=agg.n_byz)
+    return agg(key, y)
 
 
 def tree_aggregate_all_to_all(cfg, key, sent):
@@ -136,33 +160,165 @@ def tree_aggregate_all_to_all(cfg, key, sent):
 # pallas dense backend (agg_mode="pallas")
 # ---------------------------------------------------------------------------
 
-def tree_aggregate_pallas(cfg, key, sent):
-    """Flatten the stacked candidate pytree to one (n, D) matrix and run the
-    fused bucket-mean + coordinate-rule kernel (kernels/robust_agg) in a
-    single sweep; split the (D,) aggregate back into the tree.
+# leaves narrower than one lane-tile get packed into a single flat buffer so
+# the transformer's many tiny bias/scale leaves don't each pay a kernel launch
+SMALL_LEAF_D = 1024
 
-    Semantics match the gspmd tree path exactly: one shared bucketing
-    permutation across all leaves (coordinate-wise rules commute with the
-    flatten/split), fp32 accumulation, per-leaf output dtype preserved.
-    RFA/Krum are not coordinate-wise — they fall back to the jnp tree path.
+# eager-mode reuse of the small-leaf packing buffer: one preallocated (n, D)
+# fp32 buffer per shape, donated to the packing jit each round so XLA writes
+# the new leaves in place instead of allocating a fresh flat intermediate.
+# (Inside an enclosing jit the packer is traced inline and XLA does the same
+# aliasing itself.)
+_PACK_CACHE: dict = {}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pack_into(buf, *flats):
+    off = 0
+    for f in flats:
+        buf = jax.lax.dynamic_update_slice(
+            buf, f.astype(jnp.float32), (0, off))
+        off += f.shape[1]
+    return buf
+
+
+def _pack_rows(flats, tag):
+    """Pack [(n, d_j)] into one (n, Dp) fp32 buffer, Dp lane-aligned with a
+    zeroed tail (zero columns are neutral for every rule and fused attack).
+
+    Eagerly, the buffer is preallocated per (tag, layout) and DONATED to the
+    packing jit each round, so the leaf regions are overwritten in place
+    (the zero tail survives — it is outside every leaf slice) and no fresh
+    (n, D) intermediate is allocated per call. ``tag`` (x/mean/std) keeps
+    same-shaped buffers that are alive simultaneously within one round from
+    donating each other away. Under an enclosing jit the packer body is
+    traced inline and XLA aliases the update chain itself.
+
+    Packing is fp32: sub-tile bf16 leaves lose the oracle's bf16
+    quantization of fused-attack values (bounded by bf16 eps; the large-leaf
+    path round-trips through the leaf dtype in the kernel prologue).
+    """
+    n = flats[0].shape[0]
+    widths = tuple(f.shape[1] for f in flats)
+    dp = -(-sum(widths) // 128) * 128
+    if any(isinstance(f, jax.core.Tracer) for f in flats):
+        return _pack_into.__wrapped__(jnp.zeros((n, dp), jnp.float32), *flats)
+    key = (tag, n, dp, widths)
+    buf = _PACK_CACHE.pop(key, None)
+    if buf is None:
+        buf = jnp.zeros((n, dp), jnp.float32)
+    packed = _pack_into(buf, *flats)
+    _PACK_CACHE[key] = packed
+    return packed
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackCtx:
+    """Omniscient-attack context for in-kernel injection (engine.message_phase):
+    the byzantine mask plus the good workers' per-coordinate mean/std trees
+    (None when the attack doesn't read them), and the static coord_apply."""
+    fn: object                   # attacks.Attack.coord_apply (static)
+    mask: object                 # (n,) bool
+    means: object = None         # pytree like cand minus the worker axis
+    stds: object = None
+
+
+def _segments(leaves, attack_ctx):
+    """Partition the candidate leaves into kernel launch units.
+
+    Returns (segs, means, stds, splits): segs[j] is a 2-D (n, d_j) view —
+    either one large leaf (zero-copy reshape) or the packed small-leaf
+    buffer — with per-segment flattened attack stats, and splits[j] the
+    [(leaf_idx, offset, size)] map back into the tree.
+    """
+    n = leaves[0].shape[0]
+    m_leaves = (jax.tree.leaves(attack_ctx.means)
+                if attack_ctx is not None and attack_ctx.means is not None
+                else [None] * len(leaves))
+    s_leaves = (jax.tree.leaves(attack_ctx.stds)
+                if attack_ctx is not None and attack_ctx.stds is not None
+                else [None] * len(leaves))
+    small = [i for i, x in enumerate(leaves) if x[0].size < SMALL_LEAF_D]
+    segs, means, stds, splits = [], [], [], []
+    if len(small) >= 2:
+        flats = [leaves[i].reshape(n, -1) for i in small]
+        segs.append(_pack_rows(flats, "x"))
+        means.append(None if m_leaves[small[0]] is None else _pack_rows(
+            [m_leaves[i].reshape(1, -1) for i in small], "mean"))
+        stds.append(None if s_leaves[small[0]] is None else _pack_rows(
+            [s_leaves[i].reshape(1, -1) for i in small], "std"))
+        off, sp = 0, []
+        for i in small:
+            sp.append((i, off, leaves[i][0].size))
+            off += leaves[i][0].size
+        splits.append(sp)
+        packed = set(small)
+    else:
+        packed = set()
+    for i, x in enumerate(leaves):
+        if i in packed:
+            continue
+        segs.append(x.reshape(n, -1))
+        means.append(None if m_leaves[i] is None
+                     else m_leaves[i].reshape(-1))
+        stds.append(None if s_leaves[i] is None else s_leaves[i].reshape(-1))
+        splits.append([(i, 0, x[0].size)])
+    return segs, means, stds, splits
+
+
+def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None):
+    """Aggregate the stacked candidate pytree through the one-sweep Pallas
+    kernels — every rule, no jnp fallback, zero per-round HBM copies:
+
+    * leaf-wise kernel launches share ONE bucketing permutation, carried
+      on-chip as ``norm_agg.bucket_matrix`` (no ``x[perm]`` gather copy, no
+      concatenated (n, D) flat matrix);
+    * many tiny leaves pack into a single donated preallocated flat buffer;
+    * RFA/Krum sum tiny per-leaf distance accumulators so their distances
+      stay GLOBAL across leaves, exactly like ``Aggregator.tree`` (the jnp
+      parity oracle), at 2 sweeps/Weiszfeld-iteration and 2 sweeps/Krum;
+    * ``attack_ctx`` (engine.message_phase) injects the omniscient attack
+      inside the kernels' VMEM load — the attacked ``sent`` tensor is never
+      written to HBM.
+
+    fp32 accumulation, per-leaf output dtype preserved.
     """
     agg = cfg.aggregator
-    if not agg.coordinatewise:
-        return agg.tree(key, sent)
-    from repro.kernels.ops import robust_agg as pallas_agg
+    from repro.kernels import norm_agg
+    from repro.kernels.robust_agg import robust_agg as coord_kernel
 
     leaves, treedef = jax.tree.flatten(sent)
     n = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [x.reshape(n, -1).astype(jnp.float32) for x in leaves], axis=1)
-    rule = {"cm": "median", "tm": "trimmed", "mean": "mean"}[agg.rule]
-    bucketed = agg.bucket_size > 1 and agg.rule != "mean"
-    out = pallas_agg(flat, key if bucketed else None,
-                     bucket_size=agg.bucket_size if bucketed else 1,
-                     rule=rule, trim=agg.trim)
-    outs, off = [], 0
-    for x in leaves:
-        sz = x[0].size
-        outs.append(out[off:off + sz].reshape(x.shape[1:]).astype(x.dtype))
-        off += sz
-    return jax.tree.unflatten(treedef, outs)
+    w_mat = None
+    if agg.bucket_size > 1 and agg.rule != "mean":
+        perm = jax.random.permutation(key, n)
+        w_mat = norm_agg.bucket_matrix(perm, n, agg.bucket_size)
+
+    attack_fn, mask = None, None
+    if attack_ctx is not None:
+        attack_fn, mask = attack_ctx.fn, attack_ctx.mask
+    segs, means, stds, splits = _segments(leaves, attack_ctx)
+
+    if agg.rule in COORD_KERNEL_RULE:
+        rule = COORD_KERNEL_RULE[agg.rule]
+        outs = [coord_kernel(xs, w_mat, mask, mu, sd, rule=rule,
+                             trim=agg.trim, attack_fn=attack_fn)
+                for xs, mu, sd in zip(segs, means, stds)]
+    elif agg.rule == "rfa":
+        outs = norm_agg.rfa_segments(
+            segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
+            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps)
+    elif agg.rule == "krum":
+        outs = norm_agg.krum_segments(
+            segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
+            attack_fn=attack_fn, n_byz=agg.n_byz)
+    else:  # pragma: no cover — RULES is closed
+        raise ValueError(agg.rule)
+
+    tree_out = [None] * len(leaves)
+    for out, split in zip(outs, splits):
+        for i, off, sz in split:
+            tree_out[i] = (out[off:off + sz]
+                           .reshape(leaves[i].shape[1:])
+                           .astype(leaves[i].dtype))
+    return jax.tree.unflatten(treedef, tree_out)

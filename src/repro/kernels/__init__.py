@@ -2,9 +2,14 @@
 
 - robust_agg: fused bucketing + coordinate-wise median/trimmed-mean over the
   worker-stacked matrix (server-side aggregation, one HBM sweep).
+- norm_agg: the norm-based rules — tiled pairwise-Gram (Krum) and fused
+  Weiszfeld (RFA) kernels — plus the shared zero-copy machinery: the on-chip
+  bucket_matrix permutation operator and in-kernel attack injection.
 - quantize: block-wise l2-dithering compress+dequantize (worker-side).
 
-ops.py = jit'd wrappers (interpret on CPU, compiled on TPU);
-ref.py = pure-jnp oracles the tests sweep against.
+ops.py = jit'd wrappers; backend.py resolves ``interpret=None`` once
+(interpret on CPU/GPU hosts, compiled on TPU); ref.py = pure-jnp oracles
+the tests sweep against (norm-based ones delegate to core.aggregators).
 """
 from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.backend import resolve_interpret  # noqa: F401

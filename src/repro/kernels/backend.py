@@ -1,0 +1,18 @@
+"""Kernel-backend resolution, shared by every Pallas entry point.
+
+All kernel wrappers take ``interpret=None`` and resolve it HERE — interpret
+mode on CPU/GPU hosts (where the TPU kernels can't compile), compiled on
+real TPU backends. Centralizing the default kills the old footgun where
+``robust_agg`` hardcoded ``interpret=True`` in its jitted signature, so any
+caller bypassing ``ops.py`` silently ran interpret mode on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """None -> backend-resolved (interpret unless on TPU); bool -> as given."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -1,40 +1,72 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU hosts (this container) and False on
-real TPU backends — the kernels are written for TPU (pl.pallas_call +
-BlockSpec VMEM tiling) and validated against ref.py in interpret mode.
+``interpret=None`` everywhere → resolved once in kernels/backend.py
+(interpret on CPU/GPU hosts — this container — compiled on real TPU
+backends); the kernels are validated against the jnp oracles in interpret
+mode.
+
+The ARAgg wrappers are ZERO-COPY: the Alg. 2 bucketing permutation is
+carried as the on-chip ``norm_agg.bucket_matrix`` operator instead of
+materializing ``x[perm]`` in HBM, for the coordinate rules and the
+norm-based rules (RFA/Krum) alike.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret  # noqa: F401 (re-export)
 from repro.kernels.robust_agg import robust_agg as _robust_agg
 from repro.kernels.quantize import block_quantize as _block_quantize
-from repro.kernels import ref
+from repro.kernels import norm_agg, ref
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _perm_bucket_matrix(key, n, bucket_size):
+    """Alg. 2 random permutation as the (nb, n) on-chip bucket operator."""
+    perm = jax.random.permutation(key, n)
+    return norm_agg.bucket_matrix(perm, n, bucket_size)
 
 
 def robust_agg(x, key=None, *, bucket_size: int = 1, rule: str = "median",
-               trim: int = 1, interpret=None):
-    """Full (δ,c)-ARAgg for (n, d) stacked workers: random permutation
-    (host-side jax.random) + fused bucket-mean + coordinate rule kernel."""
+               trim: int = 1, tile_d: int = norm_agg.DEFAULT_TILE_D,
+               interpret=None):
+    """Full (δ,c)-ARAgg for (n, d) stacked workers: fused permutation +
+    bucket-mean + coordinate rule, one HBM sweep of x."""
     if key is not None and bucket_size > 1:
-        perm = jax.random.permutation(key, x.shape[0])
-        x = x[perm]
-    itp = _default_interpret() if interpret is None else interpret
+        w = _perm_bucket_matrix(key, x.shape[0], bucket_size)
+        return _robust_agg(x, w, rule=rule, trim=trim, tile_d=tile_d,
+                           interpret=interpret)
     return _robust_agg(x, bucket_size=bucket_size, rule=rule, trim=trim,
-                       interpret=itp)
+                       tile_d=tile_d, interpret=interpret)
+
+
+def rfa_agg(x, key=None, *, bucket_size: int = 1, iters: int = 8,
+            eps: float = 1e-8, tile_d: int = norm_agg.DEFAULT_TILE_D,
+            interpret=None):
+    """Geometric median (smoothed Weiszfeld) of (n, d) stacked workers via
+    the fused norm_agg kernels: T+1 HBM sweeps for T iterations."""
+    w = None
+    if key is not None and bucket_size > 1:
+        w = _perm_bucket_matrix(key, x.shape[0], bucket_size)
+    return norm_agg.rfa_segments([x], w_mat=w, iters=iters, eps=eps,
+                                 tile_d=tile_d, interpret=interpret)[0]
+
+
+def krum_agg(x, key=None, *, bucket_size: int = 1, n_byz: int = 1,
+             tile_d: int = norm_agg.DEFAULT_TILE_D, interpret=None):
+    """Krum (Eq. 15) of (n, d) stacked workers via the fused norm_agg
+    kernels: 2 HBM sweeps (Gram + winner extraction)."""
+    w = None
+    if key is not None and bucket_size > 1:
+        w = _perm_bucket_matrix(key, x.shape[0], bucket_size)
+    return norm_agg.krum_segments([x], w_mat=w, n_byz=n_byz, tile_d=tile_d,
+                                  interpret=interpret)[0]
 
 
 def block_quantize(x, key, *, levels: int = 4, block: int = 256,
                    interpret=None):
     u = jax.random.uniform(key, x.shape)
-    itp = _default_interpret() if interpret is None else interpret
-    return _block_quantize(x, u, levels=levels, block=block, interpret=itp)
+    return _block_quantize(x, u, levels=levels, block=block,
+                           interpret=resolve_interpret(interpret))
 
 
 def robust_agg_oracle(x, *, bucket_size: int = 1, rule: str = "median",
@@ -44,3 +76,11 @@ def robust_agg_oracle(x, *, bucket_size: int = 1, rule: str = "median",
 
 def block_quantize_oracle(x, u, *, levels: int = 4, block: int = 256):
     return ref.block_quantize_ref(x, u, levels=levels, block=block)
+
+
+def rfa_oracle(x, *, iters: int = 8, eps: float = 1e-8):
+    return ref.rfa_ref(x, iters=iters, eps=eps)
+
+
+def krum_oracle(x, *, n_byz: int = 1):
+    return ref.krum_ref(x, n_byz=n_byz)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 DEFAULT_TILE_D = 2048
 
@@ -37,9 +39,10 @@ def _quant_kernel(x_ref, u_ref, o_ref, *, levels, block):
 @functools.partial(jax.jit, static_argnames=("levels", "block", "tile_d",
                                              "interpret"))
 def block_quantize(x, u, *, levels: int = 4, block: int = 256,
-                   tile_d: int = DEFAULT_TILE_D, interpret: bool = True):
+                   tile_d: int = DEFAULT_TILE_D, interpret=None):
     """x, u: (d,). Returns dequantized (d,) float32. d padded to tile_d;
-    tile_d must be a multiple of ``block``."""
+    tile_d must be a multiple of ``block``. ``interpret=None`` resolves per
+    backend (kernels/backend.py)."""
     assert tile_d % block == 0
     d = x.shape[0]
     pad = (-d) % tile_d
@@ -54,6 +57,6 @@ def block_quantize(x, u, *, levels: int = 4, block: int = 256,
                   pl.BlockSpec((tile_d,), lambda i: (i,))],
         out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, u)
     return out[:d]

@@ -1,4 +1,8 @@
-"""Pure-jnp oracles for the Pallas kernels."""
+"""Pure-jnp oracles for the Pallas kernels.
+
+The norm-based oracles (rfa_ref/krum_ref/pair_sqdists_ref) delegate to
+``core.aggregators.Aggregator`` — the paper-faithful tree path IS the
+parity oracle for the fused norm_agg kernels (DESIGN.md §3)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -34,6 +38,26 @@ def robust_agg_ref(x, *, bucket_size: int = 1, rule: str = "median",
         t = min(trim, (m - 1) // 2)
         return xs[t:m - t].mean(axis=0)
     raise ValueError(rule)
+
+
+def pair_sqdists_ref(x):
+    """(n, n) pairwise squared distances of (n, d) rows, fp32, clamped ≥ 0
+    (matches aggregators._tree_pair_sqdists on a single flat leaf)."""
+    from repro.core.aggregators import _tree_pair_sqdists
+    return _tree_pair_sqdists({"x": x})
+
+
+def rfa_ref(x, *, iters: int = 8, eps: float = 1e-8):
+    """Smoothed-Weiszfeld geometric median of (n, d) pre-bucketed rows."""
+    from repro.core.aggregators import Aggregator
+    agg = Aggregator("rfa", iters=iters, eps=eps)
+    return agg(None, x)
+
+
+def krum_ref(x, *, n_byz: int = 1):
+    """Krum (Eq. 15) over (n, d) pre-bucketed rows."""
+    from repro.core.aggregators import Aggregator
+    return Aggregator("krum", n_byz=n_byz)(None, x)
 
 
 def block_quantize_ref(x, u, *, levels: int, block: int):

@@ -8,6 +8,14 @@ This kernel streams (n, TILE_D) blocks through VMEM once: bucket-mean and
 the fixed-n sorting network happen in-register; HBM traffic is exactly
 read(n·d) + write(d), the roofline floor for this op.
 
+Zero-copy message phase (norm_agg.py holds the shared machinery): the
+Alg. 2 permutation rides on-chip as the (nb, n) ``bucket_matrix`` applied
+to the block in VMEM (so callers never materialize ``x[perm]``), and the
+omniscient attack can be injected in the same load via
+``attack.coord_apply`` + mask/mean/std inputs — the attacked ``sent``
+tensor never hits HBM. The legacy contiguous path (pre-permuted rows +
+``bucket_size``) is kept for callers that already hold a permuted stack.
+
 TPU adaptation: the worker axis (n ≤ 64) lives in the sublane dimension;
 TILE_D is lane-aligned (multiple of 128). ``jnp.sort`` along axis 0 inside
 the kernel lowers to a fixed-size bitonic network over sublanes.
@@ -20,12 +28,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.norm_agg import _assemble, _prologue
+
 
 DEFAULT_TILE_D = 2048     # (64 workers x 2048 lanes x 4B = 512 KiB in VMEM)
 
 
-def _agg_kernel(x_ref, o_ref, *, bucket_size, rule, trim, n):
-    x = x_ref[...].astype(jnp.float32)            # (n, TILE_D)
+def _coord_rule_block(x, *, bucket_size, rule, trim, n):
+    """The coordinate rule on one in-VMEM block; contiguous Alg. 2 bucketing
+    (pre-permuted rows) when ``bucket_size`` > 1."""
     if bucket_size > 1:
         # matches aggregators._bucketize_perm (Alg. 2): when n is not a
         # bucket multiple the last bucket is padded with the stacked mean,
@@ -39,41 +51,52 @@ def _agg_kernel(x_ref, o_ref, *, bucket_size, rule, trim, n):
         x = x.reshape(nb, bucket_size, -1).mean(axis=1)
     m = x.shape[0]
     if rule == "mean":
-        o_ref[...] = jnp.mean(x, axis=0)
-        return
+        return jnp.mean(x, axis=0)
     xs = jnp.sort(x, axis=0)
     if rule == "median":
         if m % 2:
-            out = xs[m // 2]
-        else:
-            out = 0.5 * (xs[m // 2 - 1] + xs[m // 2])
-    elif rule == "trimmed":
+            return xs[m // 2]
+        return 0.5 * (xs[m // 2 - 1] + xs[m // 2])
+    if rule == "trimmed":
         t = min(trim, (m - 1) // 2)
-        out = jnp.mean(xs[t:m - t], axis=0)
-    else:
-        raise ValueError(rule)
-    o_ref[...] = out
+        return jnp.mean(xs[t:m - t], axis=0)
+    raise ValueError(rule)
 
 
 @functools.partial(jax.jit, static_argnames=("bucket_size", "rule", "trim",
-                                             "tile_d", "interpret"))
-def robust_agg(x, *, bucket_size: int = 1, rule: str = "median",
-               trim: int = 1, tile_d: int = DEFAULT_TILE_D,
-               interpret: bool = True):
-    """x: (n, d) (pre-permuted rows) -> (d,) aggregate. Pads d to tile_d."""
+                                             "tile_d", "interpret",
+                                             "attack_fn"))
+def robust_agg(x, bucket_matrix=None, mask=None, good_mean=None,
+               good_std=None, *, bucket_size: int = 1, rule: str = "median",
+               trim: int = 1, tile_d: int = DEFAULT_TILE_D, interpret=None,
+               attack_fn=None):
+    """x: (n, d) -> (d,) aggregate, one HBM sweep.
+
+    Either ``bucket_matrix`` ((nb, n), from ``norm_agg.bucket_matrix`` —
+    carries the random permutation + Alg. 2 bucket means on-chip) or the
+    legacy ``bucket_size`` over pre-permuted rows. ``attack_fn``/``mask``/
+    ``good_mean``/``good_std`` inject the omniscient attack in-kernel.
+    ``interpret=None`` resolves per backend (kernels/backend.py).
+    """
     n, d = x.shape
-    pad = (-d) % tile_d
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad)))
-    dp = d + pad
-    grid = (dp // tile_d,)
+    vals, specs, names, grid, dp = _assemble(x, bucket_matrix, mask,
+                                             good_mean, good_std, tile_d)
+    tile = dp // grid[0]
+    contiguous = bucket_size if bucket_matrix is None else 1
+
+    def kernel(*refs):
+        env = dict(zip(names, refs[:-1]))
+        o_ref = refs[-1]
+        xb = _prologue(env, attack_fn)          # attacked (+W-bucketed)
+        o_ref[...] = _coord_rule_block(xb, bucket_size=contiguous, rule=rule,
+                                       trim=trim, n=n)
+
     out = pl.pallas_call(
-        functools.partial(_agg_kernel, bucket_size=bucket_size, rule=rule,
-                          trim=trim, n=n),
+        kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((n, tile_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
-        interpret=interpret,
-    )(x)
+        interpret=resolve_interpret(interpret),
+    )(*vals)
     return out[:d]

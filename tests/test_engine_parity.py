@@ -175,11 +175,15 @@ def test_legacy_wrappers_still_match(data):
 # pallas backend vs gspmd under attack
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("rule,bucket", [("mean", 0), ("cm", 2), ("tm", 2)])
+@pytest.mark.parametrize("rule,bucket", [("mean", 0), ("cm", 2), ("tm", 2),
+                                         ("rfa", 0), ("rfa", 2),
+                                         ("krum", 0), ("krum", 2)])
 def test_pallas_backend_matches_gspmd(data, rule, bucket):
-    """agg_mode="pallas" routes dense aggregation through the fused kernel;
-    with n=5 workers and bucket_size=2 this also exercises the padded
-    (non-divisible) bucketing path. fp32 tolerance per DESIGN.md §3."""
+    """agg_mode="pallas" serves ALL five rules through the fused kernels —
+    coordinate-wise via kernels/robust_agg, RFA/Krum via kernels/norm_agg,
+    no jnp fallback; with n=5 workers and bucket_size=2 this also exercises
+    the padded (non-divisible) in-kernel bucketing path. fp32 tolerance per
+    DESIGN.md §3 (the kernel path reassociates fp32 sums)."""
     anchor = data.stacked()
     params = init_logreg_params(DIM)
     trajs = {}
@@ -190,23 +194,27 @@ def test_pallas_backend_matches_gspmd(data, rule, bucket):
         m = make_method("marina", cfg, LOSS, corrupt_labels_logreg)
         _, trajs[mode] = _run(data, m.init(params, anchor, KEY), m.step)
     for (p_g, l_g), (p_p, l_p) in zip(trajs["gspmd"], trajs["pallas"]):
-        np.testing.assert_allclose(l_g, l_p, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(l_g, l_p, atol=2e-5, rtol=2e-5)
         jax.tree.map(lambda a, b: np.testing.assert_allclose(
-            a, b, atol=1e-5, rtol=1e-5), p_g, p_p)
+            a, b, atol=2e-5, rtol=2e-5), p_g, p_p)
 
 
-def test_pallas_backend_rfa_fallback(data):
-    """Norm-based rules are not coordinate-wise: the pallas backend must
-    fall back to the jnp tree path and stay identical to gspmd."""
+def test_pallas_backend_unfusable_attack_matches_gspmd(data):
+    """RN can't fuse into the kernels (it needs the exact jax.random
+    stream): message_phase must materialize the attack via apply_attack and
+    stay on the same trajectory as gspmd."""
     anchor = data.stacked()
     params = init_logreg_params(DIM)
     trajs = {}
     for mode in ("gspmd", "pallas"):
         cfg = _cfg(aggregator=get_aggregator("rfa", bucket_size=2),
-                   agg_mode=mode)
+                   attack=get_attack("RN"), agg_mode=mode)
         m = make_method("marina", cfg, LOSS, corrupt_labels_logreg)
         _, trajs[mode] = _run(data, m.init(params, anchor, KEY), m.step)
-    _assert_same_traj(trajs["gspmd"], trajs["pallas"])
+    for (p_g, l_g), (p_p, l_p) in zip(trajs["gspmd"], trajs["pallas"]):
+        np.testing.assert_allclose(l_g, l_p, atol=2e-5, rtol=2e-5)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            a, b, atol=2e-5, rtol=2e-5), p_g, p_p)
 
 
 # ---------------------------------------------------------------------------

@@ -58,3 +58,21 @@ def test_coord_rule_pallas_matches_jnp(pallas_auto, rule, bucket):
     got = sharded_agg._coord_rule(agg, y, key)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("rule,bucket", [("mean", 1), ("cm", 2), ("tm", 2),
+                                         ("rfa", 1), ("rfa", 2),
+                                         ("krum", 1), ("krum", 2)])
+def test_flat_rule_pallas_matches_jnp(pallas_auto, rule, bucket):
+    """flat_rule serves ALL five rules through the kernel backend (norm_agg
+    for RFA/Krum) and must match the jnp Aggregator on the same key."""
+    agg = get_aggregator(rule, bucket_size=bucket, n_byz=1)
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(jax.random.PRNGKey(1), (8, 96), jnp.float32)
+
+    sharded_agg.USE_PALLAS_AGG[0] = False
+    want = sharded_agg.flat_rule(agg, y, key)
+    sharded_agg.USE_PALLAS_AGG[0] = True
+    got = sharded_agg.flat_rule(agg, y, key)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
