@@ -1,14 +1,22 @@
-"""Paper Figure 1: optimality gap of 3 aggregation rules (AVG, CM, RFA)
-under 5 attacks (NA, LF, BF, ALIE, IPM), homogeneous data, 4 good + 1
-byzantine worker, with and without RandK (K = 0.1 d) compression.
+"""Paper Figure 1 (extended): optimality gap of 3 aggregation rules (AVG,
+CM, RFA) under 5 attacks (NA, LF, BF, ALIE, IPM), homogeneous data, 4 good
++ 1 byzantine worker, with and without compression — for Byz-VR-MARINA and
+the successor estimators (Byz-EF21, compressed momentum filtering,
+Byrd-SAGA), so the BENCH artifacts track every method family.
 
 The whole grid is ONE declarative ``Sweep`` executed through the batched
-engine (``repro.exec``): with ``seeds`` > 1 every (compressor, aggregator,
-attack) cell becomes a jit-signature group that runs as a single
-vmapped-over-seeds trajectory, and the mean±std-over-seeds table lands in
+engine (``repro.exec``): with ``seeds`` > 1 every (method, compressor,
+aggregator, attack) cell becomes a jit-signature group that runs as a
+single vmapped-over-seeds trajectory (SAGA cells classify un-batchable and
+take the serial path), and the mean±std-over-seeds table lands in
 ``experiments/bench/fig1_summary.json``. Each emitted row still carries
 the resolved spec JSON, so any cell reproduces with
 ``RunSpec.from_dict(artifact["spec"]).run()``.
+
+Per-method compressor mapping: marina/cmfilter upload unbiased Q (RandK);
+byz_ef21 needs a contractive C (TopK at the same keep-ratio); saga uploads
+dense SAGA estimates, so its compressed half is skipped (the compressor
+never touches the wire).
 """
 import os
 
@@ -22,7 +30,8 @@ BASE = RunSpec(task="logreg", method="marina", n_workers=5, n_byz=1,
                data_kwargs={"n_samples": 400, "dim": DIM, "data_seed": 0})
 
 GRID = {
-    "compressor_kwargs.ratio": (1.0, 0.1),          # none vs RandK(0.1d)
+    "method": ("marina", "byz_ef21", "cmfilter", "saga"),
+    "compressor_kwargs.ratio": (1.0, 0.1),          # none vs K = 0.1 d
     "aggregator": ("mean", "cm", "rfa"),
     "attack": ("NA", "LF", "BF", "ALIE", "IPM"),
 }
@@ -30,18 +39,30 @@ _AGG_LABEL = {"mean": "avg", "cm": "cm", "rfa": "rfa"}
 
 
 def cells(iters, seeds):
-    base = BASE.replace(steps=iters, compressor="randk")
-    grid = dict(GRID)
-    if len(seeds) > 1:
-        grid["seed"] = tuple(seeds)
     out = []
-    for run_id, spec in Sweep(base=base, grid=grid).expand():
-        if spec.compressor_kwargs["ratio"] >= 1.0:
-            # identity wire format, not RandK(d)
-            spec = spec.replace(compressor="identity", compressor_kwargs={})
-        if spec.aggregator == "mean":
-            spec = spec.replace(bucket_size=0)
-        out.append((run_id, spec))
+    # expand per method: RunSpec validates eagerly, so byz_ef21 must carry
+    # its contractive compressor BEFORE the grid product is formed
+    from repro.core.estimators import needs_contractive_compressor
+    for method in GRID["method"]:
+        base = BASE.replace(
+            steps=iters, method=method,
+            compressor=("topk" if needs_contractive_compressor(method)
+                        else "randk"))
+        grid = {k: v for k, v in GRID.items() if k != "method"}
+        grid["method"] = (method,)           # keep method in the run id
+        if len(seeds) > 1:
+            grid["seed"] = tuple(seeds)
+        for run_id, spec in Sweep(base=base, grid=grid).expand():
+            ratio = spec.compressor_kwargs["ratio"]
+            if spec.method == "saga" and ratio < 1.0:
+                continue               # dense uploads: no compressed half
+            if ratio >= 1.0:
+                # identity wire format, not RandK(d)/TopK(d)
+                spec = spec.replace(compressor="identity",
+                                    compressor_kwargs={})
+            if spec.aggregator == "mean":
+                spec = spec.replace(bucket_size=0)
+            out.append((run_id, spec))
     return out
 
 
@@ -57,11 +78,12 @@ def run(iters=500, seeds=(0,)):
         result = srun[run_id]
         gap = float(loss_fn(result.params, full)) - f_star
         ratio = (spec.compressor_kwargs.get("ratio", 1.0)
-                 if spec.compressor == "randk" else 1.0)
-        comp_name = "none" if ratio >= 1.0 else f"randk{ratio}"
+                 if spec.compressor in ("randk", "topk") else 1.0)
+        comp_name = ("none" if ratio >= 1.0
+                     else f"{spec.compressor}{ratio}")
         tag = f"/seed{spec.seed}" if len(seeds) > 1 else ""
-        emit(f"fig1/{comp_name}/{_AGG_LABEL[spec.aggregator]}/"
-             f"{spec.attack}{tag}",
+        emit(f"fig1/{spec.method}/{comp_name}/"
+             f"{_AGG_LABEL[spec.aggregator]}/{spec.attack}{tag}",
              result.wall_s / iters * 1e6, f"gap={gap:.3e}", spec=spec)
     xc.write_summary(os.path.join(ART_DIR, "fig1_summary.json"),
                      xc.summarize(srun.artifacts))

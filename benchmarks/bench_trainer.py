@@ -20,6 +20,12 @@ ROWS = [
     ("marina", "rfa", "identity"),
     ("sgdm", "cm", "identity"),
     ("csgd", "cm", "randk"),
+    # successor estimators (ISSUE 5): EF21 error feedback with a
+    # contractive TopK and compressed momentum filtering. SAGA is absent by
+    # design — RunSpec rejects method='saga' on the lm task (TokenStream
+    # resamples the anchor its table indexes into); bench_fig1 tracks it.
+    ("byz_ef21", "cm", "topk"),
+    ("cmfilter", "cm", "randk"),
 ]
 
 
@@ -32,7 +38,8 @@ def run():
                 n_workers=N, n_byz=1, p=0.25, lr=1e-2, attack="ALIE",
                 aggregator=agg, bucket_size=0 if agg == "mean" else 2,
                 compressor=comp,
-                compressor_kwargs={"ratio": 0.25} if comp == "randk" else {},
+                compressor_kwargs=({"ratio": 0.25}
+                                   if comp in ("randk", "topk") else {}),
                 steps=ITERS, seed=0,
                 data_kwargs={"reduced": True, "seq_len": S,
                              "per_worker_batch": BW})

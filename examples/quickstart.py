@@ -15,6 +15,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.api import RunSpec, build, components
+from repro.core.estimators import needs_contractive_compressor
 from repro.data import logreg_reference
 
 ap = argparse.ArgumentParser()
@@ -22,15 +23,19 @@ ap.add_argument("--method", default="marina", choices=components("method"))
 ap.add_argument("--attack", default="ALIE", choices=components("attack"))
 ap.add_argument("--agg", default="cm", choices=components("aggregator"))
 ap.add_argument("--randk", type=float, default=0.1,
-                help="RandK ratio (1.0 = no compression)")
+                help="keep-ratio (1.0 = no compression); EF21-family "
+                     "methods get TopK at the same ratio, others RandK")
 ap.add_argument("--iters", type=int, default=600)
 args = ap.parse_args()
 
+# EF21-family methods reject unbiased Q — map the ratio onto TopK for them
+_sparsifier = ("topk" if needs_contractive_compressor(args.method)
+               else "randk")
 spec = RunSpec(
     task="logreg", method=args.method, n_workers=5, n_byz=1,
     p=0.1, lr=0.5, attack=args.attack,
     aggregator=args.agg, bucket_size=0 if args.agg == "mean" else 2,
-    compressor="randk" if args.randk < 1 else "identity",
+    compressor=_sparsifier if args.randk < 1 else "identity",
     compressor_kwargs={"ratio": args.randk} if args.randk < 1 else {},
     steps=args.iters,
     data_kwargs={"n_samples": 500, "dim": 30})

@@ -8,7 +8,7 @@ sync with ``engine.AGG_BACKENDS``. This module folds them into ONE namespaced
 view so CLIs, docs, and ``RunSpec`` validation all enumerate from the same
 source of truth:
 
-    components("method")            -> ("csgd", "diana", ..., "svrg")
+    components("method")            -> ("byz_ef21", "cmfilter", ..., "svrg")
     describe("attack", "ALIE")      -> one-line summary
     resolve("compressor", "randk", ratio=0.1) -> Compressor instance
     check("aggregator", "krun")     -> ValueError: ... did you mean 'krum'?
@@ -48,6 +48,13 @@ _METHOD_DESCRIPTIONS = {
            "(Karimireddy et al. 2021)",
     "svrg": "Byrd-SVRG: loopless SVRG + robust aggregation "
             "(App. B.4, Wu et al. 2020)",
+    "byz_ef21": "Byz-EF21: biased contractive compression + per-worker "
+                "error feedback (Rammal et al. 2023)",
+    "cmfilter": "compressed momentum filtering: worker momenta uploaded as "
+                "compressed differences, robustly filtered "
+                "(Liu et al. 2024)",
+    "saga": "Byrd-SAGA: per-worker per-sample gradient table over the "
+            "anchor partition (Wu et al. 2020)",
 }
 
 _ATTACK_DESCRIPTIONS = {
@@ -71,6 +78,8 @@ _COMPRESSOR_DESCRIPTIONS = {
     "identity": "no compression (32d bits per vector)",
     "randk": "RandK sparsification, omega = d/K - 1 "
              "(block selection above 2^22 units)",
+    "topk": "TopK magnitude sparsification (BIASED, contractive "
+            "delta=1-K/d; EF21-family methods)",
     "dither": "l2 random dithering / QSGD-style quantization "
               "(Alistarh et al. 2017)",
     "natural": "natural compression: stochastic power-of-two rounding, "
@@ -92,8 +101,8 @@ _AGG_MODE_DESCRIPTIONS = {
                   "bytes, O(n) less memory (coordinate-wise rules only)",
     "sparse_support": "common-randomness RandK: attack + aggregate only the "
                       "shared K-coordinate support (marina)",
-    "pallas": "fused one-HBM-sweep kernel over the flattened candidate "
-              "pytree (RFA/Krum fall back to jnp)",
+    "pallas": "fused one-HBM-sweep kernels serving every rule leaf-wise, "
+              "with kernel-fusable attacks injected in the load",
 }
 
 _TASK_DESCRIPTIONS = {

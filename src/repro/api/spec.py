@@ -125,6 +125,25 @@ class RunSpec:
             raise ValueError(
                 "task='lm' needs arch=<name>; registered: "
                 + ", ".join(registry.components("arch")))
+        if self.method == "saga" and self.task == "lm":
+            raise ValueError(
+                "method='saga' needs a FIXED anchor set (its per-sample "
+                "gradient table is indexed by position into the anchor), "
+                "but the lm task's TokenStream resamples the anchor every "
+                "round — the 'correction' term would be noise, not SAGA. "
+                "Use task='logreg', or a VR method without per-sample "
+                "state (marina / byz_ef21 / mvr)")
+        if self.method == "byz_ef21":
+            comp = registry.resolve("compressor", self.compressor,
+                                    **self.compressor_kwargs)
+            if comp.contractive_fn is None:
+                raise ValueError(
+                    "method='byz_ef21' needs a contractive compressor "
+                    "(topk / sign / identity): EF21's error-feedback "
+                    "recursion contracts only under "
+                    "E||C(x)-x||^2 <= delta_C ||x||^2, and unbiasedness "
+                    "scaling (randk's d/K) breaks it; got "
+                    f"compressor={self.compressor!r}")
         if self.method == "marina" and self.agg_mode == "sparse_support":
             if (self.compressor != "randk"
                     or not self.compressor_kwargs.get("common_randomness")):

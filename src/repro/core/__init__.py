@@ -2,8 +2,8 @@
 
 - engine: the shared Byzantine-robust round skeleton + method registry
 - estimators: pluggable gradient estimators (marina, sgd, sgdm, csgd,
-  diana, mvr, svrg)
-- compressors: unbiased Q (Def 2.2)
+  diana, mvr, svrg, byz_ef21, cmfilter, saga)
+- compressors: unbiased Q (Def 2.2) + biased/contractive C (TopK, sign)
 - aggregators: (δ,c)-ARAgg via bucketing + CM/RFA/Krum (Def 2.1, Alg. 2)
 - attacks: NA / LF / BF / ALIE / IPM omniscient adversaries
 - byz_vr_marina: Algorithm 1 facade (laptop vmap & pod pjit, same code)

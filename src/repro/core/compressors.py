@@ -1,9 +1,16 @@
-"""Unbiased compression operators (Def. 2.2 of the paper).
+"""Compression operators: unbiased Q (Def. 2.2) and biased/contractive C.
 
-Every compressor maps (key, x) -> x_hat with E[x_hat] = x and
+Unbiased compressors map (key, x) -> x_hat with E[x_hat] = x and
 E||x_hat - x||^2 <= omega ||x||^2. The ``omega`` attribute and the
 ``expected_density`` (zeta_Q, expected #nonzeros / floats sent) drive both the
 theory-side step size and the communication accounting in the benchmarks.
+
+Biased compressors (``top_k``, ``sign_compressor``) are *contractive*
+instead: E||C(x) - x||^2 <= delta_C ||x||^2 with delta_C < 1, exposed via
+``Compressor.contractive_delta(d)`` so ``core/theory.py`` can compute the
+EF21-family step sizes. They are only sound inside error-feedback
+estimators (Byz-EF21); plugging one into an unbiased-Q method silently
+biases the estimator, which is why ``omega`` is NaN for them.
 
 All compressors return a *dense* vector (the mathematical value the server
 reconstructs). Wire-format size is reported by ``bits_per_vector`` so the
@@ -47,13 +54,20 @@ class Compressor:
     bits_fn: Callable           # d -> bits on the wire per vector
     density_fn: Callable        # d -> expected nonzeros (zeta_Q)
     common_randomness: bool = False
-    ratio: Optional[float] = None    # RandK keep-ratio (sparse-support path)
+    ratio: Optional[float] = None    # RandK/TopK keep-ratio
+    contractive_fn: Optional[Callable] = None   # d -> delta_C in [0, 1)
 
     def omega(self, d):
         return self.omega_fn(d)
 
     def bits_per_vector(self, d):
         return self.bits_fn(d)
+
+    def contractive_delta(self, d) -> Optional[float]:
+        """delta_C with E||C(x) - x||^2 <= delta_C ||x||^2, or None when no
+        contraction bound is known (unbiased compressors are contractive
+        only after 1/(1+omega) scaling — see theory.contractive_delta)."""
+        return None if self.contractive_fn is None else self.contractive_fn(d)
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +79,7 @@ def identity() -> Compressor:
         omega_fn=lambda d: 0.0,
         bits_fn=lambda d: 32 * d,
         density_fn=lambda d: d,
+        contractive_fn=lambda d: 0.0,    # C(x) = x: trivially contractive
     )
 
 
@@ -143,6 +158,44 @@ def unit_partition(d: int):
     return blk, -(-d // blk)
 
 
+def top_k(ratio: float = 0.1) -> Compressor:
+    """TopK magnitude sparsification — BIASED, contractive (Def. 3 of
+    Beznosikov et al. 2020): keeping the K = ratio*d largest-magnitude
+    coordinates unscaled gives ||C(x) - x||^2 <= (1 - K/d) ||x||^2.
+
+    The compressor of choice for the EF21 family (Byz-EF21): the
+    error-feedback state absorbs the bias, so the K kept coordinates go on
+    the wire raw (K values + K indices) with NO unbiasedness scaling —
+    unlike RandK there are no d/K-amplified values for Byzantines to hide
+    noise in. ``omega`` is NaN: TopK must not be used where Def. 2.2
+    unbiasedness is assumed.
+    """
+    if not (0 < ratio <= 1):
+        raise ValueError(ratio)
+
+    def _k(d):
+        return max(int(ratio * d), 1)
+
+    def compress(key, x):
+        d = x.size
+        k = _k(d)
+        xf = x.reshape(-1).astype(jnp.float32)
+        _, idx = lax.top_k(jnp.abs(xf), k)
+        mask = jnp.zeros((d,), bool).at[idx].set(True)
+        out = jnp.where(mask, xf, 0.0)
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return Compressor(
+        name=f"topk_{ratio}",
+        compress=compress,
+        omega_fn=lambda d: float("nan"),         # biased; no omega
+        bits_fn=lambda d: _k(d) * (32 + 32),     # k values + k indices
+        density_fn=lambda d: _k(d),
+        ratio=ratio,
+        contractive_fn=lambda d: 1.0 - _k(d) / d,
+    )
+
+
 def l2_dithering(levels: int = 1) -> Compressor:
     """Random dithering / QSGD-style l2 quantization (Alistarh et al. 2017).
 
@@ -207,7 +260,9 @@ def natural_compression() -> Compressor:
 
 
 def sign_compressor() -> Compressor:
-    """sign(x)*||x||_1/d — BIASED; only for the signSGD-style baselines."""
+    """sign(x)*||x||_1/d — BIASED, contractive: Cauchy–Schwarz gives
+    ||C(x) - x||^2 = ||x||^2 - ||x||_1^2/d <= (1 - 1/d) ||x||^2. Serves the
+    signSGD-style baselines and the EF21 family (1-bit-per-coord wire)."""
 
     def compress(key, x):
         xf = x.reshape(-1).astype(jnp.float32)
@@ -220,12 +275,14 @@ def sign_compressor() -> Compressor:
         omega_fn=lambda d: float("nan"),     # not unbiased; no omega
         bits_fn=lambda d: d + 32,
         density_fn=lambda d: d,
+        contractive_fn=lambda d: 1.0 - 1.0 / d,
     )
 
 
 REGISTRY = {
     "identity": identity,
     "randk": rand_k,
+    "topk": top_k,
     "dither": l2_dithering,
     "natural": natural_compression,
     "sign": sign_compressor,

@@ -180,11 +180,16 @@ class GradientEstimator:
                                   splits the round key into exactly these.
       * ``update_params_first`` — True for MARINA-family estimators whose
                                   candidates are computed at x^{k+1}.
+      * ``seed_batchable``      — False when state must not be vmapped over
+                                  seeds (per-worker gradient tables); the
+                                  sweep engine then runs such cells on the
+                                  serial / WorkerPool path (DESIGN.md §2).
     and implement ``init_extras`` and ``round``.
     """
     name: str = "?"
     rng: tuple = ("grad", "attack", "agg")
     update_params_first: bool = False
+    seed_batchable: bool = True
 
     def init_extras(self, cfg, loss_fn, params, anchor, key):
         """-> (g0, extras): the initial server estimate and any extra state
@@ -300,7 +305,8 @@ def make_method(name: str, cfg, loss_fn,
     """Assemble a registered method over the shared round engine.
 
     name in ``list_methods()``: marina | sgd | sgdm | csgd | diana | mvr
-    | svrg. ``est_kw`` are estimator knobs (momentum, alpha, ...).
+    | svrg | byz_ef21 | cmfilter | saga. ``est_kw`` are estimator knobs
+    (momentum, alpha, batch_size, ...).
     """
     from repro.core import estimators as E
     est = E.get_estimator(name, cfg, **est_kw)

@@ -19,9 +19,25 @@ omniscient attacks, (δ,c)-robust aggregation, metrics — is the engine's.
   mvr    — BR-MVR / STORM momentum variance reduction (Karimireddy 2021).
   svrg   — Byrd-SVRG (loopless; App. B.4 proxy of Byrd-SAGA, Wu et al. 2020).
 
-Follow-up estimators (e.g. Byz-EF21 of Rammal et al. 2023, compressed
-momentum filtering of Liu et al. 2024) slot in as new subclasses — see
-ROADMAP "Open items".
+Successor methods over the same engine (ROADMAP "New estimators"):
+
+  byz_ef21 — Byz-EF21 (Rammal et al. 2023): biased/contractive compressors
+             + per-worker error feedback; every upload is one compressed
+             difference, the EF state absorbs the compressor bias.
+  cmfilter — compressed momentum filtering (Liu et al. 2024): worker
+             momenta uploaded as compressed differences against a
+             server-mirrored reconstruction; the robust aggregator is the
+             filter, optionally blended by a server-side momentum.
+  saga     — Byrd-SAGA (Wu et al. 2020) fitted to the stacked
+             corrupt→attack→aggregate protocol: per-worker per-sample
+             gradient table over the anchor partition. Tables are worker
+             state, not wire traffic, and do NOT vmap over seeds
+             (``seed_batchable = False`` routes sweeps down the serial /
+             WorkerPool path — see exec/batching.can_batch).
+
+Every entry must pass tests/test_estimator_contract.py (the conformance
+harness): checkpoint round-trip, run(spec) ≡ hand-wired engine, comm
+accounting ≡ theory.comm_bits_per_round, descent, pallas ≡ gspmd.
 """
 from __future__ import annotations
 
@@ -386,6 +402,202 @@ class SVRGEstimator(GradientEstimator):
 
 
 # ---------------------------------------------------------------------------
+# Byz-EF21 (Rammal et al. 2023)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ByzEF21Estimator(CompressedUploadBits, GradientEstimator):
+    """Byz-EF21: biased contractive compression + per-worker error feedback.
+
+    Worker i maintains an estimate g_i of its local gradient; each round it
+    uploads the compressed correction c_i = C(∇f_i(x^{k+1}) - g_i) and both
+    sides update g_i <- g_i + c_i. The server robust-aggregates the
+    reconstructed g_i — a Byzantine sender of arbitrary c_i is exactly an
+    attack on its candidate g_i + c_i, so the engine's message phase models
+    the adversary faithfully. Gradients are taken on the anchor set (the
+    paper's deterministic Byz-EF21; the stochastic variant is cmfilter's
+    momentum territory).
+
+    EF21's contraction argument needs E||C(x)-x||² <= δ_C ||x||² with
+    δ_C < 1 (``Compressor.contractive_delta``) — the factory rejects
+    compressors without a contractive bound, since unbiasedness scaling
+    (RandK's d/K) breaks the error-feedback recursion.
+    """
+    name = "byz_ef21"
+    rng = ("grad", "q", "attack", "agg")
+    update_params_first = True
+    needs_contractive = True
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        # g_i^0 = ∇f_i(x^0) (uncompressed init, as in EF21), then
+        # g^0 = ARAgg(g_1^0, ..., g_n^0) like every other estimator here.
+        k_grad, k_attack, k_agg = jax.random.split(key, 3)
+        wkeys = tu.per_worker_keys(k_grad, cfg.n_workers)
+        _, grads = stacked_grads(loss_fn, params, anchor, wkeys)
+        g_i = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return message_phase(cfg, k_attack, k_agg, g_i), {"worker_g": g_i}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        n = cfg.n_workers
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+        qkeys = tu.per_worker_keys(keys["q"], n,
+                                   common=cfg.compressor.common_randomness)
+
+        def one(b, kg, kq, g_i):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            c = tu.compress_tree(
+                cfg.compressor, kq,
+                jax.tree.map(lambda a, gi: a.astype(jnp.float32) - gi,
+                             g, g_i))
+            return ln, tu.tree_add(g_i, c)
+
+        losses, g_new = jax.vmap(one)(anchor, wkeys, qkeys,
+                                      state["worker_g"])
+        return RoundOutput(loss=jnp.mean(losses), cand=g_new,
+                           updates={"worker_g": g_new})
+
+
+# ---------------------------------------------------------------------------
+# compressed momentum filtering (Liu et al. 2024)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CMFilterEstimator(CompressedUploadBits, GradientEstimator):
+    """Compressed momentum filtering: worker i keeps a momentum
+    m_i = (1-β) g_i(x^k) + β m_i and a server-mirrored reconstruction u_i,
+    uploading only the compressed momentum difference Q(m_i - u_i); both
+    sides update u_i <- u_i + Q(m_i - u_i). The robust aggregator IS the
+    filter — it sees the reconstructed momenta u_i (what Byzantines can
+    steer by sending arbitrary differences), and an optional server
+    momentum η blends the filtered aggregate into the previous server
+    direction g^k (the "server + worker momentum" of Liu et al. 2024)."""
+    momentum: float = 0.9          # worker-side β
+    server_momentum: float = 0.0   # server-side η (0 = plain filtering)
+    name = "cmfilter"
+    rng = ("grad", "q", "attack", "agg")
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        z = _zeros_like_f32(params)
+        zn = tu.tree_broadcast_leading(z, cfg.n_workers)
+        return z, {"worker_m": zn, "worker_u": zn}
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        n = cfg.n_workers
+        beta = self.momentum
+        eta = self.server_momentum
+        wkeys = tu.per_worker_keys(keys["grad"], n)
+        qkeys = tu.per_worker_keys(keys["q"], n,
+                                   common=cfg.compressor.common_randomness)
+
+        def one(b, kg, kq, m_i, u_i):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            m_new = jax.tree.map(
+                lambda gg, mm: (1 - beta) * gg.astype(jnp.float32)
+                + beta * mm, g, m_i)
+            q = tu.compress_tree(cfg.compressor, kq,
+                                 tu.tree_sub(m_new, u_i))
+            return ln, m_new, tu.tree_add(u_i, q)
+
+        losses, m_new, u_new = jax.vmap(one)(batch, wkeys, qkeys,
+                                             state["worker_m"],
+                                             state["worker_u"])
+        g_prev = state["g"]
+
+        def finalize(agg):
+            g = jax.tree.map(
+                lambda a, gp: (1 - eta) * a.astype(jnp.float32)
+                + eta * gp.astype(jnp.float32), agg, g_prev)
+            return g, {"worker_m": m_new, "worker_u": u_new}
+
+        return RoundOutput(loss=jnp.mean(losses), cand=u_new,
+                           finalize=finalize)
+
+
+# ---------------------------------------------------------------------------
+# Byrd-SAGA over the stacked protocol (Wu et al. 2020)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SAGAEstimator(GradientEstimator):
+    """SAGA fitted to the stacked corrupt→attack→aggregate protocol: worker
+    i keeps a per-sample gradient table over ITS slice of the anchor
+    partition (the per-worker dataset) plus the table mean, and each round
+    sends the SAGA estimate
+
+        v_i = mean_j[ ∇f_{i,j}(x) - table_i[j] ] + mean(table_i)
+
+    over freshly (without-replacement) sampled indices j; the candidates go
+    through the engine's attack + robust aggregation unchanged. The table
+    lives on the worker — it never hits the wire (``round_bits`` stays the
+    dense 32d) — but it IS estimator state, so it rides the engine state
+    dict through checkpoints and resume.
+
+    REQUIRES a fixed anchor: table slot j corresponds to anchor sample j
+    across rounds, so the driver must pass the same anchor every round
+    (the logreg task's full per-worker dataset does; the lm TokenStream
+    resamples per round, and ``RunSpec`` rejects that pairing eagerly).
+
+    ``seed_batchable = False``: vmapping a sweep over seeds would stack the
+    (n, m, d) tables into (seeds, n, m, d) — a silent memory blow-up on
+    anything beyond toy problems — so exec/batching routes SAGA cells down
+    the serial / WorkerPool path instead.
+    """
+    batch_size: int = 16
+    name = "saga"
+    rng = ("grad", "attack", "agg")
+    seed_batchable = False
+
+    def init_extras(self, cfg, loss_fn, params, anchor, key):
+        n = cfg.n_workers
+        m = jax.tree.leaves(anchor)[0].shape[1]   # per-worker sample count
+
+        def table_leaf(p):
+            return jnp.zeros((n, m) + p.shape, jnp.float32)
+
+        return tu.tree_zeros_like(params), {
+            "worker_table": jax.tree.map(table_leaf, params),
+            "worker_table_mean": tu.tree_broadcast_leading(
+                _zeros_like_f32(params), n),
+        }
+
+    def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
+              keys):
+        table = state["worker_table"]
+        m = jax.tree.leaves(table)[0].shape[1]
+        b = min(int(self.batch_size), m)
+        wkeys = tu.per_worker_keys(keys["grad"], cfg.n_workers)
+
+        def one(anchor_i, kg, table_i, mean_i):
+            k_idx, k_loss = jax.random.split(kg)
+            idx = jax.random.permutation(k_idx, m)[:b]   # w/o replacement
+
+            def g_of(j):
+                sample = jax.tree.map(lambda a: a[j][None], anchor_i)
+                return jax.value_and_grad(loss_fn)(params, sample, k_loss)
+
+            losses, g_new = jax.vmap(g_of)(idx)                  # (b, ...)
+            g_new = jax.tree.map(lambda g: g.astype(jnp.float32), g_new)
+            old = jax.tree.map(lambda t: t[idx], table_i)        # (b, ...)
+            v = jax.tree.map(
+                lambda gn, go, tm: jnp.mean(gn - go, axis=0) + tm,
+                g_new, old, mean_i)
+            new_table = jax.tree.map(lambda t, gn: t.at[idx].set(gn),
+                                     table_i, g_new)
+            new_mean = jax.tree.map(
+                lambda tm, go, gn: tm + jnp.sum(gn - go, axis=0) / m,
+                mean_i, old, g_new)
+            return jnp.mean(losses), v, new_table, new_mean
+
+        losses, v, tables, means = jax.vmap(one)(
+            anchor, wkeys, table, state["worker_table_mean"])
+        return RoundOutput(loss=jnp.mean(losses), cand=v,
+                           updates={"worker_table": tables,
+                                    "worker_table_mean": means})
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -400,6 +612,16 @@ def _marina_factory(cfg, **kw):
     return MarinaEstimator(**kw)
 
 
+def _ef21_factory(cfg, **kw):
+    if cfg.compressor.contractive_fn is None:
+        raise ValueError(
+            "byz_ef21 needs a contractive compressor (topk / sign / "
+            "identity — Compressor.contractive_delta must be defined): the "
+            "EF21 recursion contracts the error-feedback state, and "
+            f"unbiasedness scaling breaks it; got {cfg.compressor.name!r}")
+    return ByzEF21Estimator(**kw)
+
+
 ESTIMATORS = {
     "marina": _marina_factory,
     "sgd": lambda cfg, **kw: SGDEstimator(momentum=kw.pop("momentum", 0.0),
@@ -410,7 +632,52 @@ ESTIMATORS = {
     "diana": lambda cfg, **kw: DianaEstimator(**kw),
     "mvr": lambda cfg, **kw: MVREstimator(**kw),
     "svrg": lambda cfg, **kw: SVRGEstimator(**kw),
+    "byz_ef21": _ef21_factory,
+    "cmfilter": lambda cfg, **kw: CMFilterEstimator(**kw),
+    "saga": lambda cfg, **kw: SAGAEstimator(**kw),
 }
+
+# trait view for code that must answer questions about a method WITHOUT a
+# cfg in hand (exec/batching.can_batch classifies cells before building
+# anything); the sparse MARINA variant shares MarinaEstimator's traits.
+ESTIMATOR_CLASSES = {
+    "marina": MarinaEstimator,
+    "sgd": SGDEstimator,
+    "sgdm": SGDEstimator,
+    "csgd": CSGDEstimator,
+    "diana": DianaEstimator,
+    "mvr": MVREstimator,
+    "svrg": SVRGEstimator,
+    "byz_ef21": ByzEF21Estimator,
+    "cmfilter": CMFilterEstimator,
+    "saga": SAGAEstimator,
+}
+
+
+def needs_contractive_compressor(name: str) -> bool:
+    """Whether this method rejects unbiased-Q compressors (EF21 family) —
+    the ONE place drivers consult to map a generic keep-ratio onto the
+    right compressor kind (topk instead of randk). Pinned to the registry
+    key set by the conformance harness alongside the other traits."""
+    cls = ESTIMATOR_CLASSES.get(name)
+    return bool(getattr(cls, "needs_contractive", False))
+
+
+def seed_batchable(name: str) -> bool:
+    """Whether same-signature cells of this method may run as one
+    vmapped-over-seeds trajectory (exec/batching). Estimators with
+    per-worker tables (SAGA) opt out via ``seed_batchable = False``.
+
+    Unknown names answer False — batching is an optimization, so the
+    classifier fails CLOSED: a method registered in ``ESTIMATORS`` but
+    missing from ``ESTIMATOR_CLASSES`` runs serially (correct, slower)
+    instead of vmapping state the author never vetted for a seed axis.
+    The conformance harness pins the two registries to the same key set,
+    so the miss also fails loudly in CI.
+    """
+    cls = ESTIMATOR_CLASSES.get(name)
+    return False if cls is None else bool(getattr(cls, "seed_batchable",
+                                                  True))
 
 
 def get_estimator(name: str, cfg, **kw) -> GradientEstimator:

@@ -95,6 +95,111 @@ def communication_rounds_pl(pc: ProblemConstants, *, eps: float,
 
 
 # ---------------------------------------------------------------------------
+# successor methods: EF21 family (biased/contractive compression)
+# ---------------------------------------------------------------------------
+
+def contractive_delta(compressor, d: int) -> Optional[float]:
+    """δ_C with E||C(x) - x||² <= δ_C ||x||².
+
+    Native for biased compressors (TopK: 1 - K/d, sign: 1 - 1/d, identity:
+    0); an unbiased ω-compressor becomes contractive after 1/(1+ω) scaling
+    with δ_C = ω/(1+ω) (Beznosikov et al. 2020, Lemma 1) — returned here so
+    the EF21-side theory can still rank unbiased operators. None when no
+    bound exists (ω = NaN and no native δ_C).
+    """
+    delta = compressor.contractive_delta(d)
+    if delta is not None:
+        return float(delta)
+    omega = compressor.omega(d)
+    if math.isnan(omega):
+        return None
+    return omega / (1.0 + omega)
+
+
+def ef21_step_size(pc: ProblemConstants, *, delta_c: float,
+                   byz_delta: float = 0.0, c: float = 6.0) -> float:
+    """Byz-EF21 step size.
+
+    EF21 (Richtárik et al. 2021, Thm. 1): with a δ_C-contractive compressor
+    the error-feedback recursion contracts at θ = 1 - √δ_C with Young
+    remainder β = δ_C/θ, giving γ = 1/(L + L̃ √(β/θ)) = 1/(L + L̃ √δ_C/θ).
+    The robust-aggregation degradation of Rammal et al. 2023 (Thm. 4.1
+    shape) scales the error-feedback term by (1 + √(4cδ)) for a δ-fraction
+    of Byzantines under a (δ,c)-robust aggregator. δ_C = 0 (identity)
+    recovers γ = 1/L regardless of δ — full-gradient descent is already
+    exact, Byzantines only raise the ζ² floor.
+    """
+    if not 0.0 <= delta_c < 1.0:
+        raise ValueError(f"delta_c={delta_c} must be in [0, 1) (contractive)")
+    if delta_c == 0.0:
+        return 1.0 / pc.L
+    theta = 1.0 - math.sqrt(delta_c)
+    l_tilde = max(pc.calL_pm, pc.L)
+    ef_term = l_tilde * math.sqrt(delta_c) / theta
+    ef_term *= 1.0 + math.sqrt(4.0 * c * byz_delta)
+    return 1.0 / (pc.L + ef_term)
+
+
+def ef21_rounds_nc(pc: ProblemConstants, *, eps_sq: float, delta0: float,
+                   delta_c: float, byz_delta: float = 0.0,
+                   c: float = 6.0) -> float:
+    """Non-convex rounds bound for the EF21 family: 2Φ0/(γ ε²) with
+    Φ0 ≈ 2Δ0 (the G^0 error-feedback term vanishes — g_i^0 = ∇f_i(x^0) is
+    exact at init)."""
+    gamma = ef21_step_size(pc, delta_c=delta_c, byz_delta=byz_delta, c=c)
+    return 4 * delta0 / (gamma * eps_sq)
+
+
+# ---------------------------------------------------------------------------
+# communication cost per round (paper Fig. 8 / footnote 3, extended)
+# ---------------------------------------------------------------------------
+
+# method -> wire family. "vr_switch" = geometric coin between full 32d
+# uploads and Q(·) rounds (MARINA); "compressed" = one Q(·) upload every
+# round; "contractive_ef" = one C(·) upload every round — error feedback
+# absorbs the compressor bias so there are NO full-gradient correction
+# rounds (the EF21 error term lives in the rate, not on the wire);
+# "dense" = 32d every round (tables/momenta/snapshots are worker-local).
+BITS_FAMILY = {
+    "marina": "vr_switch",
+    "csgd": "compressed",
+    "diana": "compressed",
+    "cmfilter": "compressed",
+    "byz_ef21": "contractive_ef",
+    "sgd": "dense",
+    "sgdm": "dense",
+    "mvr": "dense",
+    "svrg": "dense",
+    "saga": "dense",
+}
+
+
+def comm_bits_per_round(method: str, compressor, d: int, *,
+                        p: float = 1.0) -> float:
+    """Expected uploaded bits per worker per round, the theory-side twin of
+    ``GradientEstimator.expected_bits`` (pinned to it by the conformance
+    harness, tests/test_estimator_contract.py).
+
+    The original formulas here assumed unbiased compressors (every
+    compressed upload costs bits_Q(d), full rounds 32d with probability p);
+    the biased/contractive branch differs in kind: an EF21-family method
+    never pays a full-gradient round, because the per-worker error-feedback
+    state absorbs the bias instead of a p-coin correcting it.
+    """
+    if method not in BITS_FAMILY:
+        raise KeyError(
+            f"unknown method {method!r}; known: {sorted(BITS_FAMILY)}")
+    family = BITS_FAMILY[method]
+    dense = 32.0 * d
+    if family == "dense":
+        return dense
+    bits_q = float(compressor.bits_per_vector(d))
+    if family == "vr_switch":
+        return p * dense + (1.0 - p) * bits_q
+    return bits_q                      # compressed | contractive_ef
+
+
+# ---------------------------------------------------------------------------
 # constants estimation for the logreg task (used by examples/tests)
 # ---------------------------------------------------------------------------
 

@@ -17,7 +17,10 @@ reassociation only; pinned to ~1e-6 by tests/test_exec_batching.py).
 Batching eligibility (``can_batch``) is conservative: the logreg task
 (shared dataset; the LM TokenStream bakes the seed into its data stream)
 on the dense gspmd backend (vmap over shard_map / pallas grids is not
-supported), with no host-side callback in the loop knobs.
+supported), a method whose estimator declares ``seed_batchable`` (SAGA's
+per-worker gradient tables must not be stacked over a seed axis — those
+cells take the serial / WorkerPool path), with no host-side callback in
+the loop knobs.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.api.runner import RunResult, build
+from repro.core import estimators
 from repro.core import tree_utils as tu
 
 GROUP_AXIS = "seed"
@@ -70,6 +74,8 @@ def can_batch(cells: Sequence[Tuple[str, object]],
         return False                     # TokenStream data is seed-baked
     if spec.agg_mode != "gspmd":
         return False                     # shard_map/pallas don't vmap
+    if not estimators.seed_batchable(spec.method):
+        return False                     # per-worker tables don't stack
     seen = set()
     for _, s in cells:
         if group_key(s) != group_key(spec) or s.seed in seen:

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregators import (Aggregator, bucketize, coord_median,
+from repro.core.aggregators import (bucketize, coord_median,
                                     coord_trimmed_mean, get_aggregator)
 
 KEY = jax.random.PRNGKey(0)

@@ -21,12 +21,14 @@ def test_roundtrip_every_method_attack_aggregator_combination():
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")      # bucketed-delta advisories
         for method in components("method"):
+            # byz_ef21 validates eagerly against non-contractive compressors
+            comp = "topk" if method == "byz_ef21" else "randk"
             for attack in components("attack"):
                 for agg in components("aggregator"):
                     s = RunSpec(task="logreg", method=method, attack=attack,
                                 aggregator=agg, n_workers=6, n_byz=1,
                                 steps=3,
-                                compressor="randk",
+                                compressor=comp,
                                 compressor_kwargs={"ratio": 0.5},
                                 data_kwargs={"dim": 7, "batch_size": 4})
                     assert RunSpec.from_dict(s.to_dict()) == s
@@ -78,7 +80,14 @@ def test_unknown_component_names_suggest():
     with pytest.raises(ValueError, match="did you mean 'krum'"):
         RunSpec(aggregator="krun")
     with pytest.raises(ValueError, match="unknown compressor"):
-        RunSpec(compressor="topk")
+        RunSpec(compressor="gzipq")
+    # topk IS registered now (EF21 family) — and byz_ef21 rejects
+    # non-contractive compressors eagerly, at spec construction
+    with pytest.raises(ValueError, match="contractive"):
+        RunSpec(method="byz_ef21", compressor="randk",
+                compressor_kwargs={"ratio": 0.5})
+    RunSpec(method="byz_ef21", compressor="topk",
+            compressor_kwargs={"ratio": 0.5})
 
 
 def test_agg_mode_validated_eagerly():

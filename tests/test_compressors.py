@@ -4,9 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressors import (get_compressor, identity, l2_dithering,
+from repro.core.compressors import (identity, l2_dithering,
                                     natural_compression, rand_k,
-                                    sign_compressor)
+                                    sign_compressor, top_k)
 
 KEY = jax.random.PRNGKey(7)
 
@@ -95,9 +95,41 @@ def test_sign_compressor_is_sign():
     assert jnp.all(jnp.sign(q) == jnp.sign(x))
 
 
+def test_topk_keeps_largest_unscaled():
+    comp = top_k(0.25)
+    x = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 0.05, 1.0, -0.4])
+    q = comp.compress(KEY, x)
+    # k = 2 largest magnitudes kept raw (no unbiasedness scaling)
+    np.testing.assert_allclose(
+        np.asarray(q), [0, -5.0, 0, 2.0, 0, 0, 0, 0], atol=1e-7)
+
+
+def test_topk_contractive_bound_deterministic():
+    """||C(x) - x||^2 <= (1 - k/d) ||x||^2, with equality only when all
+    magnitudes are equal — check on random vectors (top_k is deterministic,
+    no sampling slack needed)."""
+    comp = top_k(0.3)
+    for i in range(20):
+        x = jax.random.normal(jax.random.fold_in(KEY, i), (50,))
+        q = comp.compress(KEY, x)
+        err = float(jnp.sum((q - x) ** 2))
+        bound = comp.contractive_delta(50) * float(jnp.sum(x * x))
+        assert err <= bound + 1e-6, (err, bound)
+    assert comp.contractive_delta(50) == pytest.approx(1 - 15 / 50)
+    assert np.isnan(comp.omega(50))      # biased: no Def. 2.2 omega
+
+
+def test_contractive_delta_surface():
+    assert identity().contractive_delta(10) == 0.0
+    assert sign_compressor().contractive_delta(10) == pytest.approx(0.9)
+    assert rand_k(0.5).contractive_delta(10) is None     # unbiased, unscaled
+    assert l2_dithering(2).contractive_delta(10) is None
+
+
 def test_bits_accounting():
     d = 1000
     assert rand_k(0.1).bits_per_vector(d) == 100 * 64
+    assert top_k(0.1).bits_per_vector(d) == 100 * 64
     assert identity().bits_per_vector(d) == 32 * d
     assert natural_compression().bits_per_vector(d) == 9 * d
 

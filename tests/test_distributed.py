@@ -5,7 +5,6 @@ and the sharded aggregation path must equal the gspmd path.
 Multi-device CPU requires XLA_FLAGS set before jax init, so these tests run
 in subprocesses.
 """
-import json
 import os
 import subprocess
 import sys

@@ -1,0 +1,232 @@
+"""Estimator conformance harness (DESIGN.md §2 "estimator-plugin contract").
+
+One parametrized suite over EVERY ``ESTIMATORS`` entry — old and new — so a
+future estimator gets the whole contract checked for free the moment it is
+registered:
+
+  * state pytree round-trips through checkpoint/resume bit-for-bit (the
+    engine state dict, INCLUDING estimator extras: worker tables, EF21
+    error-feedback state, momenta, snapshots);
+  * ``run(spec)`` ≡ the hand-wired engine (spec.build_config() +
+    make_method + the runner's documented key schedule) bit-for-bit;
+  * communication accounting matches ``theory.comm_bits_per_round`` (and
+    the internal p-mixture identity between round_bits and expected_bits);
+  * descent on a deterministic quadratic (full-batch least squares, fixed
+    keys — any estimator that fails this is not an optimizer);
+  * pallas ≡ gspmd aggregation backends at the pinned 2e-5 tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, components, run
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import (ByzVRMarinaConfig, get_aggregator, get_attack,
+                        get_compressor, make_method)
+from repro.core import estimators as E
+from repro.core import theory
+from repro.data import (corrupt_labels_logreg, init_logreg_params,
+                        logreg_loss, make_logreg_data)
+
+KEY = jax.random.PRNGKey(11)
+DIM = 8
+N = 5
+STEPS = 5
+BATCH = 8
+
+METHODS = components("method")
+
+# canonical per-method spec tweaks: byz_ef21 needs a contractive
+# compressor, svrg's paper pairing is RFA, saga's table stays toy-sized
+_METHOD_KW = {
+    "byz_ef21": {"compressor": "topk",
+                 "compressor_kwargs": {"ratio": 0.5}},
+    "svrg": {"aggregator": "rfa"},
+    "saga": {"method_kwargs": {"batch_size": 8}},
+}
+
+
+def _spec(method, **kw):
+    base = dict(task="logreg", method=method, n_workers=N, n_byz=1, p=0.3,
+                lr=0.25, attack="ALIE", aggregator="cm", bucket_size=2,
+                compressor="randk", compressor_kwargs={"ratio": 0.5},
+                steps=STEPS, seed=3,
+                data_kwargs={"n_samples": 60, "dim": DIM,
+                             "batch_size": BATCH, "data_seed": 0})
+    base.update(_METHOD_KW.get(method, {}))
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# registry coherence
+# ---------------------------------------------------------------------------
+
+def test_trait_registries_cover_every_estimator():
+    """The trait maps next to ``ESTIMATORS`` must never drift: a method
+    missing from ``ESTIMATOR_CLASSES`` silently runs un-batched (fail-
+    closed, but slow), one missing from ``theory.BITS_FAMILY`` breaks comm
+    accounting. Registering an estimator means registering its traits."""
+    assert set(E.ESTIMATOR_CLASSES) == set(E.ESTIMATORS)
+    assert set(theory.BITS_FAMILY) == set(E.ESTIMATORS)
+    # unknown names classify as un-batchable, never as vmappable
+    assert E.seed_batchable("not-a-method") is False
+    # drivers map keep-ratios onto compressor kinds through this one trait
+    assert E.needs_contractive_compressor("byz_ef21") is True
+    assert E.needs_contractive_compressor("marina") is False
+    assert E.needs_contractive_compressor("not-a-method") is False
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_state_checkpoints_and_resumes_bit_for_bit(method, tmp_path):
+    """The FULL engine state (params + g + every estimator extra) must
+    survive ``repro.checkpoint`` exactly, and an interrupted-and-resumed
+    ``api.runner`` run must reproduce the uninterrupted trajectory."""
+    spec = _spec(method)
+    full = run(spec, log_every=1)
+
+    # 1) direct pytree round-trip, bit-for-bit over every leaf
+    ck = str(tmp_path / "state")
+    save_checkpoint(ck, full.state, step=int(full.state["step"]))
+    restored, step = load_checkpoint(ck, like=full.state)
+    assert step == STEPS
+    _assert_trees_equal(full.state, restored)
+
+    # 2) interrupted at step 2, resumed through the runner
+    ck2 = str(tmp_path / "resume")
+    run(spec.replace(steps=2), log_every=1, checkpoint=ck2)
+    resumed = run(spec, log_every=1, resume=ck2)
+    _assert_trees_equal(full.state, resumed.state)
+    tail = [h["loss"] for h in full.history[2:]]
+    np.testing.assert_array_equal(
+        np.asarray(tail, np.float32),
+        np.asarray([h["loss"] for h in resumed.history], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# run(spec) ≡ hand-wired engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_run_spec_matches_hand_wired_engine(method):
+    spec = _spec(method)
+    result = run(spec, log_every=1)
+
+    data = make_logreg_data(
+        jax.random.PRNGKey(spec.data_kwargs["data_seed"]),
+        n_samples=spec.data_kwargs["n_samples"], dim=DIM, n_workers=N,
+        homogeneous=True)
+    loss = logreg_loss(0.01)
+    m = make_method(spec.method, spec.build_config(), loss,
+                    corrupt_labels_logreg, **spec.method_kwargs)
+    anchor = data.stacked()
+    _, k_run = jax.random.split(jax.random.PRNGKey(spec.seed))
+    state = m.init(init_logreg_params(DIM), anchor, k_run)
+    step = jax.jit(m.step)
+    losses = []
+    for it in range(spec.steps):
+        k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, it + 1))
+        state, met = step(state, data.sample_batches(k_batch, BATCH),
+                          anchor, k_step)
+        losses.append(np.asarray(met["loss"]))
+    _assert_trees_equal(state["params"], result.params)
+    _assert_trees_equal(state["g"], result.state["g"])
+    np.testing.assert_array_equal(
+        np.asarray(losses, np.float32),
+        np.asarray([h["loss"] for h in result.history], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# communication accounting ≡ theory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_comm_accounting_matches_theory(method):
+    spec = _spec(method)
+    cfg = spec.build_config()
+    est = E.get_estimator(spec.method, cfg, **spec.method_kwargs)
+    for d in (64, 937):
+        expected = est.expected_bits(cfg, d)
+        assert expected == pytest.approx(
+            theory.comm_bits_per_round(method, cfg.compressor, d, p=cfg.p))
+        # the p-mixture identity between per-round and expected accounting
+        mix = (cfg.p * est.round_bits(cfg, d, True)
+               + (1 - cfg.p) * est.round_bits(cfg, d, False))
+        assert expected == pytest.approx(mix)
+        assert est.round_bits(cfg, d, True) > 0
+
+
+# ---------------------------------------------------------------------------
+# descent on the deterministic quadratic
+# ---------------------------------------------------------------------------
+
+def _quadratic_problem():
+    """Full-batch least squares: loss is an exact quadratic in w, the data
+    is fixed, and the batch IS the anchor — the only randomness left is the
+    estimators' own (key-deterministic) coins/compressors."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (N, 12, 6)) / jnp.sqrt(6.0)
+    w_true = jax.random.normal(kw, (6,))
+    y = x @ w_true
+    anchor = {"x": x, "y": y}
+
+    def qloss(params, batch, key=None):
+        r = batch["x"] @ params["w"] - batch["y"]
+        return 0.5 * jnp.mean(r * r) + 0.005 * jnp.sum(params["w"] ** 2)
+
+    return anchor, qloss, {"w": jnp.zeros((6,), jnp.float32)}
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_descends_on_deterministic_quadratic(method):
+    anchor, qloss, params0 = _quadratic_problem()
+    spec = _spec(method)              # reuse the canonical component picks
+    comp = get_compressor(spec.compressor, **spec.compressor_kwargs)
+    cfg = ByzVRMarinaConfig(
+        n_workers=N, n_byz=1, p=0.3, lr=0.3,
+        aggregator=get_aggregator(spec.aggregator, bucket_size=2),
+        compressor=comp, attack=get_attack("NA"))
+    m = make_method(method, cfg, qloss, **spec.method_kwargs)
+    state = m.init(params0, anchor, KEY)
+    step = jax.jit(m.step)
+    l0 = float(qloss(state["params"], {"x": anchor["x"].reshape(-1, 6),
+                                       "y": anchor["y"].reshape(-1)}))
+    k = KEY
+    for _ in range(80):
+        k, k_step = jax.random.split(k)
+        state, met = step(state, anchor, anchor, k_step)
+        assert bool(jnp.isfinite(met["loss"])), method
+    l1 = float(qloss(state["params"], {"x": anchor["x"].reshape(-1, 6),
+                                       "y": anchor["y"].reshape(-1)}))
+    assert l1 < 0.5 * l0, (method, l0, l1)
+
+
+# ---------------------------------------------------------------------------
+# pallas ≡ gspmd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_pallas_backend_matches_gspmd(method):
+    """Every estimator must run under the fused Pallas message phase and
+    stay on the gspmd trajectory at the pinned tolerance (DESIGN.md §3:
+    the kernel path reassociates fp32 sums, so 2e-5, not bit-equal)."""
+    results = {}
+    for mode in ("gspmd", "pallas"):
+        results[mode] = run(_spec(method, agg_mode=mode), log_every=1)
+    for h_g, h_p in zip(results["gspmd"].history,
+                        results["pallas"].history):
+        np.testing.assert_allclose(h_g["loss"], h_p["loss"],
+                                   atol=2e-5, rtol=2e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5),
+        results["gspmd"].params, results["pallas"].params)

@@ -93,8 +93,8 @@ def test_honest_candidate_variance_tracks_step_size(problem):
         state, _ = step(state, mb, anchor, k2)
         move = float(tu.tree_norm_sq(tu.tree_sub(state["params"], old)))
         cand = candidates(state["params"], old, state["g"], mb, k1)
-        flat = jnp.stack([jnp.concatenate([l[i].reshape(-1)
-                                           for l in jax.tree.leaves(cand)])
+        flat = jnp.stack([jnp.concatenate([leaf[i].reshape(-1)
+                                           for leaf in jax.tree.leaves(cand)])
                           for i in range(4)])
         pair_var = float(jnp.mean(
             jnp.sum((flat[:, None] - flat[None, :]) ** 2, -1)))

@@ -83,6 +83,72 @@ def test_compile_count_3x3x5_grid():
     assert srun.stats["max_group_cache"] == 1           # no per-step retrace
 
 
+def test_can_batch_stateful_table_methods_fall_back_to_serial():
+    """SAGA's per-worker gradient tables must NOT be vmapped over seeds
+    (``seed_batchable = False``): the cells classify as un-batchable and
+    run down the serial / WorkerPool path, where they still complete."""
+    cells = list(Sweep(_base(method="saga",
+                             method_kwargs={"batch_size": 8}),
+                       {"seed": (0, 1)}).expand())
+    assert not xc.can_batch(cells)
+    srun = xc.run_cells(cells, run_kw={"log_every": STEPS})
+    assert not srun.failures
+    assert srun.stats["vmapped_groups"] == 0
+    assert srun.stats["serial_cells"] == 2
+    # an otherwise-identical batchable method still vmaps — the fallback is
+    # the estimator trait, not an accident of the grid shape
+    ref = list(Sweep(_base(method="sgd"), {"seed": (0, 1)}).expand())
+    assert xc.can_batch(ref)
+
+
+def _ef21_cells():
+    base = _base(method="byz_ef21", compressor="topk",
+                 compressor_kwargs={"ratio": 0.5})
+    return list(Sweep(base, {"aggregator": ("mean", "cm"),
+                             "seed": (0, 1, 2)}).expand())
+
+
+def test_byz_ef21_vmapped_group_matches_serial_per_seed():
+    """EF21's per-worker error-feedback state vmaps over seeds like any
+    other stacked extra; the batched trajectory must match serial runs."""
+    cells = _ef21_cells()[:3]            # one jit-signature group
+    assert xc.can_batch(cells)
+    results, stats = xc.run_group(cells, log_every=1)
+    assert stats["step_compiles"] == 1
+    for run_id, spec in cells:
+        serial = spec.run(log_every=1)
+        np.testing.assert_allclose(
+            np.asarray([h["loss"] for h in results[run_id].history]),
+            np.asarray([h["loss"] for h in serial.history]),
+            rtol=1e-5, atol=1e-6)
+        assert results[run_id].comm_bits == serial.comm_bits
+
+
+def test_killed_and_resumed_byz_ef21_sweep_bit_identical(tmp_path):
+    """Kill a byz_ef21 sweep mid-group, resume: the vmapped groups commit
+    atomically, so the summary equals the uninterrupted one byte-for-byte
+    (the EF21 state makes the trajectory history-dependent — any torn
+    half-group re-run at a different width would show up here)."""
+    import os
+    cells = _ef21_cells()
+    d1, d2 = str(tmp_path / "full"), str(tmp_path / "killed")
+    xc.run_cells(cells, out_dir=d1, run_kw={"log_every": 1})
+    # "kill" after 4 of 6 cells: first group committed, second torn
+    xc.run_cells(cells[:4], out_dir=d2, run_kw={"log_every": 1})
+    srun = xc.run_cells(cells, out_dir=d2, resume=True,
+                        run_kw={"log_every": 1})
+    assert len(srun.skipped) == 3
+    assert srun.stats["executed_cells"] == 3
+
+    def summary_bytes(out_dir):
+        path = xc.write_summary(os.path.join(out_dir, "s_summary.json"),
+                                xc.summarize_dir(out_dir))
+        with open(path, "rb") as f:
+            return f.read()
+
+    assert summary_bytes(d1) == summary_bytes(d2)
+
+
 def test_run_sweep_returns_mapping_with_artifacts(tmp_path):
     sweep = Sweep(_base(), {"seed": (0, 1)})
     srun = xc.run_cells(list(sweep.expand()), out_dir=str(tmp_path),

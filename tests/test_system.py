@@ -5,7 +5,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.data import TokenStream, corrupt_labels_lm

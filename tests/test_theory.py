@@ -112,6 +112,66 @@ def test_importance_sampling_unbiased(problem):
     assert err < 0.05, err
 
 
+def test_comm_bits_per_round_unbiased_vs_contractive_branch():
+    """Regression pin (the old formulas assumed unbiased compressors):
+    rand-k under MARINA pays the p-weighted full-gradient rounds; top-k
+    under Byz-EF21 pays ONE compressed upload every round — the error
+    feedback absorbs the bias, there is no correction traffic."""
+    from repro.core.compressors import get_compressor
+    d, ratio, p = 1000, 0.1, 0.2
+    randk = get_compressor("randk", ratio=ratio)
+    topk = get_compressor("topk", ratio=ratio)
+    # wire formats coincide (k values + k indices)...
+    assert randk.bits_per_vector(d) == 100 * 64
+    assert topk.bits_per_vector(d) == 100 * 64
+    # ...but the per-round expectations do not:
+    marina_bits = theory.comm_bits_per_round("marina", randk, d, p=p)
+    ef21_bits = theory.comm_bits_per_round("byz_ef21", topk, d, p=p)
+    assert marina_bits == pytest.approx(0.2 * 32000 + 0.8 * 6400)  # 11520
+    assert ef21_bits == pytest.approx(6400)                        # no p-term
+    # dense family ignores the compressor entirely
+    assert theory.comm_bits_per_round("saga", randk, d) == 32 * d
+    assert theory.comm_bits_per_round("sgdm", topk, d) == 32 * d
+    # compressed-every-round family (diana/csgd/cmfilter)
+    assert theory.comm_bits_per_round("cmfilter", randk, d) == 6400
+    with pytest.raises(KeyError):
+        theory.comm_bits_per_round("nope", randk, d)
+
+
+def test_contractive_delta_native_and_scaled():
+    from repro.core.compressors import get_compressor
+    d = 200
+    assert theory.contractive_delta(get_compressor("topk", ratio=0.1),
+                                    d) == pytest.approx(1 - 20 / 200)
+    assert theory.contractive_delta(get_compressor("sign"),
+                                    d) == pytest.approx(1 - 1 / 200)
+    assert theory.contractive_delta(get_compressor("identity"), d) == 0.0
+    # unbiased randk: contractive after 1/(1+omega) scaling
+    randk = get_compressor("randk", ratio=0.25)
+    omega = randk.omega(d)
+    assert theory.contractive_delta(randk, d) == pytest.approx(
+        omega / (1 + omega))
+
+
+def test_ef21_step_size_limits_and_monotonicity():
+    pc = theory.ProblemConstants(L=2.0, calL_pm=3.0)
+    # identity compressor: exact gradients, gamma = 1/L regardless of byz
+    assert theory.ef21_step_size(pc, delta_c=0.0) == pytest.approx(0.5)
+    assert theory.ef21_step_size(pc, delta_c=0.0,
+                                 byz_delta=0.2) == pytest.approx(0.5)
+    # heavier contraction and more byzantines both shrink gamma
+    g1 = theory.ef21_step_size(pc, delta_c=0.5)
+    g2 = theory.ef21_step_size(pc, delta_c=0.9)
+    assert 0 < g2 < g1 < 0.5
+    g_byz = theory.ef21_step_size(pc, delta_c=0.5, byz_delta=0.2)
+    assert g_byz < g1
+    # rounds bound scales inversely with gamma * eps^2
+    r = theory.ef21_rounds_nc(pc, eps_sq=1e-4, delta0=1.0, delta_c=0.5)
+    assert r == pytest.approx(4 * 1.0 / (g1 * 1e-4))
+    with pytest.raises(ValueError):
+        theory.ef21_step_size(pc, delta_c=1.0)
+
+
 def test_br_mvr_descends(problem):
     data, loss_fn, full = problem
     cfg = ByzVRMarinaConfig(n_workers=5, n_byz=1, lr=0.3,
