@@ -7,7 +7,9 @@
             x bucketing; analytic HBM-sweep roofline accounting ->
             experiments/bench/BENCH_agg.json (the aggregator-perf
             trajectory, uploaded by the CI bench job)
-  compress  (system) compressor throughput + wire compression
+  compress  (system) message path per wire format: jnp Compressor vs fused
+            Pallas wire, measured wire bytes + HBM-sweep roofline ->
+            experiments/bench/BENCH_compress.json (CI bench job)
   roofline  §Roofline terms from the dry-run artifacts
   sweep     (system) sweep engine: serial vs vmapped-batched grid execution
 

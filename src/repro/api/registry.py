@@ -85,6 +85,10 @@ _COMPRESSOR_DESCRIPTIONS = {
     "natural": "natural compression: stochastic power-of-two rounding, "
                "omega = 1/8",
     "sign": "sign(x)*||x||_1/d (BIASED; signSGD baselines only)",
+    "int8": "blockwise l2-dithering on a real int8 wire (QSGD s=127 per "
+            "256-coord block; fused pallas payload)",
+    "bf16": "deterministic bfloat16 rounding (BIASED, contractive "
+            "delta=2^-16; the trivial kernel wire)",
 }
 
 _OPTIMIZER_DESCRIPTIONS = {

@@ -16,6 +16,22 @@ All compressors return a *dense* vector (the mathematical value the server
 reconstructs). Wire-format size is reported by ``bits_per_vector`` so the
 communication benchmarks (paper Fig. 8) are exact without simulating packets.
 
+Wire formats (DESIGN.md §Wire): every registry entry either declares a
+kernel-side ``wire_format`` — the payload layout ``core/wire.py`` packs and
+``kernels/quantize.py`` reconstructs per (n, TILE_D) block inside the Pallas
+aggregation kernels — or is explicitly ``fallback_only`` (the dense jnp
+``compress`` stays the only implementation). The registry test fails CLOSED:
+an entry declaring neither is a bug, like a method missing from
+``seed_batchable``. ``compress`` remains the oracle in all cases; the fused
+wire path must reproduce it exactly (tests/test_wire.py).
+
+Tree boundary (pinned): compressors apply PER LEAF via
+``tree_utils.compress_tree`` — TopK/RandK's k = max(int(ratio*d_leaf), 1) is
+computed from each leaf's own size, never from the flat parameter count.
+``bits_per_vector(d)``/``contractive_delta(d)`` therefore describe ONE
+applied vector; tree-level accounting sums/maxes per-leaf values
+(``theory.comm_bits_per_round(..., dims=...)``, ``theory.tree_contractive_delta``).
+
 ``common_randomness`` RandK is the beyond-paper variant (DESIGN.md §3): all
 workers share the per-step key so the K coordinates coincide and the
 all-gather can physically move only K values (see core/byz_vr_marina.py).
@@ -56,6 +72,13 @@ class Compressor:
     common_randomness: bool = False
     ratio: Optional[float] = None    # RandK/TopK keep-ratio
     contractive_fn: Optional[Callable] = None   # d -> delta_C in [0, 1)
+    # kernel-side wire routing (core/wire.py): one of quantize.WIRE_FORMATS
+    # ("sparse" | "int8" | "sign" | "bf16" | "dense32"), or None with
+    # fallback_only=True for compressors that only exist as dense jnp.
+    # Exactly one of (wire_format is not None, fallback_only) must hold —
+    # enforced fail-closed by the conformance harness.
+    wire_format: Optional[str] = None
+    fallback_only: bool = False
 
     def omega(self, d):
         return self.omega_fn(d)
@@ -66,8 +89,16 @@ class Compressor:
     def contractive_delta(self, d) -> Optional[float]:
         """delta_C with E||C(x) - x||^2 <= delta_C ||x||^2, or None when no
         contraction bound is known (unbiased compressors are contractive
-        only after 1/(1+omega) scaling — see theory.contractive_delta)."""
+        only after 1/(1+omega) scaling — see theory.contractive_delta).
+        Per applied vector — i.e. per LEAF under ``compress_tree``; the
+        tree-level bound is ``theory.tree_contractive_delta``."""
         return None if self.contractive_fn is None else self.contractive_fn(d)
+
+    def tree_bits(self, dims) -> float:
+        """Wire bits for one compressed pytree upload: Σ_leaf bits(d_leaf).
+        The tree-boundary twin of ``bits_per_vector`` — matches what
+        ``compress_tree``/``wire.pack_tree`` actually put on the wire."""
+        return float(sum(self.bits_fn(int(d)) for d in dims))
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +111,8 @@ def identity() -> Compressor:
         bits_fn=lambda d: 32 * d,
         density_fn=lambda d: d,
         contractive_fn=lambda d: 0.0,    # C(x) = x: trivially contractive
+        wire_format="dense32",   # no payload transform: the dense path IS
+                                 # the wire, so wire routing is a no-op
     )
 
 
@@ -148,6 +181,7 @@ def rand_k(ratio: float = 0.1, *, common_randomness: bool = False) -> Compressor
         density_fn=density_fn,
         common_randomness=common_randomness,
         ratio=ratio,
+        wire_format="sparse",
     )
 
 
@@ -169,6 +203,13 @@ def top_k(ratio: float = 0.1) -> Compressor:
     unlike RandK there are no d/K-amplified values for Byzantines to hide
     noise in. ``omega`` is NaN: TopK must not be used where Def. 2.2
     unbiasedness is assumed.
+
+    Tree boundary (PINNED): K is PER LEAF — ``compress_tree`` applies this
+    operator to each leaf independently with k = max(int(ratio*d_leaf), 1),
+    NOT one global top-k over the flattened parameter vector. Consequently
+    ``contractive_delta(d)`` describes one leaf; the tree-level bound is
+    the worst leaf, max_l (1 - k_l/d_l) = ``theory.tree_contractive_delta``
+    (per-leaf top-k cannot beat its weakest leaf in the EF21 recursion).
     """
     if not (0 < ratio <= 1):
         raise ValueError(ratio)
@@ -193,6 +234,7 @@ def top_k(ratio: float = 0.1) -> Compressor:
         density_fn=lambda d: _k(d),
         ratio=ratio,
         contractive_fn=lambda d: 1.0 - _k(d) / d,
+        wire_format="sparse",
     )
 
 
@@ -228,6 +270,10 @@ def l2_dithering(levels: int = 1) -> Compressor:
         omega_fn=omega,
         bits_fn=lambda d: int(32 + density(d) * (2 + 32)),
         density_fn=density,
+        # global-norm coupling: every tile needs ||x||_2 of the WHOLE vector
+        # before any level can be decoded, which breaks one-sweep blockwise
+        # reconstruction. The blockwise variant with a kernel wire is int8.
+        fallback_only=True,
     )
 
 
@@ -256,6 +302,10 @@ def natural_compression() -> Compressor:
         omega_fn=lambda d: 1.0 / 8.0,
         bits_fn=lambda d: 9 * d,
         density_fn=lambda d: d,
+        # 9-bit sign+exponent words have no packed-array dtype on TPU; a
+        # kernel wire would round-trip through int16 and save nothing over
+        # bf16. Dense jnp stays the only implementation.
+        fallback_only=True,
     )
 
 
@@ -276,6 +326,85 @@ def sign_compressor() -> Compressor:
         bits_fn=lambda d: d + 32,
         density_fn=lambda d: d,
         contractive_fn=lambda d: 1.0 - 1.0 / d,
+        wire_format="sign",
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel-native quantized wires (int8 / bf16)
+# ---------------------------------------------------------------------------
+
+INT8_BLOCK = 256       # per-block l2 norm granularity (one fp32 per block)
+INT8_LEVELS = 127      # levels fit the signed-int8 payload exactly
+
+
+def _int8_encode(key, x):
+    """Blockwise l2-dithering onto signed int8 levels — the EXACT encoder
+    shared by the jnp oracle ``compress`` and ``wire.pack_tree``, so the
+    fused path reconstructs bit-identical values. Returns
+    (levels (nb, B) int8, norms (nb,) f32) over zero-padded blocks."""
+    xf = x.reshape(-1).astype(jnp.float32)
+    d = xf.size
+    pad = (-d) % INT8_BLOCK
+    xb = jnp.pad(xf, (0, pad)).reshape(-1, INT8_BLOCK)
+    norm = jnp.sqrt(jnp.sum(xb * xb, axis=1, keepdims=True))
+    scaled = jnp.where(norm > 0, jnp.abs(xb) / jnp.maximum(norm, 1e-30), 0.0)
+    u = jax.random.uniform(key, xb.shape)
+    level = jnp.floor(scaled * INT8_LEVELS + u)      # <= 127: scaled <= 1
+    return (jnp.sign(xb) * level).astype(jnp.int8), norm[:, 0]
+
+
+def _int8_decode(levels, norms):
+    """(nb, B) int8 + (nb,) f32 -> (nb*B,) f32 dequantized values."""
+    out = norms[:, None] * levels.astype(jnp.float32) / INT8_LEVELS
+    return out.reshape(-1)
+
+
+def int8_quantization() -> Compressor:
+    """Blockwise l2-dithering packed into a real int8 wire (QSGD with
+    s = 127 levels per 256-coord block — Alistarh et al. 2017, blockwise).
+
+    Unbiased with omega <= min(B/s², √B/s) = 256/127² ≈ 0.016 per block
+    (blocks quantize independently, so the per-block bound is the vector
+    bound). Wire: 8 bits/coord + one fp32 norm per block — the payload the
+    Pallas kernels dequantize per (n, TILE_D) block (kernels/quantize.py).
+    """
+    s, b = INT8_LEVELS, INT8_BLOCK
+
+    def compress(key, x):
+        levels, norms = _int8_encode(key, x)
+        out = _int8_decode(levels, norms)
+        return out[:x.size].reshape(x.shape).astype(x.dtype)
+
+    return Compressor(
+        name="int8",
+        compress=compress,
+        omega_fn=lambda d: min(b / s**2, (b ** 0.5) / s),
+        bits_fn=lambda d: 8 * d + 32 * (-(-d // b)),
+        density_fn=lambda d: d,
+        wire_format="int8",
+    )
+
+
+def bf16_cast() -> Compressor:
+    """Deterministic bfloat16 rounding — BIASED (round-to-nearest, no
+    dither), contractive with delta_C = 2^-16: the relative rounding error
+    per coordinate is at most 2^-8 (8 mantissa bits incl. the hidden one),
+    so ||C(x) - x||² <= 2^-16 ||x||². Wire: 16 bits/coord, the trivial
+    kernel wire (the payload IS a TPU dtype). bf16 leaves pass through
+    exactly."""
+
+    def compress(key, x):
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+
+    return Compressor(
+        name="bf16",
+        compress=compress,
+        omega_fn=lambda d: float("nan"),     # deterministic rounding: biased
+        bits_fn=lambda d: 16 * d,
+        density_fn=lambda d: d,
+        contractive_fn=lambda d: 2.0 ** -16,
+        wire_format="bf16",
     )
 
 
@@ -286,6 +415,8 @@ REGISTRY = {
     "dither": l2_dithering,
     "natural": natural_compression,
     "sign": sign_compressor,
+    "int8": int8_quantization,
+    "bf16": bf16_cast,
 }
 
 

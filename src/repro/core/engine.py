@@ -110,7 +110,15 @@ def message_phase(cfg, attack_key, agg_key, cand):
     ``sent`` tensor is never written to HBM (DESIGN.md §3). RN (needs the
     exact jax.random stream) and the other backends materialize ``sent``
     via ``apply_attack`` as before.
+
+    ``cand`` may also be a ``wire.WireCandidates`` payload (estimators whose
+    compressor declares a kernel wire format, under pallas): then even the
+    candidates themselves never materialize — the kernels reconstruct
+    base + decode(payload) per VMEM block (DESIGN.md §Wire).
     """
+    from repro.core import wire
+    if isinstance(cand, wire.WireCandidates):
+        return wire.wire_message_phase(cfg, attack_key, agg_key, cand)
     if cfg.agg_mode == "pallas":
         from repro.core.sharded_agg import AttackCtx, tree_aggregate_pallas
         clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")

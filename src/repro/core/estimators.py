@@ -88,30 +88,57 @@ class MarinaEstimator(GradientEstimator):
 
     def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
               keys):
+        from repro.core import wire
+
         n = cfg.n_workers
         c_k = jax.random.bernoulli(keys["bern"], cfg.p)
         wkeys = tu.per_worker_keys(keys["grad"], n)
 
+        # branch-local message phases (lax.cond branches must return one
+        # pytree structure, and the VR branch's wire payload has none of the
+        # full branch's dense shape): each branch attacks + aggregates with
+        # the SAME keys the engine would have used, so trajectories are
+        # unchanged vs. the engine-side phase.
         def full_branch(_):
-            return stacked_grads(loss_fn, params, anchor, wkeys)
+            loss, grads = stacked_grads(loss_fn, params, anchor, wkeys)
+            return loss, message_phase(cfg, keys["attack"], keys["agg"],
+                                       grads)
 
         def vr_branch(_):
             qkeys = tu.per_worker_keys(
                 keys["q"], n, common=cfg.compressor.common_randomness)
 
-            def one(b, kg, kq):
+            def one(b, kg):
                 ln, gn = jax.value_and_grad(loss_fn)(params, b, kg)
                 _, go = jax.value_and_grad(loss_fn)(old_params, b, kg)
-                delta = tu.tree_sub(gn, go)
-                return ln, tu.compress_tree(cfg.compressor, kq, delta)
+                return ln, tu.tree_sub(gn, go)
 
-            losses, qs = jax.vmap(one)(batch, wkeys, qkeys)
+            losses, deltas = jax.vmap(one)(batch, wkeys)
+            loss = jnp.mean(losses)
+            if wire.wire_supported(cfg, deltas):
+                # candidate = g^k + Q(delta): g^k rides as the SHARED (1, d)
+                # reconstruction base, Q(delta) as the wire payload.
+                wc = wire.pack_candidates(cfg.compressor, qkeys, deltas,
+                                          base=state["g"], base_shared=True)
+                return loss, message_phase(cfg, keys["attack"], keys["agg"],
+                                           wc)
+            qs = jax.vmap(
+                lambda kq, t: tu.compress_tree(cfg.compressor, kq, t)
+            )(qkeys, deltas)
             cand = jax.tree.map(lambda g0, q: g0[None] + q, state["g"], qs)
-            return jnp.mean(losses), cand
+            return loss, message_phase(cfg, keys["attack"], keys["agg"],
+                                       cand)
 
-        loss, cand = lax.cond(c_k, full_branch, vr_branch, operand=None)
-        return RoundOutput(loss=loss, cand=cand,
-                           metrics={"c_k": c_k.astype(jnp.int32)})
+        loss, g_new = lax.cond(c_k, full_branch, vr_branch, operand=None)
+        dims = [int(p.size) for p in jax.tree.leaves(params)]
+        vr_bits = wire.tree_wire_bits(
+            cfg.compressor,
+            jax.tree.map(lambda p: p[None], params))
+        wire_bits = jnp.where(c_k, jnp.float32(32.0 * sum(dims)),
+                              jnp.float32(vr_bits))
+        return RoundOutput(loss=loss, g_new=g_new,
+                           metrics={"c_k": c_k.astype(jnp.int32),
+                                    "wire_bits": wire_bits})
 
     def round_bits(self, cfg, d, full_round=True):
         if full_round:
@@ -252,17 +279,22 @@ class CSGDEstimator(CompressedUploadBits, GradientEstimator):
 
     def round(self, cfg, loss_fn, state, params, old_params, batch, anchor,
               keys):
+        from repro.core import wire
+
         n = cfg.n_workers
         wkeys = tu.per_worker_keys(keys["grad"], n)
         qkeys = tu.per_worker_keys(keys["q"], n,
                                    common=cfg.compressor.common_randomness)
-
-        def one(b, kg, kq):
-            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
-            return ln, tu.compress_tree(cfg.compressor, kq, g)
-
-        losses, cand = jax.vmap(one)(batch, wkeys, qkeys)
-        return RoundOutput(loss=jnp.mean(losses), cand=cand)
+        losses, grads = stacked_grads(loss_fn, params, batch, wkeys)
+        metrics = {"wire_bits": jnp.float32(
+            wire.tree_wire_bits(cfg.compressor, grads))}
+        if wire.wire_supported(cfg, grads):
+            cand = wire.pack_candidates(cfg.compressor, qkeys, grads)
+        else:
+            cand = jax.vmap(
+                lambda kq, g: tu.compress_tree(cfg.compressor, kq, g)
+            )(qkeys, grads)
+        return RoundOutput(loss=losses, cand=cand, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -300,20 +332,30 @@ class DianaEstimator(CompressedUploadBits, GradientEstimator):
         h = state["worker_h"]                              # stacked (n, ...)
         a = state["alpha"]
 
-        def one(b, kg, kq, h_i):
-            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
-            diff = tu.tree_sub(g, h_i)
-            return ln, tu.compress_tree(cfg.compressor, kq, diff)
+        from repro.core import wire
 
-        losses, qdiff = jax.vmap(one)(batch, wkeys, qkeys, h)
+        def one(b, kg, h_i):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            return ln, tu.tree_sub(g, h_i)
+
+        losses, diffs = jax.vmap(one)(batch, wkeys, h)
+        metrics = {"wire_bits": jnp.float32(
+            wire.tree_wire_bits(cfg.compressor, diffs))}
+        if wire.wire_supported(cfg, diffs):
+            cand = wire.pack_candidates(cfg.compressor, qkeys, diffs)
+            qdiff = wire.decoded_payload(cand)   # ≡ vmap(compress_tree)
+        else:
+            cand = qdiff = jax.vmap(
+                lambda kq, t: tu.compress_tree(cfg.compressor, kq, t)
+            )(qkeys, diffs)
         h_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), h)
         h_new = jax.tree.map(lambda hh, q: hh + a * q, h, qdiff)
 
         def finalize(agg_diff):
             return tu.tree_add(h_mean, agg_diff), {"worker_h": h_new}
 
-        return RoundOutput(loss=jnp.mean(losses), cand=qdiff,
-                           finalize=finalize)
+        return RoundOutput(loss=jnp.mean(losses), cand=cand,
+                           finalize=finalize, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -444,18 +486,28 @@ class ByzEF21Estimator(CompressedUploadBits, GradientEstimator):
         qkeys = tu.per_worker_keys(keys["q"], n,
                                    common=cfg.compressor.common_randomness)
 
-        def one(b, kg, kq, g_i):
-            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
-            c = tu.compress_tree(
-                cfg.compressor, kq,
-                jax.tree.map(lambda a, gi: a.astype(jnp.float32) - gi,
-                             g, g_i))
-            return ln, tu.tree_add(g_i, c)
+        from repro.core import wire
 
-        losses, g_new = jax.vmap(one)(anchor, wkeys, qkeys,
-                                      state["worker_g"])
-        return RoundOutput(loss=jnp.mean(losses), cand=g_new,
-                           updates={"worker_g": g_new})
+        def one(b, kg, g_i):
+            ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
+            return ln, jax.tree.map(lambda a, gi: a.astype(jnp.float32) - gi,
+                                    g, g_i)
+
+        losses, diffs = jax.vmap(one)(anchor, wkeys, state["worker_g"])
+        metrics = {"wire_bits": jnp.float32(
+            wire.tree_wire_bits(cfg.compressor, diffs))}
+        if wire.wire_supported(cfg, diffs):
+            cand = wire.pack_candidates(cfg.compressor, qkeys, diffs,
+                                        base=state["worker_g"])
+            c = wire.decoded_payload(cand)
+            g_new = tu.tree_add(state["worker_g"], c)
+        else:
+            c = jax.vmap(
+                lambda kq, t: tu.compress_tree(cfg.compressor, kq, t)
+            )(qkeys, diffs)
+            cand = g_new = tu.tree_add(state["worker_g"], c)
+        return RoundOutput(loss=jnp.mean(losses), cand=cand,
+                           updates={"worker_g": g_new}, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -491,18 +543,30 @@ class CMFilterEstimator(CompressedUploadBits, GradientEstimator):
         qkeys = tu.per_worker_keys(keys["q"], n,
                                    common=cfg.compressor.common_randomness)
 
-        def one(b, kg, kq, m_i, u_i):
+        from repro.core import wire
+
+        def one(b, kg, m_i, u_i):
             ln, g = jax.value_and_grad(loss_fn)(params, b, kg)
             m_new = jax.tree.map(
                 lambda gg, mm: (1 - beta) * gg.astype(jnp.float32)
                 + beta * mm, g, m_i)
-            q = tu.compress_tree(cfg.compressor, kq,
-                                 tu.tree_sub(m_new, u_i))
-            return ln, m_new, tu.tree_add(u_i, q)
+            return ln, m_new, tu.tree_sub(m_new, u_i)
 
-        losses, m_new, u_new = jax.vmap(one)(batch, wkeys, qkeys,
+        losses, m_new, diffs = jax.vmap(one)(batch, wkeys,
                                              state["worker_m"],
                                              state["worker_u"])
+        metrics = {"wire_bits": jnp.float32(
+            wire.tree_wire_bits(cfg.compressor, diffs))}
+        if wire.wire_supported(cfg, diffs):
+            cand = wire.pack_candidates(cfg.compressor, qkeys, diffs,
+                                        base=state["worker_u"])
+            q = wire.decoded_payload(cand)
+            u_new = tu.tree_add(state["worker_u"], q)
+        else:
+            q = jax.vmap(
+                lambda kq, t: tu.compress_tree(cfg.compressor, kq, t)
+            )(qkeys, diffs)
+            cand = u_new = tu.tree_add(state["worker_u"], q)
         g_prev = state["g"]
 
         def finalize(agg):
@@ -511,8 +575,8 @@ class CMFilterEstimator(CompressedUploadBits, GradientEstimator):
                 + eta * gp.astype(jnp.float32), agg, g_prev)
             return g, {"worker_m": m_new, "worker_u": u_new}
 
-        return RoundOutput(loss=jnp.mean(losses), cand=u_new,
-                           finalize=finalize)
+        return RoundOutput(loss=jnp.mean(losses), cand=cand,
+                           finalize=finalize, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------

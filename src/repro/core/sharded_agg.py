@@ -322,3 +322,59 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None):
                            .reshape(leaves[i].shape[1:])
                            .astype(leaves[i].dtype))
     return jax.tree.unflatten(treedef, tree_out)
+
+
+def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None):
+    """Wire twin of ``tree_aggregate_pallas``: the candidates arrive as a
+    ``wire.WireCandidates`` payload and each leaf launches its kernels on a
+    ``quantize.WireSrc`` — reconstruction (decode + base add), attack,
+    bucketing and the rule all happen per (n, TILE_D) block in VMEM, so the
+    dense (n, d) candidate matrix never exists in HBM; the sweep reads the
+    wire bytes instead.
+
+    Differences from the dense path: no tiny-leaf packing (payload layouts
+    don't concatenate; each leaf keeps its own launch) and ``attack_ctx``
+    carries per-leaf FLAT (d_j,) stat lists (``wire.wire_stats``) rather
+    than stat trees. RFA/Krum distances stay global across leaves exactly
+    like the dense path.
+    """
+    agg = cfg.aggregator
+    from repro.core import wire as W
+    from repro.kernels import norm_agg
+    from repro.kernels.robust_agg import robust_agg as coord_kernel
+
+    n = wc.n
+    w_mat = None
+    if agg.bucket_size > 1 and agg.rule != "mean":
+        perm = jax.random.permutation(key, n)
+        w_mat = norm_agg.bucket_matrix(perm, n, agg.bucket_size)
+
+    attack_fn = mask = None
+    means = stds = [None] * len(wc.payloads)
+    if attack_ctx is not None:
+        attack_fn, mask = attack_ctx.fn, attack_ctx.mask
+        if attack_ctx.means is not None:
+            means = list(attack_ctx.means)
+        if attack_ctx.stds is not None:
+            stds = list(attack_ctx.stds)
+
+    srcs = W.wire_srcs(wc)
+    if agg.rule in COORD_KERNEL_RULE:
+        rule = COORD_KERNEL_RULE[agg.rule]
+        outs = [coord_kernel(src, w_mat, mask, mu, sd, rule=rule,
+                             trim=agg.trim, attack_fn=attack_fn)
+                for src, mu, sd in zip(srcs, means, stds)]
+    elif agg.rule == "rfa":
+        outs = norm_agg.rfa_segments(
+            srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
+            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps)
+    elif agg.rule == "krum":
+        outs = norm_agg.krum_segments(
+            srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
+            attack_fn=attack_fn, n_byz=agg.n_byz)
+    else:  # pragma: no cover — RULES is closed
+        raise ValueError(agg.rule)
+
+    tree_out = [out.reshape(shape).astype(dt)
+                for out, shape, dt in zip(outs, wc.shapes, wc.dtypes)]
+    return jax.tree.unflatten(wc.treedef, tree_out)

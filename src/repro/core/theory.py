@@ -116,6 +116,20 @@ def contractive_delta(compressor, d: int) -> Optional[float]:
     return omega / (1.0 + omega)
 
 
+def tree_contractive_delta(compressor, dims) -> Optional[float]:
+    """δ_C of a compressor applied PER LEAF (``tree_utils.compress_tree``'s
+    pinned boundary) to a pytree with leaf sizes ``dims``: the worst leaf,
+    max_l δ_C(d_l) — summing ||C(x_l) - x_l||² ≤ δ_C(d_l) ||x_l||² over
+    leaves bounds the tree error by the largest per-leaf factor, and TopK's
+    per-leaf k = max(int(ratio·d_l), 1) genuinely differs across leaves
+    (a scalar bias leaf has δ_C = 0; a wide weight leaf sets the bound).
+    None if any leaf has no contractive bound."""
+    deltas = [contractive_delta(compressor, int(d)) for d in dims]
+    if any(dl is None for dl in deltas):
+        return None
+    return max(deltas)
+
+
 def ef21_step_size(pc: ProblemConstants, *, delta_c: float,
                    byz_delta: float = 0.0, c: float = 6.0) -> float:
     """Byz-EF21 step size.
@@ -175,10 +189,17 @@ BITS_FAMILY = {
 
 
 def comm_bits_per_round(method: str, compressor, d: int, *,
-                        p: float = 1.0) -> float:
+                        p: float = 1.0, dims=None) -> float:
     """Expected uploaded bits per worker per round, the theory-side twin of
     ``GradientEstimator.expected_bits`` (pinned to it by the conformance
     harness, tests/test_estimator_contract.py).
+
+    ``dims`` (per-leaf flat sizes) switches to the tree-boundary accounting
+    — Σ_l bits_Q(d_l), what ``compress_tree``/``wire.pack_candidates``
+    actually put on the wire, which differs from bits_Q(Σ_l d_l) whenever
+    the per-leaf k/block counts round (``Compressor.tree_bits``). The
+    wire-conformance test pins the pallas path's measured payload to this
+    number. Without ``dims``, the flat-d single-vector accounting is kept.
 
     The original formulas here assumed unbiased compressors (every
     compressed upload costs bits_Q(d), full rounds 32d with probability p);
@@ -190,10 +211,13 @@ def comm_bits_per_round(method: str, compressor, d: int, *,
         raise KeyError(
             f"unknown method {method!r}; known: {sorted(BITS_FAMILY)}")
     family = BITS_FAMILY[method]
+    if dims is not None:
+        d = int(sum(int(x) for x in dims))
     dense = 32.0 * d
     if family == "dense":
         return dense
-    bits_q = float(compressor.bits_per_vector(d))
+    bits_q = (float(compressor.tree_bits(dims)) if dims is not None
+              else float(compressor.bits_per_vector(d)))
     if family == "vr_switch":
         return p * dense + (1.0 - p) * bits_q
     return bits_q                      # compressed | contractive_ef

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.backend import resolve_interpret
+from repro.kernels import quantize
 
 
 DEFAULT_TILE_D = 2048     # (64 workers x 2048 lanes x 4B = 512 KiB in VMEM)
@@ -90,19 +91,36 @@ def _pad_cols(a, dp):
     return a
 
 
-def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
-    """Build (vals, in_specs, names, grid, dp) for the optional-input kernels.
+def src_dims(x):
+    """(n, d) of a kernel input — dense (n, d) array or quantize.WireSrc."""
+    if isinstance(x, quantize.WireSrc):
+        return x.n, x.d
+    return x.shape
 
-    x rides as (n, tile) blocks over a 1-D grid; w_mat (nb, n), mask (n, 1)
-    and the RFA weights are tiny constant blocks revisited every step;
-    mean/std are (1, tile) blocks tiled like x.
+
+def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
+    """Build (vals, in_specs, names, grid, dp, wire) for the optional-input
+    kernels.
+
+    x is either the dense (n, d) stack — riding as (n, tile) blocks over a
+    1-D grid — or a ``quantize.WireSrc`` whose payload arrays ride instead
+    (the dense candidate matrix then never exists in HBM; the kernels
+    reconstruct per block via ``_prologue``). w_mat (nb, n), mask (n, 1) and
+    the RFA weights are tiny constant blocks revisited every step; mean/std
+    are (1, tile) blocks tiled like x.
     """
-    n, d = x.shape
-    tile = _tile_for(d, tile_d)
-    dp = -(-d // tile) * tile
-    vals = [_pad_cols(x, dp)]
-    specs = [pl.BlockSpec((n, tile), lambda i: (0, i))]
-    names = ["x"]
+    n, d = src_dims(x)
+    wire = None
+    if isinstance(x, quantize.WireSrc):
+        tile = quantize.wire_tile(x, tile_d)
+        dp = -(-d // tile) * tile
+        vals, specs, names, wire = quantize.wire_inputs(x, tile, dp)
+    else:
+        tile = _tile_for(d, tile_d)
+        dp = -(-d // tile) * tile
+        vals = [_pad_cols(x, dp)]
+        specs = [pl.BlockSpec((n, tile), lambda i: (0, i))]
+        names = ["x"]
     if w_mat is not None:
         vals.append(w_mat)
         specs.append(pl.BlockSpec(w_mat.shape, lambda i: (0, 0)))
@@ -116,23 +134,33 @@ def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
             vals.append(_pad_cols(stat.reshape(1, d).astype(jnp.float32), dp))
             specs.append(pl.BlockSpec((1, tile), lambda i: (0, i)))
             names.append(nm)
-    return vals, specs, names, (dp // tile,), dp
+    return vals, specs, names, (dp // tile,), dp, wire
 
 
-def _prologue(env, attack_fn):
+def _prologue(env, attack_fn, wire=None):
     """sent = attack(x) on the block in VMEM, then xb = W @ sent (MXU).
+
+    With ``wire`` (a quantize.WireMeta), x is first RECONSTRUCTED on-chip
+    from the payload blocks (``quantize.recon_block``: decode + base add,
+    candidate-dtype faithful) — the corrupt→compress→reconstruct→attack→
+    bucket→aggregate chain then runs in one VMEM residency.
 
     The attacked values round-trip through the candidate dtype before the
     fp32 select, matching ``apply_attack``'s ``.astype(h.dtype)`` exactly —
     a bf16 candidate tree sees the same bf16-quantized malicious vectors
     whether the attack is fused or materialized.
     """
-    raw = env["x"][...]
-    x = raw.astype(jnp.float32)
+    if wire is None:
+        raw = env["x"][...]
+        x = raw.astype(jnp.float32)
+        cand_dtype = raw.dtype
+    else:
+        x = quantize.recon_block(env, wire)
+        cand_dtype = wire.cand_dtype
     if attack_fn is not None and "mask" in env:
         mu = env["mean"][...] if "mean" in env else None
         sd = env["std"][...] if "std" in env else None
-        v = attack_fn(x, mu, sd).astype(raw.dtype).astype(jnp.float32)
+        v = attack_fn(x, mu, sd).astype(cand_dtype).astype(jnp.float32)
         x = jnp.where(env["mask"][...] > 0.0, v, x)
     if "w_mat" in env:
         x = jnp.dot(env["w_mat"][...], x, preferred_element_type=jnp.float32)
@@ -150,15 +178,15 @@ def pair_gram(x, w_mat=None, mask=None, good_mean=None, good_std=None, *,
     """One-HBM-sweep (m, m) Gram matrix of the (attacked, bucketed) worker
     stack; m = nb when ``w_mat`` is given else n. Krum's pairwise squared
     distances are d²[i,j] = G[i,i] + G[j,j] - 2 G[i,j]."""
-    n, d = x.shape
+    n, d = src_dims(x)
     m = w_mat.shape[0] if w_mat is not None else n
-    vals, specs, names, grid, dp = _assemble(x, w_mat, mask, good_mean,
-                                             good_std, tile_d)
+    vals, specs, names, grid, dp, wire = _assemble(x, w_mat, mask, good_mean,
+                                                   good_std, tile_d)
 
     def kernel(*refs):
         env = dict(zip(names, refs[:-1]))
         o_ref = refs[-1]
-        xb = _prologue(env, attack_fn)
+        xb = _prologue(env, attack_fn, wire)
 
         @pl.when(pl.program_id(0) == 0)
         def _():
@@ -183,10 +211,10 @@ def rfa_iter(x, w, w_mat=None, mask=None, good_mean=None, good_std=None, *,
     """One fused smoothed-Weiszfeld pass in ONE sweep of x:
     z = Σ_b w_b · xb_b written tile-wise, and sq_b = ||xb_b - z||² accumulated
     in the revisited (m, 1) output block. Returns (z (d,), sq (m,)) fp32."""
-    n, d = x.shape
+    n, d = src_dims(x)
     m = w_mat.shape[0] if w_mat is not None else n
-    vals, specs, names, grid, dp = _assemble(x, w_mat, mask, good_mean,
-                                             good_std, tile_d)
+    vals, specs, names, grid, dp, wire = _assemble(x, w_mat, mask, good_mean,
+                                                   good_std, tile_d)
     tile = dp // grid[0]
     vals.append(w.reshape(m, 1).astype(jnp.float32))
     specs.append(pl.BlockSpec((m, 1), lambda i: (0, 0)))
@@ -195,7 +223,7 @@ def rfa_iter(x, w, w_mat=None, mask=None, good_mean=None, good_std=None, *,
     def kernel(*refs):
         env = dict(zip(names, refs[:-2]))
         z_ref, sq_ref = refs[-2], refs[-1]
-        xb = _prologue(env, attack_fn)
+        xb = _prologue(env, attack_fn, wire)
         z = jnp.sum(xb * env["w"][...], axis=0, keepdims=True)   # (1, tile)
         z_ref[...] = z
         diff = xb - z
@@ -226,9 +254,9 @@ def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, *,
                  interpret=None):
     """z = Σ_i w_i · sent_i in one sweep. Bucketing rides in the weights
     (w_eff = Wᵀ · w_bucket), so no bucketed matrix is ever formed."""
-    n, d = x.shape
-    vals, specs, names, grid, dp = _assemble(x, None, mask, good_mean,
-                                             good_std, tile_d)
+    n, d = src_dims(x)
+    vals, specs, names, grid, dp, wire = _assemble(x, None, mask, good_mean,
+                                                   good_std, tile_d)
     tile = dp // grid[0]
     vals.append(w.reshape(n, 1).astype(jnp.float32))
     specs.append(pl.BlockSpec((n, 1), lambda i: (0, 0)))
@@ -237,7 +265,7 @@ def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, *,
     def kernel(*refs):
         env = dict(zip(names, refs[:-1]))
         o_ref = refs[-1]
-        sent = _prologue(env, attack_fn)
+        sent = _prologue(env, attack_fn, wire)
         o_ref[...] = jnp.sum(sent * env["w"][...], axis=0, keepdims=True)
 
     out = pl.pallas_call(
@@ -268,7 +296,7 @@ def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     t-th fused pass computes z_t = w_tᵀ·xb AND the distances to z_t; uniform
     w_0 makes z_0 the (bucketed) mean, and the final weighted sum realizes
     z_T. Returns the list of per-segment (d_j,) fp32 aggregates."""
-    n = segs[0].shape[0]
+    n = src_dims(segs[0])[0]
     m = w_mat.shape[0] if w_mat is not None else n
     means = means if means is not None else [None] * len(segs)
     stds = stds if stds is not None else [None] * len(segs)

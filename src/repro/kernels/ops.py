@@ -62,6 +62,29 @@ def krum_agg(x, key=None, *, bucket_size: int = 1, n_byz: int = 1,
                                   interpret=interpret)[0]
 
 
+def wire_agg(src, key=None, *, bucket_size: int = 1, rule: str = "median",
+             trim: int = 1, n_byz: int = 1, iters: int = 8, eps: float = 1e-8,
+             tile_d: int = norm_agg.DEFAULT_TILE_D, interpret=None):
+    """ARAgg over a worker-stacked wire payload (``quantize.WireSrc``): the
+    kernels decode + base-add + bucket + rule per (n, TILE_D) block, so the
+    dense (n, d) candidate matrix never exists in HBM — the sweep reads the
+    wire bytes instead. Any rule; same semantics as the dense wrappers over
+    ``quantize.decode``-reconstructed candidates."""
+    w = None
+    if key is not None and bucket_size > 1:
+        w = _perm_bucket_matrix(key, src.n, bucket_size)
+    if rule in ("mean", "median", "trimmed"):
+        return _robust_agg(src, w, rule=rule, trim=trim, tile_d=tile_d,
+                           interpret=interpret)
+    if rule == "rfa":
+        return norm_agg.rfa_segments([src], w_mat=w, iters=iters, eps=eps,
+                                     tile_d=tile_d, interpret=interpret)[0]
+    if rule == "krum":
+        return norm_agg.krum_segments([src], w_mat=w, n_byz=n_byz,
+                                      tile_d=tile_d, interpret=interpret)[0]
+    raise ValueError(rule)
+
+
 def block_quantize(x, key, *, levels: int = 4, block: int = 256,
                    interpret=None):
     u = jax.random.uniform(key, x.shape)

@@ -1,27 +1,62 @@
-"""Pallas TPU kernel: fused block-wise l2-dithering quantizer (Def. 2.2).
+"""Pallas TPU kernels + wire formats for the one-sweep compressed pipeline.
 
-Worker-side hot spot: compressing the gradient-difference vector each round.
-The jnp reference does 4 HBM sweeps (norm reduce, scale, round, dequantize);
-this kernel performs norm + stochastic-round + dequantize on a VMEM tile in
-one pass. Block-wise norms (per TILE_D block rather than global) are the
-standard TPU-friendly adaptation — still unbiased, and the wire format
-(per-block norm + per-coord level) is exactly what a real sender packs.
+Two layers live here:
 
-The dither noise u ~ U[0,1) is supplied as an input (generated with
-jax.random outside) so the kernel is deterministic and oracle-testable.
+1. ``block_quantize`` — the original fused block-wise l2-dithering quantizer
+   (Def. 2.2): norm + stochastic-round + dequantize on a VMEM tile in one
+   pass, with the dither noise supplied as an input so the kernel is
+   deterministic and oracle-testable.
+
+2. The WIRE layer (DESIGN.md §Wire): per-compressor payload layouts
+   (``pack_*``), their jnp reconstructions (``reconstruct`` — the oracle and
+   the worker-side state-update path), and the per-(n, TILE_D)-block
+   in-kernel reconstruction (``recon_block``) that norm_agg/robust_agg fuse
+   into their VMEM load. A reconstructed candidate is
+   ``cand = base + decode(payload)`` computed per block on-chip: the dense
+   (n, d) candidate matrix never exists in HBM between compress and
+   aggregate. ``topk_select`` performs the TopK |x| pass on-chip (per-tile
+   candidate pools in VMEM + a tiny O(T·c) final select) so even the
+   SELECTION never materializes a dense sorted copy.
+
+Formats (payloads are worker-stacked (n, ...) on the kernel side):
+
+  sparse  — vals (n, k) leaf-dtype + idx (n, k) int32 ascending (randk keeps
+            the d/k unbiasedness scaling in vals; topk values ride raw).
+            In-kernel reconstruction is a windowed one-hot matmul: CSR-style
+            row pointers (``starts``, built once per launch by searchsorted)
+            bound each (worker, tile) segment, and fixed-size value chunks
+            scatter into the tile on the MXU.
+  int8    — levels (n, ceil(d/B)·B) int8 + per-block norms (n, ceil(d/B))
+            f32, B = compressors.INT8_BLOCK; dequantized blockwise in VMEM.
+  sign    — signs (n, d) int8 in {-1, 0, 1} + scale (n, 1) f32.
+  bf16    — vals (n, d) bf16; decode is a cast.
+  dense32 — no payload transform; the dense kernels already ARE the wire
+            (identity compressor). Never routed through this module.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.kernels.backend import resolve_interpret
+from repro.core.compressors import (INT8_BLOCK, INT8_LEVELS, _int8_decode,
+                                    _int8_encode)
 
 
 DEFAULT_TILE_D = 2048
+
+WIRE_FORMATS = ("sparse", "int8", "sign", "bf16", "dense32")
+
+# sparse reconstruction: value chunk width for the windowed one-hot matmul.
+# Lane-aligned; (CHUNK, tile) one-hot = 128·2048·4B = 1 MiB VMEM at the
+# default tile.
+SCATTER_CHUNK = 128
 
 
 def _quant_kernel(x_ref, u_ref, o_ref, *, levels, block):
@@ -60,3 +95,313 @@ def block_quantize(x, u, *, levels: int = 4, block: int = 256,
         interpret=resolve_interpret(interpret),
     )(x, u)
     return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# wire descriptor
+# ---------------------------------------------------------------------------
+
+def _lane_tile(d: int, tile_d: int) -> int:
+    """Lane-aligned tile, shrunk for small d (mirrors norm_agg._tile_for —
+    duplicated locally so norm_agg can import this module cycle-free)."""
+    return min(tile_d, max(128, -(-d // 128) * 128))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSrc:
+    """One worker-stacked wire payload, standing in for the dense (n, d)
+    candidate matrix at an aggregation-kernel call site.
+
+    ``arrays`` is a tuple of (name, (n, ...) array) in a fixed per-format
+    order; ``base`` is the reconstruction base added on-chip — (n, d) for
+    per-worker EF/mirror state (byz_ef21, cmfilter), (1, d) for a shared
+    server estimate (marina's g^k), or None (zero base: csgd, diana).
+    ``cand_dtype`` is the candidate leaf dtype the oracle path would carry —
+    decoded values and attacked values round-trip through it so fused ≡
+    materialized exactly (norm_agg._prologue contract).
+    """
+    fmt: str
+    n: int
+    d: int
+    arrays: tuple
+    base: Optional[object] = None
+    cand_dtype: object = jnp.float32
+
+
+def _wiresrc_flatten(s):
+    names = tuple(nm for nm, _ in s.arrays)
+    return tuple(a for _, a in s.arrays) + (s.base,), (
+        s.fmt, s.n, s.d, names, s.cand_dtype)
+
+
+def _wiresrc_unflatten(aux, children):
+    fmt, n, d, names, cd = aux
+    *arrs, base = children
+    return WireSrc(fmt=fmt, n=n, d=d, arrays=tuple(zip(names, arrs)),
+                   base=base, cand_dtype=cd)
+
+
+jax.tree_util.register_pytree_node(WireSrc, _wiresrc_flatten,
+                                   _wiresrc_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireMeta:
+    """Static per-launch reconstruction plan (hashable: rides in the traced
+    kernel's closure). ``base_rows`` is 0 (no base) / 1 (shared) / n."""
+    fmt: str
+    n: int
+    d: int
+    tile: int
+    kp: int = 0          # sparse: padded wire length per worker
+    base_rows: int = 0
+    cand_dtype: object = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# worker-side packing (jnp; vmapped over workers by core/wire.py)
+# ---------------------------------------------------------------------------
+
+def topk_select(x, k: int, *, tile_d: int = DEFAULT_TILE_D, interpret=None):
+    """Indices of the k largest |x| — ``lax.top_k(|x|, k)[1]`` semantics.
+
+    Multi-tile inputs run the selection on-chip: a Pallas pass keeps each
+    tile's top-c candidates (c = min(k, tile), lane-padded) in VMEM and
+    writes only the (T, c) pool; the final exact top-k runs on the tiny
+    pool. Every global top-k element is inside its own tile's top-c, so the
+    pool provably contains the answer. Cross-tile ties of equal |x| may
+    break differently from the dense sort (by pool rank, not global index).
+    """
+    xf = x.reshape(-1)
+    d = xf.shape[0]
+    tile = _lane_tile(d, tile_d)
+    if d <= 2 * tile:
+        return lax.top_k(jnp.abs(xf.astype(jnp.float32)), k)[1]
+    cp = min(tile, max(128, -(-min(k, tile) // 128) * 128))
+    dp = -(-d // tile) * tile
+    t_count = dp // tile
+    xp = jnp.pad(xf.astype(jnp.float32), (0, dp - d))
+
+    def kern(x_ref, v_ref, i_ref):
+        t = pl.program_id(0)
+        xt = x_ref[...].reshape(-1)
+        gidx = (t * tile
+                + lax.broadcasted_iota(jnp.int32, (1, tile), 1).reshape(-1))
+        a = jnp.where(gidx < d, jnp.abs(xt), -1.0)   # pad below any real |x|
+        av, ai = lax.top_k(a, cp)
+        v_ref[...] = av.reshape(1, cp)
+        i_ref[...] = jnp.take(gidx, ai).reshape(1, cp)
+
+    pv, pi = pl.pallas_call(
+        kern,
+        grid=(t_count,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((1, cp), lambda i: (i, 0)),
+                   pl.BlockSpec((1, cp), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((t_count, cp), jnp.float32),
+                   jax.ShapeDtypeStruct((t_count, cp), jnp.int32)),
+        interpret=resolve_interpret(interpret),
+    )(xp)
+    _, sel = lax.top_k(pv.reshape(-1), k)
+    return jnp.take(pi.reshape(-1), sel)
+
+
+def pack_sparse(key, x, ratio: float, *, topk: bool):
+    """(vals (k,) leaf-dtype, idx (k,) int32 ascending) for one leaf.
+
+    Selection mirrors the jnp Compressor EXACTLY (same RNG call for randk,
+    same |x| ordering for topk), so the fused path reproduces the oracle's
+    coordinates bit-for-bit; only the layout differs.
+    """
+    d = x.size
+    xf = x.reshape(-1)
+    k = max(int(ratio * d), 1)
+    if topk:
+        sel = topk_select(xf, k)
+        idx = jnp.sort(sel).astype(jnp.int32)
+        vals = jnp.take(xf.astype(jnp.float32), idx).astype(x.dtype)
+    else:
+        # rand_k's block selection degenerates to per-coordinate for
+        # d <= _MAX_UNITS; core/wire.py gates the sparse wire on that.
+        sel = jax.random.permutation(key, d)[:k]
+        idx = jnp.sort(sel).astype(jnp.int32)
+        vals = (jnp.take(xf, idx) * (d / k)).astype(x.dtype)
+    return {"vals": vals, "idx": idx}
+
+
+def pack_int8(key, x):
+    """(levels (ceil(d/B)·B,) int8, norms (ceil(d/B),) f32) for one leaf."""
+    levels, norms = _int8_encode(key, x)
+    return {"lev": levels.reshape(-1), "norms": norms}
+
+
+def pack_sign(key, x):
+    xf = x.reshape(-1).astype(jnp.float32)
+    return {"signs": jnp.sign(xf).astype(jnp.int8),
+            "scale": jnp.mean(jnp.abs(xf)).reshape(1)}
+
+
+def pack_bf16(key, x):
+    return {"vals": x.reshape(-1).astype(jnp.bfloat16)}
+
+
+def decode(fmt: str, payload: dict, d: int):
+    """Payload of ONE worker/leaf -> dense (d,) f32 — the jnp reconstruction
+    shared by the oracle-parity tests and the worker-side state updates
+    (DIANA's h, EF21's g_i, cmfilter's u). The in-kernel ``recon_block``
+    must match this exactly, tile by tile."""
+    if fmt == "sparse":
+        out = jnp.zeros((d,), jnp.float32)
+        return out.at[payload["idx"]].set(
+            payload["vals"].astype(jnp.float32), mode="drop")
+    if fmt == "int8":
+        nb = payload["norms"].shape[0]
+        return _int8_decode(payload["lev"].reshape(nb, INT8_BLOCK),
+                            payload["norms"])[:d]
+    if fmt == "sign":
+        return payload["signs"].astype(jnp.float32) * payload["scale"][0]
+    if fmt == "bf16":
+        return payload["vals"].astype(jnp.float32)
+    raise ValueError(fmt)
+
+
+# ---------------------------------------------------------------------------
+# kernel-side assembly + per-block reconstruction
+# ---------------------------------------------------------------------------
+
+def wire_tile(src: WireSrc, tile_d: int) -> int:
+    """Tile for a wire launch; int8 tiles stay a multiple of the norm block
+    so each tile sees whole quantization blocks."""
+    t = _lane_tile(src.d, tile_d)
+    if src.fmt == "int8":
+        t = -(-t // INT8_BLOCK) * INT8_BLOCK
+    return t
+
+
+def _pad_to(a, width, fill=0):
+    pad = width - a.shape[-1]
+    if pad:
+        a = jnp.pad(a, ((0, 0),) * (a.ndim - 1) + ((0, pad),),
+                    constant_values=fill)
+    return a
+
+
+def wire_inputs(src: WireSrc, tile: int, dp: int):
+    """Build (vals, specs, names, meta) for the aggregation kernels.
+
+    Dense-ish payloads (int8 / sign / bf16 / base) ride as (n, tile) blocks
+    like x would; the sparse wire rides WHOLE as constant revisited VMEM
+    blocks (vals/idx/starts), with CSR row pointers built here once by
+    searchsorted. Column pads use value 0 (decode-neutral) and index
+    sentinel dp (matches no tile).
+    """
+    n, d = src.n, src.d
+    arr = dict(src.arrays)
+    vals, specs, names = [], [], []
+
+    def add(name, a, spec):
+        vals.append(a)
+        specs.append(spec)
+        names.append(name)
+
+    kp = 0
+    if src.fmt == "sparse":
+        v, ix = arr["vals"], arr["idx"]
+        kp = max(SCATTER_CHUNK, -(-v.shape[1] // 128) * 128)
+        v = _pad_to(v, kp)
+        ix = _pad_to(ix, kp, fill=dp)          # sentinel: outside every tile
+        t_count = dp // tile
+        bounds = jnp.arange(t_count + 1, dtype=jnp.int32) * tile
+        starts = jax.vmap(
+            lambda row: jnp.searchsorted(row, bounds).astype(jnp.int32))(ix)
+        sp = -(-(t_count + 1) // 128) * 128
+        starts = _pad_to(starts, sp)
+        add("w_vals", v, pl.BlockSpec((n, kp), lambda i: (0, 0)))
+        add("w_idx", ix, pl.BlockSpec((n, kp), lambda i: (0, 0)))
+        add("w_starts", starts, pl.BlockSpec((n, sp), lambda i: (0, 0)))
+    elif src.fmt == "int8":
+        nb_t = tile // INT8_BLOCK
+        lev = _pad_to(arr["lev"], dp)
+        norms = _pad_to(arr["norms"], dp // INT8_BLOCK)
+        add("w_lev", lev, pl.BlockSpec((n, tile), lambda i: (0, i)))
+        add("w_norms", norms, pl.BlockSpec((n, nb_t), lambda i: (0, i)))
+    elif src.fmt == "sign":
+        add("w_signs", _pad_to(arr["signs"], dp),
+            pl.BlockSpec((n, tile), lambda i: (0, i)))
+        add("w_scale", arr["scale"].reshape(n, 1),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)))
+    elif src.fmt == "bf16":
+        add("w_bf", _pad_to(arr["vals"], dp),
+            pl.BlockSpec((n, tile), lambda i: (0, i)))
+    else:  # pragma: no cover — dense32 never builds a WireSrc
+        raise ValueError(src.fmt)
+
+    base_rows = 0
+    if src.base is not None:
+        base_rows = src.base.shape[0]
+        add("w_base", _pad_to(src.base, dp),
+            pl.BlockSpec((base_rows, tile), lambda i: (0, i)))
+
+    meta = WireMeta(fmt=src.fmt, n=n, d=d, tile=tile, kp=kp,
+                    base_rows=base_rows, cand_dtype=src.cand_dtype)
+    return vals, specs, names, meta
+
+
+def _recon_sparse_block(env, meta: WireMeta):
+    """(n, tile) f32 payload values of the current tile, decoded from the
+    CSR-windowed wire — a chunked one-hot matmul per worker, bounded by the
+    row pointers so total work is O(n·k·tile/d + chunk·tile) per tile."""
+    n, tile, kp = meta.n, meta.tile, meta.kp
+    t = pl.program_id(0)
+    lo = t * tile
+    vref, iref = env["w_vals"], env["w_idx"]
+    starts = env["w_starts"][...]
+    cols = lax.broadcasted_iota(jnp.int32, (SCATTER_CHUNK, tile), 1)
+    rows = []
+    for i in range(n):
+        s = starts[i, t]
+        e = starts[i, t + 1]
+        n_chunks = (e - s + SCATTER_CHUNK - 1) // SCATTER_CHUNK
+
+        def body(c, acc, i=i, s=s, e=e):
+            p0 = s + c * SCATTER_CHUNK
+            w0 = jnp.minimum(p0, kp - SCATTER_CHUNK)   # clamped window start
+            v = vref[pl.ds(i, 1), pl.ds(w0, SCATTER_CHUNK)]
+            ix = iref[pl.ds(i, 1), pl.ds(w0, SCATTER_CHUNK)]
+            pos = w0 + lax.broadcasted_iota(jnp.int32, (1, SCATTER_CHUNK), 1)
+            live = ((pos >= p0) & (pos < e)           # this chunk's segment
+                    & (ix >= lo) & (ix < lo + tile))  # sentinel guard
+            vm = jnp.where(live, v.astype(jnp.float32), 0.0)
+            oh = jnp.where(ix.reshape(-1)[:, None] - lo == cols, 1.0, 0.0)
+            return acc + jnp.dot(vm, oh, preferred_element_type=jnp.float32)
+
+        rows.append(lax.fori_loop(0, n_chunks, body,
+                                  jnp.zeros((1, tile), jnp.float32)))
+    return jnp.concatenate(rows, axis=0)
+
+
+def recon_block(env, meta: WireMeta):
+    """The fused VMEM load: decode this tile's payload, round-trip through
+    the candidate dtype (mirroring Compressor.compress's trailing astype),
+    add the base, and round-trip the SUM like the oracle's leaf-dtype add.
+    Returns the (n, tile) f32 candidate block."""
+    if meta.fmt == "sparse":
+        q = _recon_sparse_block(env, meta)
+    elif meta.fmt == "int8":
+        lev = env["w_lev"][...].astype(jnp.float32)       # (n, tile)
+        norms = env["w_norms"][...]                        # (n, tile/B)
+        nb = norms.shape[1]
+        scale = jnp.broadcast_to(norms[:, :, None],
+                                 (meta.n, nb, INT8_BLOCK))
+        q = scale.reshape(meta.n, -1) * lev / INT8_LEVELS
+    elif meta.fmt == "sign":
+        q = env["w_signs"][...].astype(jnp.float32) * env["w_scale"][...]
+    elif meta.fmt == "bf16":
+        q = env["w_bf"][...].astype(jnp.float32)
+    else:  # pragma: no cover
+        raise ValueError(meta.fmt)
+    q = q.astype(meta.cand_dtype).astype(jnp.float32)
+    if meta.base_rows:
+        x = q + env["w_base"][...].astype(jnp.float32)
+        return x.astype(meta.cand_dtype).astype(jnp.float32)
+    return q

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.backend import resolve_interpret
-from repro.kernels.norm_agg import _assemble, _prologue
+from repro.kernels.norm_agg import _assemble, _prologue, src_dims
 
 
 DEFAULT_TILE_D = 2048     # (64 workers x 2048 lanes x 4B = 512 KiB in VMEM)
@@ -70,7 +70,8 @@ def robust_agg(x, bucket_matrix=None, mask=None, good_mean=None,
                good_std=None, *, bucket_size: int = 1, rule: str = "median",
                trim: int = 1, tile_d: int = DEFAULT_TILE_D, interpret=None,
                attack_fn=None):
-    """x: (n, d) -> (d,) aggregate, one HBM sweep.
+    """x: (n, d) dense stack OR a ``quantize.WireSrc`` payload -> (d,)
+    aggregate, one HBM sweep (of the wire bytes, when compressed).
 
     Either ``bucket_matrix`` ((nb, n), from ``norm_agg.bucket_matrix`` —
     carries the random permutation + Alg. 2 bucket means on-chip) or the
@@ -78,16 +79,17 @@ def robust_agg(x, bucket_matrix=None, mask=None, good_mean=None,
     ``good_mean``/``good_std`` inject the omniscient attack in-kernel.
     ``interpret=None`` resolves per backend (kernels/backend.py).
     """
-    n, d = x.shape
-    vals, specs, names, grid, dp = _assemble(x, bucket_matrix, mask,
-                                             good_mean, good_std, tile_d)
+    n, d = src_dims(x)
+    vals, specs, names, grid, dp, wire = _assemble(x, bucket_matrix, mask,
+                                                   good_mean, good_std,
+                                                   tile_d)
     tile = dp // grid[0]
     contiguous = bucket_size if bucket_matrix is None else 1
 
     def kernel(*refs):
         env = dict(zip(names, refs[:-1]))
         o_ref = refs[-1]
-        xb = _prologue(env, attack_fn)          # attacked (+W-bucketed)
+        xb = _prologue(env, attack_fn, wire)    # attacked (+W-bucketed)
         o_ref[...] = _coord_rule_block(xb, bucket_size=contiguous, rule=rule,
                                        trim=trim, n=n)
 

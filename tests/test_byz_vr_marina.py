@@ -79,7 +79,7 @@ def test_state_structure_and_step_counter(data):
     assert int(state["step"]) == 0
     state, metrics = step(state, anchor, anchor, KEY)
     assert int(state["step"]) == 1
-    assert set(metrics) == {"loss", "c_k", "g_norm"}
+    assert set(metrics) == {"loss", "c_k", "g_norm", "wire_bits"}
     assert jnp.isfinite(metrics["loss"])
 
 

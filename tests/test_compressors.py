@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressors import (identity, l2_dithering,
-                                    natural_compression, rand_k,
-                                    sign_compressor, top_k)
+from repro.core.compressors import (INT8_LEVELS, _int8_decode, _int8_encode,
+                                    bf16_cast, identity, int8_quantization,
+                                    l2_dithering, natural_compression,
+                                    rand_k, sign_compressor, top_k)
 
 KEY = jax.random.PRNGKey(7)
 
@@ -143,3 +144,71 @@ def test_huge_leaf_block_selection():
     assert abs(float(q.mean()) - 1.0) < 0.01
     frac = float((q != 0).mean())
     assert abs(frac - 0.5) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# kernel-native quantized wires (int8 / bf16) + the wire-format contract
+# ---------------------------------------------------------------------------
+
+def test_int8_unbiased_and_bounded():
+    """Blockwise l2-dithering: unbiased, with per-block variance inside the
+    QSGD omega bound; levels fit signed int8 exactly."""
+    comp = int8_quantization()
+    x = jax.random.normal(KEY, (600,))       # 3 blocks, last one partial
+    m = _empirical_mean(comp, x)
+    assert float(jnp.max(jnp.abs(m - x))) < 0.05 * float(
+        jnp.max(jnp.abs(x))) + 0.02
+    omega = comp.omega(600)
+    errs = [float(jnp.sum((comp.compress(jax.random.fold_in(KEY, i), x)
+                           - x) ** 2)) for i in range(200)]
+    assert np.mean(errs) <= omega * float(jnp.sum(x * x)) * 1.2
+    levels, norms = _int8_encode(KEY, x)
+    assert levels.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(levels.astype(jnp.int32)))) <= INT8_LEVELS
+
+
+def test_int8_roundtrip_matches_shared_encoder():
+    """compress ≡ decode(encode(·)) for the encoder the wire packer shares —
+    the fused kernels reconstruct bit-identical candidates."""
+    comp = int8_quantization()
+    x = jax.random.normal(KEY, (300,))
+    want = _int8_decode(*_int8_encode(KEY, x))[:300]
+    np.testing.assert_array_equal(np.asarray(comp.compress(KEY, x)),
+                                  np.asarray(want))
+
+
+def test_bf16_cast_contractive():
+    comp = bf16_cast()
+    x = jax.random.normal(KEY, (512,))
+    q = comp.compress(KEY, x)
+    err = float(jnp.sum((q - x) ** 2))
+    assert err <= comp.contractive_delta(512) * float(jnp.sum(x * x)) + 1e-9
+    # bf16 input passes through exactly
+    xb = x.astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(comp.compress(KEY, xb), np.float32),
+                                  np.asarray(xb, np.float32))
+
+
+def test_quantized_bits_accounting():
+    assert sign_compressor().bits_per_vector(1000) == 1000 + 32
+    assert int8_quantization().bits_per_vector(1000) == 8 * 1000 + 32 * 4
+    assert bf16_cast().bits_per_vector(1000) == 16 * 1000
+
+
+def test_registry_wire_format_fail_closed():
+    """Every registered compressor must either declare a kernel wire format
+    (and it must be one kernels/quantize.py implements) or be explicitly
+    fallback-only — never silently neither (CI fail-closed gate: a new
+    compressor without a routing decision breaks here, not in a fleet)."""
+    from repro.core.compressors import REGISTRY
+    from repro.kernels import quantize
+    for name, maker in REGISTRY.items():
+        comp = maker()
+        declared = comp.wire_format is not None
+        assert declared or comp.fallback_only, (
+            f"{name}: declare wire_format or set fallback_only=True")
+        if declared:
+            assert not comp.fallback_only, (
+                f"{name}: wire_format and fallback_only are exclusive")
+            assert comp.wire_format in quantize.WIRE_FORMATS, (
+                f"{name}: unknown wire format {comp.wire_format!r}")

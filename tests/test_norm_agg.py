@@ -191,23 +191,7 @@ def test_pack_rows_reuses_donated_buffer():
 # zero-copy guarantee: jaxpr scan of the fused message phase
 # ---------------------------------------------------------------------------
 
-_JAXPR_TYPES = (jax.core.Jaxpr, jax.core.ClosedJaxpr)
-
-
-def _iter_eqns(jaxpr):
-    """All eqns reachable from ``jaxpr``, NOT descending into pallas_call
-    (in-VMEM ops inside the kernel are the whole point)."""
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            continue
-        yield eqn
-        for v in eqn.params.values():
-            for sub in jax.tree.leaves(
-                    v, is_leaf=lambda x: isinstance(x, _JAXPR_TYPES)):
-                if isinstance(sub, jax.core.ClosedJaxpr):
-                    yield from _iter_eqns(sub.jaxpr)
-                elif isinstance(sub, jax.core.Jaxpr):
-                    yield from _iter_eqns(sub)
+from _jaxpr_scan import iter_eqns as _iter_eqns  # noqa: E402
 
 
 @pytest.mark.parametrize("rule", ["cm", "rfa", "krum"])

@@ -1,0 +1,286 @@
+"""core/wire + the fused compressed-wire message phase vs the jnp oracle.
+
+Coverage pinned by ISSUE 6:
+  * ``decoded_payload`` ≡ ``vmap(compress_tree)`` bit-for-bit (the RNG /
+    support contract every wire estimator leans on)
+  * fused wire phase ≡ Compressor-oracle dense path, across rules ×
+    {randk, topk, sign, int8} × bf16 leaves × non-tile-multiple d, with
+    and without EF-style reconstruction bases
+  * the fused phase emits NO (n, d)-sized gather / scatter / concatenate /
+    select_n / dynamic_update_slice between compress and aggregate (jaxpr
+    scan, tests/_jaxpr_scan.py) — the one-sweep roofline contract
+  * ``wire_supported`` routing (fallback-only / dense32 / huge-sparse
+    leaves bail to the jnp path) and the measured-bits static twin
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _jaxpr_scan import iter_eqns
+from repro.core import ByzVRMarinaConfig, get_aggregator, get_attack, wire
+from repro.core import tree_utils as tu
+from repro.core.compressors import (_MAX_UNITS, get_compressor,
+                                    l2_dithering)
+from repro.core.engine import apply_attack
+
+KEY = jax.random.PRNGKey(42)
+
+WIRE_COMPS = {
+    "randk": lambda: get_compressor("randk", ratio=0.25),
+    "topk": lambda: get_compressor("topk", ratio=0.25),
+    "sign": lambda: get_compressor("sign"),
+    "int8": lambda: get_compressor("int8"),
+    "bf16": lambda: get_compressor("bf16"),
+}
+
+
+def _tree(key, n, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims))
+    return {f"p{i}": jax.random.normal(k, (n,) + d).astype(dtype)
+            for i, (k, d) in enumerate(zip(ks, dims))}
+
+
+def _cfg(rule, comp, *, bucket=2, attack="ALIE", n=8, n_byz=2,
+         mode="pallas"):
+    return ByzVRMarinaConfig(
+        n_workers=n, n_byz=n_byz,
+        aggregator=get_aggregator(rule, bucket_size=bucket, n_byz=n_byz),
+        attack=get_attack(attack), compressor=comp, agg_mode=mode)
+
+
+def _qkeys(n):
+    return jax.vmap(lambda i: jax.random.fold_in(KEY, 1000 + i))(
+        jnp.arange(n))
+
+
+def _oracle_cand(comp, qkeys, stacked, base=None):
+    """The dense candidates the jnp Compressor path would hand the engine:
+    per-worker compress_tree, plus the estimator's leaf-dtype base add."""
+    qs = jax.vmap(lambda kq, g: tu.compress_tree(comp, kq, g))(qkeys, stacked)
+    if base is None:
+        return qs
+    return jax.tree.map(lambda b, q: b + q, base, qs)
+
+
+# ---------------------------------------------------------------------------
+# decoded_payload: the RNG / support contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(WIRE_COMPS))
+def test_decoded_payload_matches_compress_tree(name):
+    """pack → decode reproduces vmap(compress_tree) EXACTLY: same fold_in
+    key schedule, same supports / dither draws / scales, same dtypes."""
+    comp = WIRE_COMPS[name]()
+    n = 6
+    stacked = _tree(KEY, n, [(300,), (7, 11)])
+    qkeys = _qkeys(n)
+    wc = wire.pack_candidates(comp, qkeys, stacked)
+    got = wire.decoded_payload(wc)
+    want = jax.vmap(lambda kq, g: tu.compress_tree(comp, kq, g))(
+        qkeys, stacked)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fused wire phase ≡ the dense Compressor-oracle path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["randk", "topk", "sign", "int8"])
+@pytest.mark.parametrize("rule", ["mean", "cm", "tm", "rfa", "krum"])
+def test_wire_phase_matches_oracle(rule, name):
+    """wire_message_phase under pallas ≡ apply_attack + Aggregator.tree on
+    the materialized compress_tree candidates — non-tile-multiple d
+    (3000 > TILE, 300 < TILE), omniscient ALIE, bucketing."""
+    comp = WIRE_COMPS[name]()
+    cfg = _cfg(rule, comp)
+    n = cfg.n_workers
+    stacked = _tree(KEY, n, [(3000,), (300,)])
+    qkeys = _qkeys(n)
+    k_attack, k_agg = jax.random.split(KEY)
+    wc = wire.pack_candidates(comp, qkeys, stacked)
+    got = wire.wire_message_phase(cfg, k_attack, k_agg, wc)
+    sent = apply_attack(cfg, k_attack, _oracle_cand(comp, qkeys, stacked))
+    want = cfg.aggregator.tree(k_agg, sent)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5), got, want)
+
+
+@pytest.mark.parametrize("shared", [False, True], ids=["base_n", "base_1"])
+@pytest.mark.parametrize("name", ["randk", "topk"])
+def test_wire_phase_with_base_matches_oracle(name, shared):
+    """EF/VR-style payloads: candidate = base + decode(payload). base_n is
+    the per-worker EF21/cmfilter state, base_1 the MARINA server-shared
+    g^{k} broadcast."""
+    comp = WIRE_COMPS[name]()
+    cfg = _cfg("cm", comp)
+    n = cfg.n_workers
+    stacked = _tree(KEY, n, [(1500,), (300,)])
+    rows = 1 if shared else n
+    base = _tree(jax.random.fold_in(KEY, 9), rows, [(1500,), (300,)])
+    base_arg = (jax.tree.map(lambda b: b[0], base) if shared else base)
+    qkeys = _qkeys(n)
+    k_attack, k_agg = jax.random.split(KEY)
+    wc = wire.pack_candidates(comp, qkeys, stacked, base=base_arg,
+                              base_shared=shared)
+    got = wire.wire_message_phase(cfg, k_attack, k_agg, wc)
+    dense_base = jax.tree.map(lambda b: jnp.broadcast_to(b, (n,) + b.shape[1:]),
+                              base)
+    sent = apply_attack(cfg, k_attack,
+                        _oracle_cand(comp, qkeys, stacked, base=dense_base))
+    want = cfg.aggregator.tree(k_agg, sent)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5), got, want)
+
+
+@pytest.mark.parametrize("name", ["randk", "topk", "sign", "int8"])
+def test_wire_phase_bf16_leaves(name):
+    """bf16 candidate leaves: the kernel reconstruction round-trips through
+    the candidate dtype exactly like the jnp path's leaf arithmetic (bf16
+    attack rounding bounded by bf16 eps — same tolerance as the dense
+    bf16 parity test)."""
+    comp = WIRE_COMPS[name]()
+    cfg = _cfg("cm", comp)
+    n = cfg.n_workers
+    stacked = _tree(KEY, n, [(1500,), (300,)], dtype=jnp.bfloat16)
+    qkeys = _qkeys(n)
+    k_attack, k_agg = jax.random.split(KEY)
+    wc = wire.pack_candidates(comp, qkeys, stacked)
+    got = wire.wire_message_phase(cfg, k_attack, k_agg, wc)
+    sent = apply_attack(cfg, k_attack, _oracle_cand(comp, qkeys, stacked))
+    want = cfg.aggregator.tree(k_agg, sent)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=4e-2)
+
+
+@pytest.mark.parametrize("attack", ["NA", "BF", "IPM", "RN"])
+def test_wire_phase_attack_routing(attack):
+    """Every attack family routes correctly: clean/LF skip stats, coord
+    attacks fuse, RN reconstructs densely — all ≡ the oracle."""
+    comp = WIRE_COMPS["randk"]()
+    cfg = _cfg("rfa", comp, attack=attack)
+    n = cfg.n_workers
+    stacked = _tree(KEY, n, [(1500,)])
+    qkeys = _qkeys(n)
+    k_attack, k_agg = jax.random.split(KEY)
+    wc = wire.pack_candidates(comp, qkeys, stacked)
+    got = wire.wire_message_phase(cfg, k_attack, k_agg, wc)
+    sent = apply_attack(cfg, k_attack, _oracle_cand(comp, qkeys, stacked))
+    want = cfg.aggregator.tree(k_agg, sent)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5), got, want)
+
+
+# ---------------------------------------------------------------------------
+# one-sweep guarantee: jaxpr scan of the fused wire phase
+# ---------------------------------------------------------------------------
+
+_BANNED = ("concatenate", "select_n", "gather", "scatter", "scatter-add",
+           "scatter_add", "dynamic_update_slice")
+
+
+@pytest.mark.parametrize("name", ["randk", "topk", "sign", "int8"])
+def test_wire_phase_is_one_sweep(name):
+    """Between compress and aggregate the pallas wire phase must never
+    materialize the (n, d) candidates: no gather/scatter/concatenate/
+    select_n/dynamic_update_slice with an (n, d)-sized output appears in
+    the host-side jaxpr (kernel-internal VMEM ops excluded). (n, k)
+    gathers and flat (d,) scatter-adds — the sparse attack-stats path —
+    stay legal."""
+    comp = WIRE_COMPS[name]()
+    n, d_large = 8, 4096
+    cfg = _cfg("cm", comp, n=n)
+    stacked = _tree(KEY, n, [(d_large,), (64, 48)])
+    qkeys = _qkeys(n)
+    k1, k2 = jax.random.split(KEY)
+    wc = wire.pack_candidates(comp, qkeys, stacked)
+    jaxpr = jax.make_jaxpr(
+        lambda c: wire.wire_message_phase(cfg, k1, k2, c))(wc).jaxpr
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name not in _BANNED:
+            continue
+        for out in eqn.outvars:
+            shape = getattr(out.aval, "shape", ())
+            assert int(np.prod(shape)) < n * d_large, (
+                f"{eqn.primitive.name} materializes {shape} on the host")
+
+
+def test_wire_phase_rn_fallback_does_materialize():
+    """Scanner sanity: the RN fallback (exact jax.random stream on the
+    materialized tensor) DOES scatter the (n, d) reconstruction."""
+    comp = WIRE_COMPS["randk"]()
+    n, d = 8, 4096
+    cfg = _cfg("cm", comp, attack="RN", n=n)
+    stacked = _tree(KEY, n, [(d,)])
+    wc = wire.pack_candidates(comp, _qkeys(n), stacked)
+    k1, k2 = jax.random.split(KEY)
+    jaxpr = jax.make_jaxpr(
+        lambda c: wire.wire_message_phase(cfg, k1, k2, c))(wc).jaxpr
+    assert any(
+        eqn.primitive.name in _BANNED
+        and any(int(np.prod(getattr(o.aval, "shape", ()))) >= n * d
+                for o in eqn.outvars)
+        for eqn in iter_eqns(jaxpr))
+
+
+# ---------------------------------------------------------------------------
+# routing + accounting
+# ---------------------------------------------------------------------------
+
+def test_wire_supported_routing():
+    small = jax.ShapeDtypeStruct((4, 1000), jnp.float32)
+    huge = jax.ShapeDtypeStruct((4, _MAX_UNITS + 1), jnp.float32)
+    randk = WIRE_COMPS["randk"]()
+    assert wire.wire_supported(_cfg("cm", randk), [small])
+    # sparse formats bail out of the kernel wire on block-selected leaves
+    assert not wire.wire_supported(_cfg("cm", randk), [small, huge])
+    # ...but dense wire formats don't care about leaf size
+    assert wire.wire_supported(_cfg("cm", WIRE_COMPS["int8"]()),
+                               [small, huge])
+    # fallback-only / dense32 / non-pallas all take the jnp path
+    assert not wire.wire_supported(_cfg("cm", l2_dithering(4)))
+    assert not wire.wire_supported(_cfg("cm", get_compressor("identity")))
+    assert not wire.wire_supported(_cfg("cm", randk, mode="gspmd"))
+
+
+@pytest.mark.parametrize("name", sorted(WIRE_COMPS))
+def test_measured_bits_matches_static_twin(name):
+    """measured_bits (off the packed arrays) == tree_wire_bits (off static
+    shapes): the dense path's wire_bits metric equals what the pallas path
+    actually ships."""
+    comp = WIRE_COMPS[name]()
+    stacked = _tree(KEY, 4, [(300,), (7, 11)])
+    wc = wire.pack_candidates(comp, _qkeys(4), stacked)
+    assert wire.measured_bits(wc) == wire.tree_wire_bits(comp, stacked)
+
+
+@pytest.mark.parametrize("base_mode", ["none", "base_n", "base_1"])
+@pytest.mark.parametrize("name", ["randk", "sign", "int8"])
+def test_wire_stats_matches_masked_mean_std(name, base_mode):
+    """Attack stats computed FROM the wire ≡ tree_utils.masked_mean_std on
+    the reconstructed dense candidates (incl. the sparse cross-term
+    expansion with per-worker and shared bases)."""
+    comp = WIRE_COMPS[name]()
+    n = 6
+    stacked = _tree(KEY, n, [(500,)])
+    base = None
+    if base_mode != "none":
+        rows = n if base_mode == "base_n" else 1
+        b = _tree(jax.random.fold_in(KEY, 5), rows, [(500,)])
+        base = jax.tree.map(lambda x: x[0], b) if rows == 1 else b
+    wc = wire.pack_candidates(comp, _qkeys(n), stacked, base=base,
+                              base_shared=base_mode == "base_1")
+    mask = jnp.arange(n) < 2            # 2 byzantine, stats over the rest
+    means, stds = wire.wire_stats(wc, ~mask)
+    m_tree, s_tree = tu.masked_mean_std(wire.reconstruct(wc), ~mask)
+    np.testing.assert_allclose(np.asarray(means[0]),
+                               np.asarray(jax.tree.leaves(m_tree)[0]),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(stds[0]),
+                               np.asarray(jax.tree.leaves(s_tree)[0]),
+                               atol=1e-4, rtol=1e-4)
