@@ -1,0 +1,93 @@
+"""Streaming-service benchmark: updates/sec and round-latency percentiles
+for the buffered-async aggregation service (repro.serve, DESIGN.md §4).
+
+For every {backend} x {rule} x {buffer size K} cell the service runs the
+same seeded exp-arrival chaos-free stream over a moderate-dimension logreg
+task, twice:
+
+  * latency mode   — ``sync_each_fire=True`` blocks on every fired round;
+                     p50/p99 of the per-fire wall latency.
+  * throughput mode — free-running: ingestion (row writes into the open
+                     buffer half) overlaps the still-executing aggregation
+                     of the closed half, measuring the double buffer's
+                     pipelining; accepted updates / wall second.
+
+Grid (ISSUE 7 acceptance): {gspmd, pallas} x {mean, krum} x K in {64, 256}
+-> ``experiments/bench/BENCH_serve.json`` (uploaded by the CI bench job).
+The ``overlap`` derived column is throughput_free / throughput_synced —
+how much round-blocking was hiding.
+"""
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import ART_DIR, emit
+from repro.api import ServeSpec
+
+BACKENDS = ("gspmd", "pallas")
+RULES = ("mean", "krum")
+BUFFER_SIZES = (64, 256)
+N_CLIENTS = 512
+DIM = 1024
+N_SAMPLES = 128     # anchor set is replicated per client (homogeneous)
+ROUNDS = 12
+
+
+def _spec(mode: str, rule: str, k: int) -> ServeSpec:
+    return ServeSpec(
+        task="logreg", method="sgd", n_clients=N_CLIENTS,
+        n_byz=N_CLIENTS // 32, attack="ALIE", aggregator=rule,
+        bucket_size=2 if rule != "mean" else 0, agg_mode=mode,
+        buffer_size=k, rounds=ROUNDS, lr=0.1, arrival="exp",
+        arrival_kwargs={"mean_latency": 1.0},
+        data_kwargs={"dim": DIM, "n_samples": N_SAMPLES,
+                     "batch_size": 8})
+
+
+def run():
+    payload = {"n_clients": N_CLIENTS, "dim": DIM, "rounds": ROUNDS,
+               "cells": []}
+    for mode in BACKENDS:
+        for rule in RULES:
+            for k in BUFFER_SIZES:
+                spec = _spec(mode, rule, k)
+                name = f"serve/{mode}/{rule}/K{k}"
+                try:
+                    # warm the jit caches off the clock, then measure
+                    spec.replace(rounds=2).build().run()
+                    lat = spec.build().run(sync_each_fire=True)
+                    thr = spec.build().run()
+                except Exception as e:  # noqa: BLE001 — report, keep grid
+                    emit(name, 0.0, f"FAILED {type(e).__name__}: {e}")
+                    continue
+                pct = lat.latency_percentiles()
+                synced_ups = lat.updates_per_s
+                overlap = thr.updates_per_s / max(synced_ups, 1e-9)
+                cell = {
+                    "agg_mode": mode, "rule": rule, "buffer_size": k,
+                    "updates_per_s": round(thr.updates_per_s, 1),
+                    "updates_per_s_synced": round(synced_ups, 1),
+                    "overlap_gain": round(overlap, 3),
+                    "p50_ms": round(pct["p50_ms"], 3),
+                    "p99_ms": round(pct["p99_ms"], 3),
+                    "rounds": thr.stats["rounds"],
+                    "accepted": thr.stats["accepted"],
+                    "mean_staleness": round(float(np.mean(
+                        [m["staleness_mean"] for m in thr.history])), 3),
+                    "spec": spec.to_dict(),
+                }
+                payload["cells"].append(cell)
+                emit(name,
+                     pct["p50_ms"] * 1e3,   # us per fired round (p50)
+                     f"{cell['updates_per_s']}ups "
+                     f"p99={cell['p99_ms']}ms "
+                     f"overlap={cell['overlap_gain']}x")
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "BENCH_serve.json"), "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

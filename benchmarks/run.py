@@ -12,6 +12,10 @@
             experiments/bench/BENCH_compress.json (CI bench job)
   roofline  §Roofline terms from the dry-run artifacts
   sweep     (system) sweep engine: serial vs vmapped-batched grid execution
+  serve     (system) buffered-async aggregation service: updates/sec +
+            p50/p99 round latency, {gspmd, pallas} x {mean, krum} x
+            buffer {64, 256} -> experiments/bench/BENCH_serve.json
+            (CI bench job)
 
 Prints ``name,us_per_call,derived`` CSV. Select a subset with argv, e.g.
 ``python -m benchmarks.run fig1 roofline``.
@@ -23,14 +27,15 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_ablations, bench_aggregators,
                             bench_compressors, bench_fig1, bench_fig8,
-                            bench_roofline, bench_sweep, bench_table2,
-                            bench_trainer)
+                            bench_roofline, bench_serve, bench_sweep,
+                            bench_table2, bench_trainer)
     suites = {
         "ablate": bench_ablations.run,
         "sweep": bench_sweep.run,
         "trainer": bench_trainer.run,
         "agg": bench_aggregators.run,
         "compress": bench_compressors.run,
+        "serve": bench_serve.run,
         "fig1": bench_fig1.run,
         "table2": bench_table2.run,
         "fig8": bench_fig8.run,

@@ -1,43 +1,57 @@
-"""Serving example: batched autoregressive decoding with per-family caches
-(KV ring buffer / MLA latent / SSM state). Serves a batch of requests of
-different prompt lengths through one shared cache, reduced config on CPU.
+"""Serving example: buffered-asynchronous Byzantine-robust LM training
+through the streaming-aggregation service (repro.serve, DESIGN.md §4).
 
-  PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+Clients compute LM gradient updates against a registered arch config and
+dispatch them over a seeded arrival process with stragglers and dropouts;
+the service dedups, staleness-weights and robustly aggregates every
+``--buffer-size`` of them. Everything is declared through a
+registry-validated ``ServeSpec``, so the printed spec JSON alone
+reproduces the run.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-1.7b --reduced
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.launch.serve import generate
-from repro.models import init_params
+from repro.api import ServeSpec
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--arch", default="deepseek-v2-lite-16b")
-ap.add_argument("--batch", type=int, default=8)
-ap.add_argument("--prompt-len", type=int, default=24)
-ap.add_argument("--gen-len", type=int, default=48)
-ap.add_argument("--temperature", type=float, default=0.8)
+ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--reduced", action="store_true",
+                help="smoke mode: reduced arch, tiny stream, few rounds")
+ap.add_argument("--n-clients", type=int, default=8)
+ap.add_argument("--n-byz", type=int, default=2)
+ap.add_argument("--buffer-size", type=int, default=4)
+ap.add_argument("--rounds", type=int, default=None)
+ap.add_argument("--attack", default="ALIE")
+ap.add_argument("--aggregator", default="cm")
 args = ap.parse_args()
 
-cfg = get_config(args.arch).reduced()
-key = jax.random.PRNGKey(0)
-params = init_params(key, cfg)
-shape = ((args.batch, args.prompt_len) if cfg.num_codebooks == 1 else
-         (args.batch, args.prompt_len, cfg.num_codebooks))
-prompts = jax.random.randint(key, shape, 0, cfg.vocab_size)
+reduced = bool(args.reduced)
+spec = ServeSpec(
+    task="lm", arch=args.arch, method="sgd",
+    n_clients=args.n_clients, n_byz=args.n_byz,
+    attack=args.attack, aggregator=args.aggregator,
+    buffer_size=args.buffer_size,
+    rounds=(args.rounds if args.rounds is not None
+            else (3 if reduced else 20)),
+    lr=3e-3, arrival="exp",
+    arrival_kwargs={"mean_latency": 1.0, "straggler_frac": 0.25,
+                    "straggler_factor": 4.0, "dropout": 0.05},
+    data_kwargs={"reduced": reduced,
+                 "seq_len": 16 if reduced else 128,
+                 "per_worker_batch": 1 if reduced else 4})
 
-print(f"[serve] {args.arch} (reduced) — batch={args.batch} "
-      f"prompt={args.prompt_len} gen={args.gen_len}")
-t0 = time.time()
-out = generate(cfg, params, prompts, args.gen_len,
-               temperature=args.temperature, key=key)
-dt = time.time() - t0
-print(f"  generated {out.shape} in {dt:.1f}s "
-      f"({args.batch*args.gen_len/dt:.0f} tok/s incl. compile)")
-print("  sample:", jax.device_get(out[0])[:12], "...")
+print(f"[serve_lm] spec: {spec.to_json(indent=None)}")
+res = spec.build().run(verbose=True)
+m = res.final
+print(f"[serve_lm] {res.stats['rounds']} rounds over "
+      f"{res.stats['accepted']} accepted updates "
+      f"({res.stats['dropped']} dropped, "
+      f"{res.stats['rej_dup_client'] + res.stats['rej_replay']} deduped) "
+      f"— {res.updates_per_s:.2f} updates/s")
+print(f"[serve_lm] final loss {m['loss']:.4f} |g| {m['g_norm']:.3e} "
+      f"staleness mean {m['staleness_mean']:.2f} "
+      f"max {m['staleness_max']}")

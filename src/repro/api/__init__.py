@@ -12,7 +12,7 @@ pluggable component from one source of truth.
 from repro.api.registry import (  # noqa: F401
     check, components, describe, kinds, resolve,
 )
-from repro.api.spec import RunSpec, resolve_agg_mode  # noqa: F401
+from repro.api.spec import RunSpec, ServeSpec, resolve_agg_mode  # noqa: F401
 from repro.api.runner import (  # noqa: F401
     Experiment, RunResult, build, run,
 )

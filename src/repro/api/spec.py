@@ -259,3 +259,230 @@ class RunSpec:
         """Build and run via the shared training loop (api/runner.py)."""
         from repro.api import runner
         return runner.run(self, **run_kw)
+
+
+# ---------------------------------------------------------------------------
+# streaming-aggregation service spec (repro.serve)
+# ---------------------------------------------------------------------------
+
+SERVE_AGG_MODES = ("gspmd", "pallas")
+ARRIVAL_MODES = ("const", "exp", "lognormal", "trace")
+STALENESS_MODES = ("none", "fedbuff")
+_SERVE_KWARGS_FIELDS = ("arrival_kwargs", "method_kwargs", "attack_kwargs",
+                        "aggregator_kwargs", "compressor_kwargs",
+                        "data_kwargs")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Declarative description of a buffered-asynchronous aggregation
+    service run (``repro.serve.service``), the streaming counterpart of
+    ``RunSpec``: n_clients dispatch updates continuously under a seeded
+    arrival process, the service fires the robust aggregator whenever the
+    device buffer holds ``buffer_size`` deduplicated updates, and stale
+    candidates are FedBuff-weighted (``1/sqrt(1+tau)``) inside the
+    aggregation's fused ``w`` path. Same contract as RunSpec: every field
+    is a JSON scalar / scalar dict, validated eagerly against the registry,
+    and the spec round-trips exactly through ``to_dict``/``from_dict``.
+    """
+
+    # task / model
+    task: str = "logreg"                 # registry "task": logreg | lm
+    arch: Optional[str] = None           # registry "arch" (lm task)
+    # gradient estimator — must be streamable (pure per-client candidates)
+    method: str = "sgd"
+    # client population & byzantine setup (fraction is over the BUFFER)
+    n_clients: int = 32
+    n_byz: int = 4
+    attack: str = "ALIE"                 # registry "attack"
+    # robust aggregation
+    aggregator: str = "cm"               # registry "aggregator"
+    bucket_size: int = 0                 # Alg. 2 bucketing (0/1 = off)
+    agg_mode: str = "gspmd"              # SERVE_AGG_MODES only
+    # compression (applied per dispatched update, like csgd's wire)
+    compressor: str = "identity"         # registry "compressor"
+    # optimization
+    lr: float = 0.5
+    # buffered-async protocol
+    buffer_size: int = 8                 # K: fire threshold
+    rounds: int = 20                     # fired aggregation rounds
+    staleness: str = "fedbuff"           # STALENESS_MODES
+    # arrival process (repro.serve.arrivals)
+    arrival: str = "exp"                 # ARRIVAL_MODES
+    seed: int = 0
+    # per-component kwargs (JSON scalars only)
+    arrival_kwargs: dict = dataclasses.field(default_factory=dict)
+    method_kwargs: dict = dataclasses.field(default_factory=dict)
+    attack_kwargs: dict = dataclasses.field(default_factory=dict)
+    aggregator_kwargs: dict = dataclasses.field(default_factory=dict)
+    compressor_kwargs: dict = dataclasses.field(default_factory=dict)
+    data_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    # -- validation ---------------------------------------------------------
+    def __post_init__(self):
+        registry.check("task", self.task)
+        registry.check("method", self.method)
+        registry.check("attack", self.attack)
+        registry.check("aggregator", self.aggregator)
+        registry.check("compressor", self.compressor)
+        if self.arch is not None:
+            registry.check("arch", self.arch)
+        from repro.core.estimators import streamable
+        if not streamable(self.method):
+            raise ValueError(
+                f"method {self.method!r} is not streamable: the buffered-"
+                "async service needs candidates that are a pure function of "
+                "(params, batch, key) per client, but this estimator carries "
+                "round-coupled shared state (e.g. MARINA's c_k coin or "
+                "anchor broadcasts). Streamable methods: "
+                + ", ".join(n for n in registry.components("method")
+                            if streamable(n)))
+        if self.agg_mode not in SERVE_AGG_MODES:
+            raise ValueError(
+                f"agg_mode {self.agg_mode!r} not in {SERVE_AGG_MODES} — the "
+                "service aggregates a device-resident buffer, so the "
+                "sharded wire modes (all_to_all / sparse_support) do not "
+                "apply")
+        if self.arrival not in ARRIVAL_MODES:
+            raise ValueError(
+                f"arrival {self.arrival!r} not in {ARRIVAL_MODES}")
+        if self.staleness not in STALENESS_MODES:
+            raise ValueError(
+                f"staleness {self.staleness!r} not in {STALENESS_MODES}")
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients={self.n_clients} must be >= 1")
+        if self.n_byz < 0:
+            raise ValueError(f"n_byz={self.n_byz} must be >= 0")
+        if 2 * self.n_byz >= self.n_clients:
+            raise ValueError(
+                f"n_byz={self.n_byz} of n_clients={self.n_clients} gives "
+                f"delta={self.n_byz / self.n_clients:.2f} >= 1/2 over the "
+                "client population — no (delta,c)-robust aggregator exists")
+        if not 1 <= self.buffer_size <= self.n_clients:
+            raise ValueError(
+                f"buffer_size={self.buffer_size} must be in [1, n_clients="
+                f"{self.n_clients}] — sequence-number dedup admits at most "
+                "one in-flight update per client into a buffer")
+        if self.rounds < 0:
+            raise ValueError(f"rounds={self.rounds} must be >= 0")
+        if self.bucket_size < 0:
+            raise ValueError(f"bucket_size={self.bucket_size} must be >= 0")
+        if self.task == "lm" and self.arch is None:
+            raise ValueError(
+                "task='lm' needs arch=<name>; registered: "
+                + ", ".join(registry.components("arch")))
+        # the byzantine fraction the aggregator sees is over the BUFFER: in
+        # the worst case every byz client lands in one buffer of size K.
+        worst = min(self.n_byz, self.buffer_size)
+        if self.aggregator != "mean" and 2 * worst >= self.buffer_size:
+            warnings.warn(
+                f"worst-case buffered byzantine fraction is "
+                f"{worst / self.buffer_size:.2f} >= 1/2 (n_byz={self.n_byz} "
+                f"vs buffer_size={self.buffer_size}): no (delta,c)-robust "
+                "aggregator can cover a buffer where byzantines are the "
+                "majority; raise buffer_size or reduce n_byz",
+                stacklevel=2)
+        if self.arrival == "trace" and "path" not in self.arrival_kwargs \
+                and "events" not in self.arrival_kwargs:
+            raise ValueError(
+                "arrival='trace' needs arrival_kwargs={'path': <trace.json>}"
+                " (or an inline 'events' list)")
+        for fname in _SERVE_KWARGS_FIELDS:
+            val = getattr(self, fname)
+            if not isinstance(val, dict):
+                raise TypeError(f"{fname} must be a dict, got {type(val)}")
+            try:
+                ok = json.loads(json.dumps(val)) == val
+            except (TypeError, ValueError):
+                ok = False
+            if not ok:
+                raise ValueError(
+                    f"{fname}={val!r} must round-trip through JSON exactly "
+                    "(plain str/int/float/bool/None scalars, lists, dicts) "
+                    "so the spec stays a serializable artifact")
+
+    # -- serialization (same shape as RunSpec) ------------------------------
+    def to_dict(self) -> dict:
+        out = {"schema_version": SCHEMA_VERSION, "kind": "serve"}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = dict(v) if isinstance(v, dict) else v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeSpec":
+        d = dict(d)
+        version = d.pop("schema_version", SCHEMA_VERSION)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"spec schema_version {version} != {SCHEMA_VERSION}")
+        kind = d.pop("kind", "serve")
+        if kind != "serve":
+            raise ValueError(f"not a ServeSpec payload: kind={kind!r}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            import difflib
+            hints = []
+            for k in sorted(unknown):
+                close = difflib.get_close_matches(k, sorted(known), n=1)
+                hints.append(f"{k!r}"
+                             + (f" (did you mean {close[0]!r}?)"
+                                if close else ""))
+            raise ValueError("unknown ServeSpec field(s): "
+                             + ", ".join(hints))
+        return cls(**d)
+
+    def to_json(self, **dumps_kw) -> str:
+        dumps_kw.setdefault("indent", 1)
+        return json.dumps(self.to_dict(), **dumps_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServeSpec":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **updates) -> "ServeSpec":
+        """``dataclasses.replace`` plus dotted-key kwargs merges, like
+        ``RunSpec.replace``."""
+        merged: dict = {}
+        for key, val in updates.items():
+            if "." in key:
+                parent, sub = key.split(".", 1)
+                if parent not in _SERVE_KWARGS_FIELDS:
+                    raise ValueError(
+                        f"dotted override {key!r}: {parent!r} is not one of "
+                        f"{_SERVE_KWARGS_FIELDS}")
+                base = merged.get(parent, dict(getattr(self, parent)))
+                base[sub] = val
+                merged[parent] = base
+            else:
+                merged[key] = val
+        return dataclasses.replace(self, **merged)
+
+    # -- builders -----------------------------------------------------------
+    def to_run_spec(self, **overrides) -> RunSpec:
+        """The synchronous RunSpec this service degenerates to in the
+        K = n_clients, zero-latency limit — the sync-parity oracle, and the
+        config/experiment builder the service reuses."""
+        base = dict(
+            task=self.task, arch=self.arch, method=self.method,
+            n_workers=self.n_clients, n_byz=self.n_byz, attack=self.attack,
+            aggregator=self.aggregator, bucket_size=self.bucket_size,
+            agg_mode=self.agg_mode, compressor=self.compressor,
+            p=1.0, lr=self.lr, steps=self.rounds, seed=self.seed,
+            method_kwargs=dict(self.method_kwargs),
+            attack_kwargs=dict(self.attack_kwargs),
+            aggregator_kwargs=dict(self.aggregator_kwargs),
+            compressor_kwargs=dict(self.compressor_kwargs),
+            data_kwargs=dict(self.data_kwargs))
+        base.update(overrides)
+        return RunSpec(**base)
+
+    def build(self):
+        """-> ``repro.serve.service.AggregationService``."""
+        from repro.serve import service
+        return service.AggregationService(self)
+
+    def run(self, **run_kw):
+        """Build and drive the service for ``rounds`` fired rounds."""
+        return self.build().run(**run_kw)

@@ -53,15 +53,20 @@ AGG_BACKENDS = ("gspmd", "all_to_all", "sparse_support", "pallas")
 # shared round primitives
 # ---------------------------------------------------------------------------
 
-def apply_attack(cfg, key, cand):
+def apply_attack(cfg, key, cand, mask=None):
     """cand: stacked pytree (n, ...). Returns the vectors actually 'sent'.
 
     Omniscient attacks see the good workers' per-coordinate mean/std; NA/LF
-    leave the candidates untouched (LF acts at the data level).
+    leave the candidates untouched (LF acts at the data level). ``mask``
+    overrides ``cfg.byz_mask()`` for callers whose byzantine set is decided
+    per call rather than by worker index — the buffered-async service
+    (repro.serve) passes the byzantine flags of whatever updates happen to
+    sit in the fired buffer.
     """
-    if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
+    if cfg.attack.name in ("NA", "LF") or (mask is None and cfg.n_byz == 0):
         return cand
-    mask = cfg.byz_mask()
+    if mask is None:
+        mask = cfg.byz_mask()
     good = ~mask
     means, stds = tu.masked_mean_std(cand, good)
 
@@ -138,6 +143,65 @@ def message_phase(cfg, attack_key, agg_key, cand):
     return aggregate(cfg, agg_key, sent)
 
 
+def ingest_message_phase(cfg, attack_key, agg_key, cand, *, byz_mask=None,
+                         weights=None):
+    """Partial/buffered-candidate entry to lines 9-10 of the round.
+
+    Twin of ``message_phase`` for callers that aggregate a BUFFER of updates
+    rather than the full worker roster (the streaming service, repro.serve):
+
+    * ``byz_mask`` — (K,) bool over the buffered entries: which of them came
+      from byzantine clients. The byzantine fraction is defined over the
+      *buffered* set, so the mask is per-call data (traced), not the static
+      ``cfg.byz_mask()`` worker-index prefix.
+    * ``weights``  — optional (K,) per-entry multiplicative scale applied to
+      the sent vectors before bucketing/rule (staleness weighting: the
+      service passes ``K * s(tau_i) / sum_j s(tau_j)``, so ``rule="mean"``
+      reproduces the FedBuff weighted mean exactly). Under pallas the scale
+      is fused into the aggregation's on-chip ``w`` operator (a diagonal
+      composed with the bucket matrix — zero extra HBM traffic); the jnp
+      path materializes the scaled tree, which is also the test oracle.
+
+    With both omitted this IS ``message_phase``. ``WireCandidates`` are not
+    accepted — the service buffer holds dense (decoded) updates.
+    """
+    from repro.core import wire
+    if isinstance(cand, wire.WireCandidates):
+        raise TypeError(
+            "ingest_message_phase aggregates dense buffered updates; decode "
+            "wire payloads at ingest (serve/buffer.py) before firing")
+    if byz_mask is None and weights is None:
+        return message_phase(cfg, attack_key, agg_key, cand)
+    clean = cfg.attack.name in ("NA", "LF") or (byz_mask is None
+                                                and cfg.n_byz == 0)
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import AttackCtx, tree_aggregate_pallas
+        if clean:
+            return tree_aggregate_pallas(cfg, agg_key, cand, weights=weights)
+        if cfg.attack.coord_apply is not None:
+            mask = byz_mask if byz_mask is not None else cfg.byz_mask()
+            means = stds = None
+            if cfg.attack.needs_mean or cfg.attack.needs_std:
+                means, stds = tu.masked_mean_std(cand, ~mask)
+                if not cfg.attack.needs_std:
+                    stds = None
+            ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
+                            means=means, stds=stds)
+            return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx,
+                                         weights=weights)
+        # unfusable attack (RN): materialize, but keep the weights fused
+        sent = apply_attack(cfg, attack_key, cand, mask=byz_mask)
+        return tree_aggregate_pallas(cfg, agg_key, sent, weights=weights)
+    sent = apply_attack(cfg, attack_key, cand, mask=byz_mask)
+    if weights is not None:
+        w = weights.astype(jnp.float32)
+        sent = jax.tree.map(
+            lambda a: (a.astype(jnp.float32)
+                       * w.reshape((-1,) + (1,) * (a.ndim - 1))
+                       ).astype(a.dtype), sent)
+    return aggregate(cfg, agg_key, sent)
+
+
 def param_update(cfg, params, g, opt_state):
     """x <- x - γ g (dtype-preserving, fp32 math) or cfg.optimizer.update."""
     if cfg.optimizer is None:
@@ -192,12 +256,23 @@ class GradientEstimator:
                                   seeds (per-worker gradient tables); the
                                   sweep engine then runs such cells on the
                                   serial / WorkerPool path (DESIGN.md §2).
+      * ``streamable``          — True when the candidate computation is a
+                                  pure per-client function of (params, batch,
+                                  local state) so updates can be computed at
+                                  dispatch time and aggregated later from a
+                                  buffer (the buffered-async service,
+                                  repro.serve / DESIGN.md §4). Estimators
+                                  whose round couples clients through shared
+                                  per-round draws or anchor full-gradient
+                                  broadcasts (MARINA's c_k coin, SVRG
+                                  snapshots) stay False.
     and implement ``init_extras`` and ``round``.
     """
     name: str = "?"
     rng: tuple = ("grad", "attack", "agg")
     update_params_first: bool = False
     seed_batchable: bool = True
+    streamable: bool = False
 
     def init_extras(self, cfg, loss_fn, params, anchor, key):
         """-> (g0, extras): the initial server estimate and any extra state

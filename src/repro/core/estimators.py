@@ -241,6 +241,7 @@ class SGDEstimator(GradientEstimator):
     momentum: float = 0.0
     name = "sgd"
     rng = ("grad", "attack", "agg")
+    streamable = True       # per-client grads/momenta: serve can buffer them
 
     def init_extras(self, cfg, loss_fn, params, anchor, key):
         g0 = (_zeros_like_f32(params) if self.momentum > 0.0
@@ -273,6 +274,7 @@ class SGDEstimator(GradientEstimator):
 class CSGDEstimator(CompressedUploadBits, GradientEstimator):
     name = "csgd"
     rng = ("grad", "q", "attack", "agg")
+    streamable = True       # Q(grad_i) is still a pure per-client function
 
     def init_extras(self, cfg, loss_fn, params, anchor, key):
         return tu.tree_zeros_like(params), {}
@@ -725,6 +727,15 @@ def needs_contractive_compressor(name: str) -> bool:
     key set by the conformance harness alongside the other traits."""
     cls = ESTIMATOR_CLASSES.get(name)
     return bool(getattr(cls, "needs_contractive", False))
+
+
+def streamable(name: str) -> bool:
+    """Whether this method's candidates may be computed at dispatch time and
+    buffered for asynchronous aggregation (repro.serve). Fails CLOSED like
+    ``seed_batchable``: unknown names answer False, so a new estimator joins
+    the streaming service only by declaring ``streamable = True``."""
+    cls = ESTIMATOR_CLASSES.get(name)
+    return False if cls is None else bool(getattr(cls, "streamable", False))
 
 
 def seed_batchable(name: str) -> bool:

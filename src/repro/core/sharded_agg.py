@@ -266,7 +266,7 @@ def _segments(leaves, attack_ctx):
     return segs, means, stds, splits
 
 
-def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None):
+def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
     """Aggregate the stacked candidate pytree through the one-sweep Pallas
     kernels — every rule, no jnp fallback, zero per-round HBM copies:
 
@@ -279,7 +279,12 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None):
       parity oracle), at 2 sweeps/Weiszfeld-iteration and 2 sweeps/Krum;
     * ``attack_ctx`` (engine.message_phase) injects the omniscient attack
       inside the kernels' VMEM load — the attacked ``sent`` tensor is never
-      written to HBM.
+      written to HBM;
+    * ``weights`` (engine.ingest_message_phase — staleness weighting) scales
+      each sent row before bucketing/rule: the (n,) scale rides as a
+      diagonal composed into the on-chip ``w_mat`` operator, so the scaled
+      stack is never materialized either. Semantics (the jnp oracle):
+      ``aggregator.tree(key, sent * weights[:, None])``.
 
     fp32 accumulation, per-leaf output dtype preserved.
     """
@@ -293,6 +298,10 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None):
     if agg.bucket_size > 1 and agg.rule != "mean":
         perm = jax.random.permutation(key, n)
         w_mat = norm_agg.bucket_matrix(perm, n, agg.bucket_size)
+    if weights is not None:
+        # attack first, then scale, then bucket: W_eff = W_bucket @ diag(w)
+        diag = jnp.diag(weights.astype(jnp.float32))
+        w_mat = diag if w_mat is None else w_mat @ diag
 
     attack_fn, mask = None, None
     if attack_ctx is not None:

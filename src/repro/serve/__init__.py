@@ -1,0 +1,17 @@
+"""Buffered-asynchronous Byzantine-robust aggregation service (DESIGN.md §4).
+
+The streaming workload layer over the unchanged kernels: seeded arrival
+processes with chaos injection (``arrivals``), a double-buffered
+device-resident update buffer with sequence dedup (``buffer``), and the
+FedBuff-style round engine that staleness-weights and robustly aggregates
+whatever the buffer holds (``service``).
+
+    from repro.api import ServeSpec
+    result = ServeSpec(method="sgd", aggregator="cm", n_clients=32,
+                       n_byz=4, buffer_size=8, rounds=50).run()
+"""
+from repro.serve.arrivals import Arrival, ArrivalProcess, make_arrivals  # noqa: F401
+from repro.serve.buffer import DoubleBuffer  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    AggregationService, ServeResult, params_digest, staleness_weights,
+)

@@ -1,0 +1,123 @@
+"""Double-buffered device-resident update buffer (DESIGN.md §4).
+
+The service ingests one update at a time (a row gathered out of the
+in-flight store) while the previously-filled buffer may still be feeding an
+asynchronously-dispatched aggregation — the classic double buffer. Both
+halves live on device as stacked ``(K, ...)`` pytrees:
+
+  * ``offer`` writes one in-flight row into the next free slot with a
+    single fused jitted gather+``dynamic_update_slice`` per leaf. The
+    destination buffer argument is DONATED (off CPU), so the write is
+    in-place — ingestion costs one row of HBM traffic, never a buffer copy.
+  * ``swap`` hands the filled pytree (plus its per-slot host metadata:
+    client id, dispatch version, sequence number) to the caller and opens a
+    fresh half. The fresh half starts as a new allocation rather than
+    recycling the handle the in-flight aggregation is still reading, which
+    is what makes overlapping ingest-during-aggregate safe under donation.
+
+Sequence-number dedup is enforced here, at the mouth of the pipe: client
+``seq`` numbers are per-client monotone (arrivals.py), so an update is
+accepted iff its seq is strictly newer than the client's last accepted one
+(rejects network replays, ``rej_replay``) and the client does not already
+occupy a slot in the open buffer (one contribution per client per round,
+``rej_dup_client``) — a replayed update is never double-counted no matter
+where the duplicate lands relative to a fire.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _default_donate() -> bool:
+    # buffer donation is an XLA no-op (with a warning) on CPU hosts
+    return jax.default_backend() != "cpu"
+
+
+class DoubleBuffer:
+    """K-slot double buffer with per-client sequence dedup."""
+
+    def __init__(self, capacity: int, n_clients: int,
+                 donate: Optional[bool] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity={capacity} must be >= 1")
+        self.capacity = int(capacity)
+        self.n_clients = int(n_clients)
+        self.donate = _default_donate() if donate is None else bool(donate)
+        self._buf = None                     # open half, (K, ...) pytree
+        self.count = 0
+        # per-slot metadata of the open half (host side)
+        self.clients = np.full(capacity, -1, np.int64)
+        self.versions = np.zeros(capacity, np.int64)
+        self.seqs = np.full(capacity, -1, np.int64)
+        # dedup state
+        self.last_accepted = np.full(n_clients, -1, np.int64)
+        self.in_buffer = np.zeros(n_clients, bool)
+        self.stats = {"accepted": 0, "rej_replay": 0, "rej_dup_client": 0}
+        self._ingest = jax.jit(
+            self._ingest_impl,
+            donate_argnums=(0,) if self.donate else ())
+
+    @staticmethod
+    def _ingest_impl(buf, inflight, client, slot):
+        def leaf(B, A):
+            row = jax.lax.dynamic_index_in_dim(A, client, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                B, row.astype(B.dtype), slot, 0)
+
+        return jax.tree.map(leaf, buf, inflight)
+
+    def _alloc_like(self, inflight):
+        import jax.numpy as jnp
+        k = self.capacity
+        return jax.tree.map(
+            lambda a: jnp.zeros((k,) + a.shape[1:], a.dtype), inflight)
+
+    # -- ingest -------------------------------------------------------------
+    def offer(self, client: int, seq: int, version: int, inflight) -> bool:
+        """Try to admit client's in-flight row (``inflight[client]``) into
+        the next free slot. Returns False (and counts why) when dedup
+        rejects it; the caller fires when ``full()``."""
+        if self.count >= self.capacity:
+            raise RuntimeError("offer() on a full buffer — fire first")
+        if seq <= self.last_accepted[client]:
+            self.stats["rej_replay"] += 1
+            return False
+        if self.in_buffer[client]:
+            self.stats["rej_dup_client"] += 1
+            return False
+        if self._buf is None:
+            self._buf = self._alloc_like(inflight)
+        slot = self.count
+        self._buf = self._ingest(self._buf, inflight,
+                                 np.int32(client), np.int32(slot))
+        self.clients[slot] = client
+        self.versions[slot] = version
+        self.seqs[slot] = seq
+        self.last_accepted[client] = seq
+        self.in_buffer[client] = True
+        self.count += 1
+        self.stats["accepted"] += 1
+        return True
+
+    def full(self) -> bool:
+        return self.count == self.capacity
+
+    # -- handoff ------------------------------------------------------------
+    def swap(self):
+        """Close the open half: return ``(tree, clients, versions, seqs)``
+        and start a fresh empty half (the returned handle stays valid for
+        the caller's async aggregation; new offers never donate it)."""
+        if self._buf is None:
+            raise RuntimeError("swap() on an empty buffer")
+        out = (self._buf, self.clients.copy(), self.versions.copy(),
+               self.seqs.copy())
+        self._buf = None
+        self.count = 0
+        self.clients[:] = -1
+        self.versions[:] = 0
+        self.seqs[:] = -1
+        self.in_buffer[:] = False
+        return out

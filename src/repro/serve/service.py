@@ -1,0 +1,434 @@
+"""The buffered-asynchronous robust-aggregation round engine (DESIGN.md §4).
+
+``AggregationService`` replaces the synchronous round barrier with a
+FedBuff-style protocol over the *unchanged* aggregation stack: clients
+dispatch updates continuously (arrivals.py), a double buffer admits them
+with sequence dedup (buffer.py), and every time the buffer holds
+``buffer_size = K`` updates the service fires lines 9-10 of the paper's
+round — omniscient attack + (δ,c)-robust aggregation — through
+``engine.ingest_message_phase``, with
+
+  * the Byzantine mask defined over the *buffered* set (whichever updates
+    happen to sit in the fired buffer, not a static worker prefix);
+  * FedBuff staleness weighting ``s(τ) = 1/sqrt(1+τ)`` (τ = fires since
+    the update's dispatch) fused into the aggregation's on-chip ``w``
+    operator: candidates are scaled by ``K·s(τ_i)/Σ_j s(τ_j)`` and then
+    robustly aggregated, so ``rule="mean"`` reproduces the FedBuff
+    weighted mean exactly and the robust rules see staleness-discounted
+    vectors at zero extra HBM traffic.
+
+Virtual-time semantics (what makes every run replayable and the sync
+limit exact): events at one instant are processed as a wave; a fire ends
+the current segment, and clients (re)dispatch at segment ends — so a
+client whose update was just consumed pulls the *post-fire* model, and
+with ``const`` latency, no chaos and K = n_clients the service reproduces
+the synchronous engine trajectory bit-for-bit (tests/test_serve.py).
+Dispatch is lazy and batched: a (re)dispatching client is only marked
+pending, and one vmapped ``estimator.round`` call — the engine's own
+candidate computation, same key schedule as api/runner.py — materializes
+every pending client's update at the moment one of them first arrives (or
+a fire needs the params to advance). Between flushes params never change,
+so all pending clients share one flush.
+
+Crash safety: every fired round is journaled through ``exec.ledger``
+(round, cursor, staleness, byz-in-buffer, dedup counters, optional params
+digest) and checkpoints snapshot the full service state — engine state,
+in-flight store, dispatch versions, dedup table, event cursor — right
+after a fire. Resume reloads the snapshot and replays the arrival stream
+from the cursor, deterministically rebuilding any mid-buffer state, so a
+killed-and-resumed run finishes bit-identical to an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core import tree_utils as tu
+from repro.serve.arrivals import make_arrivals
+from repro.serve.buffer import DoubleBuffer
+
+
+def staleness_weights(tau: np.ndarray) -> np.ndarray:
+    """FedBuff weights over one buffer: ``K * s(τ_i) / Σ_j s(τ_j)`` with
+    ``s(τ) = 1/sqrt(1+τ)``. Normalized so a plain mean of the scaled
+    candidates equals the FedBuff weighted mean ``Σ_i s_i u_i / Σ_j s_j``;
+    all-fresh buffers (τ ≡ 0) give exactly 1."""
+    s = 1.0 / np.sqrt(1.0 + tau.astype(np.float64))
+    return (len(s) * s / s.sum()).astype(np.float32)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What a service run hands back (the streaming twin of RunResult)."""
+    spec: Any
+    history: list                  # one metrics dict per fired round
+    state: dict                    # final engine state (params, g, ...)
+    stats: dict                    # accepted / rejected / dropped counters
+    n_params: int
+    wall_s: float
+    updates_per_s: float           # accepted ingests per wall second
+    fire_latencies_s: list         # per-fire wall latency (sync mode only)
+
+    @property
+    def params(self):
+        return self.state["params"]
+
+    @property
+    def final(self) -> dict:
+        return self.history[-1] if self.history else {}
+
+    def latency_percentiles(self) -> dict:
+        if not self.fire_latencies_s:
+            return {}
+        lat = np.asarray(self.fire_latencies_s)
+        return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+    def to_dict(self) -> dict:
+        return {"spec": self.spec.to_dict(), "n_params": self.n_params,
+                "wall_s": self.wall_s, "updates_per_s": self.updates_per_s,
+                "stats": dict(self.stats),
+                **self.latency_percentiles(),
+                "history": self.history}
+
+
+class AggregationService:
+    """Buffered-async service over an ``api.runner.Experiment``."""
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.exp = spec.to_run_spec().build()
+        self.cfg = self.exp.cfg
+        self.est = self.exp.method.estimator
+        if self.est.update_params_first or not self.est.streamable:
+            raise ValueError(
+                f"method {spec.method!r} cannot drive the streaming "
+                "service (ServeSpec validates this — hand-built spec?)")
+        self.n = spec.n_clients
+        self.k = spec.buffer_size
+        self._flush_jit = jax.jit(self._flush_impl)
+        self._commit_jit = jax.jit(self._commit_impl)
+        self._fire_jit = jax.jit(self._fire_impl,
+                                 static_argnames=("weighted",))
+
+    # -- jitted bodies ------------------------------------------------------
+    def _flush_impl(self, state, batch, anchor, k_step):
+        """One vmapped candidate computation for every client at the
+        current version — the engine's own ``estimator.round``, same key
+        schedule as api/runner.py. Computed at most once per version
+        (keys, batch and params are all pure functions of the version, so
+        every dispatch within a version sends the same candidate) and
+        committed per-client by ``_commit_impl``."""
+        cfg, est = self.cfg, self.est
+        batch = engine.maybe_corrupt(cfg, self.exp.corrupt_fn, batch)
+        anchor = engine.maybe_corrupt(cfg, self.exp.corrupt_fn, anchor)
+        keys = dict(zip(est.rng, jax.random.split(k_step, len(est.rng))))
+        ro = est.round(cfg, self.exp.loss_fn, state, state["params"],
+                       state["params"], batch, anchor, keys)
+        from repro.core import wire
+        if isinstance(ro.cand, wire.WireCandidates):
+            raise TypeError(
+                "the service buffers dense updates, but this "
+                "compressor+backend takes the packed wire path; use "
+                "agg_mode='gspmd' or a non-wire compressor")
+        return ro.cand, dict(ro.updates or {}), ro.loss
+
+    def _commit_impl(self, state, inflight, cand, updates, pending):
+        """Commit the cached per-version candidates (and any stacked
+        estimator state, e.g. sgdm's worker momenta) on the pending rows
+        only — non-pending clients keep their older in-flight updates,
+        which is where staleness comes from. Idempotent within a version:
+        re-committing a row writes the identical values."""
+
+        def sel(new, old):
+            if new.shape[:1] != (self.n,):
+                return new                     # non-stacked estimator state
+            m = pending.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        new_inflight = (jax.tree.map(sel, cand, inflight)
+                        if inflight is not None else cand)
+        new_state = dict(state)
+        for k, v in updates.items():
+            new_state[k] = jax.tree.map(sel, v, state[k])
+        return new_state, new_inflight
+
+    def _fire_impl(self, state, buf, byz_mask, weights, k_attack, k_agg,
+                   *, weighted):
+        """Lines 9-10 over the buffered set + the server param update."""
+        cfg = self.cfg
+        g = engine.ingest_message_phase(
+            cfg, k_attack, k_agg, buf, byz_mask=byz_mask,
+            weights=weights if weighted else None)
+        new_params, new_opt = engine.param_update(
+            cfg, state["params"], g, state["opt_state"])
+        new_state = {**state, "params": new_params, "g": g,
+                     "opt_state": new_opt, "step": state["step"] + 1}
+        return new_state, jnp.sqrt(tu.tree_norm_sq(g))
+
+    # -- the service state snapshot (checkpoint payload) --------------------
+    def _snapshot(self, state, inflight, svc) -> dict:
+        return {
+            "engine": state,
+            "inflight": inflight,
+            "pending": svc["pending"].copy(),
+            "disp_version": svc["disp_version"].copy(),
+            "last_accepted": svc["last_accepted"].copy(),
+            "counters": np.array(
+                [svc["cursor"], svc["version"], svc["dropped"]], np.int64),
+            "buf_stats": np.array(
+                [svc["stats"][k] for k in
+                 ("accepted", "rej_replay", "rej_dup_client")], np.int64),
+        }
+
+    # -- the event loop -----------------------------------------------------
+    def run(self, rounds: Optional[int] = None, *,
+            ledger_path: Optional[str] = None,
+            checkpoint: Optional[str] = None,
+            checkpoint_every: Optional[int] = None,
+            resume: Optional[str] = None,
+            sync_each_fire: bool = False,
+            digest: bool = False,
+            stop_after_events: Optional[int] = None,
+            max_events: Optional[int] = None,
+            verbose: bool = False) -> ServeResult:
+        """Drive the service for ``rounds`` fired rounds.
+
+        ``sync_each_fire`` blocks on every fire (per-round latency
+        percentiles); off, aggregation overlaps ingestion (throughput).
+        ``digest`` adds a sha1 of the post-fire params to each ledger
+        record (forces a device sync — tests/audits only).
+        ``stop_after_events`` aborts after consuming that many arrival
+        events WITHOUT checkpointing — the crash-injection hook for the
+        kill-and-resume test. ``resume`` reloads a checkpoint prefix and
+        replays the arrival stream from its cursor.
+        """
+        spec = self.spec
+        rounds = spec.rounds if rounds is None else int(rounds)
+        exp = self.exp
+        n, K = self.n, self.k
+
+        key = jax.random.PRNGKey(spec.seed)
+        k_init, k_run = jax.random.split(key)
+        params = exp.init_params(k_init)
+        n_params = int(tu.tree_size(params))
+        state = exp.method.init(params, exp.anchor(0), k_run)
+
+        buffer = DoubleBuffer(K, n)
+        svc = {"cursor": 0, "version": 0, "dropped": 0,
+               "pending": np.ones(n, bool),
+               "disp_version": np.zeros(n, np.int64),
+               "last_accepted": buffer.last_accepted,
+               "stats": buffer.stats}
+        inflight = None
+        last_loss = jnp.float32(0.0)
+
+        if resume:
+            from repro.checkpoint import load_checkpoint
+            # inflight rows exist for every client after the first flush,
+            # so the template needs concrete (n, ...) candidate arrays
+            inflight = tu.tree_broadcast_leading(
+                jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32),
+                             params), n)
+            snap, _ = load_checkpoint(resume, like=self._snapshot(
+                state, inflight, svc))
+            state, inflight = snap["engine"], snap["inflight"]
+            svc["pending"] = np.array(snap["pending"]).astype(bool)
+            svc["disp_version"] = np.array(snap["disp_version"],
+                                           dtype=np.int64)
+            buffer.last_accepted[:] = np.asarray(snap["last_accepted"])
+            cur, ver, dropped = (int(x) for x in np.asarray(
+                snap["counters"]))
+            svc.update(cursor=cur, version=ver, dropped=dropped)
+            for k, v in zip(("accepted", "rej_replay", "rej_dup_client"),
+                            np.asarray(snap["buf_stats"])):
+                buffer.stats[k] = int(v)
+            if verbose:
+                print(f"[serve] resumed at round {ver}, cursor {cur}")
+        svc["last_accepted"] = buffer.last_accepted
+
+        ledger = None
+        if ledger_path:
+            from repro.exec.ledger import Ledger
+            ledger = Ledger(ledger_path)
+        if checkpoint:
+            from repro.checkpoint import save_checkpoint
+
+        def k_version(v):
+            k_step, k_batch = jax.random.split(
+                jax.random.fold_in(k_run, v + 1))
+            return k_step, k_batch
+
+        # per-version candidate cache: within one version every dispatch
+        # sends the identical candidate (keys/batch/params are functions of
+        # the version alone), so the vmapped estimator.round runs at most
+        # once per version; later flushes just commit cached rows.
+        cache = {"version": -1, "cand": None, "updates": None}
+
+        def flush():
+            nonlocal state, inflight, last_loss
+            v = svc["version"]
+            if cache["version"] != v:
+                k_step, k_batch = k_version(v)
+                cand, upd, last_loss = self._flush_jit(
+                    state, exp.minibatch(v, k_batch), exp.anchor(v), k_step)
+                cache.update(version=v, cand=cand, updates=upd)
+            # snapshot before the device transfer: the CPU backend may alias
+            # host numpy memory, and svc["pending"] is mutated right after
+            # while the commit may still be executing asynchronously
+            mask = jnp.asarray(np.array(svc["pending"]))
+            state, inflight = self._commit_jit(
+                state, inflight, cache["cand"], cache["updates"], mask)
+            svc["pending"][:] = False
+
+        history: list = []
+        fire_lat: list = []
+        redispatch: list = []
+        if svc["version"] >= rounds:       # resumed a finished run
+            return self._result(history, state, buffer, svc, fire_lat,
+                                0.0, n_params)
+        start_cursor = svc["cursor"]
+        start_round = svc["version"]
+        events = self.arrival_process().events(start=start_cursor)
+        budget = (max_events if max_events is not None
+                  else 1000 + 200 * max(rounds, 1) * K)
+        t0 = time.time()
+        stop = False
+        prev_t = None
+
+        def end_segment():
+            """(Re)dispatch every client whose update resolved in the
+            segment that just closed, at the current model version."""
+            for c in redispatch:
+                svc["pending"][c] = True
+                svc["disp_version"][c] = svc["version"]
+            redispatch.clear()
+
+        for ev in events:
+            if prev_t is not None and ev.t != prev_t:
+                end_segment()                      # wave boundary
+            prev_t = ev.t
+            svc["cursor"] += 1
+            if not ev.replay:
+                # the client re-dispatches at the end of this segment (a
+                # fire, so checkpoints capture it, or the wave boundary)
+                redispatch.append(ev.client)
+            if ev.dropped:
+                svc["dropped"] += 1
+            else:
+                if svc["pending"][ev.client] and \
+                        ev.seq > buffer.last_accepted[ev.client] and \
+                        not buffer.in_buffer[ev.client]:
+                    flush()                        # lazy batched dispatch
+                if buffer.offer(ev.client, ev.seq, svc["disp_version"]
+                                [ev.client], inflight) and buffer.full():
+                    if np.any(svc["pending"]):
+                        flush()                    # params advance next
+                    buf, clients, versions, _ = buffer.swap()
+                    r = svc["version"]
+                    tau = r - versions
+                    byz_mask = jnp.asarray(clients < spec.n_byz)
+                    weighted = (spec.staleness == "fedbuff"
+                                and bool(np.any(tau > 0)))
+                    w = (jnp.asarray(staleness_weights(tau)) if weighted
+                         else jnp.zeros(K, jnp.float32))
+                    k_step, _ = k_version(r)
+                    ks = jax.random.split(k_step, len(self.est.rng))
+                    keys = dict(zip(self.est.rng, ks))
+                    t_fire = time.perf_counter()
+                    state, g_norm = self._fire_jit(
+                        state, buf, byz_mask, w, keys["attack"],
+                        keys["agg"], weighted=weighted)
+                    if sync_each_fire:
+                        jax.block_until_ready(state["params"])
+                        fire_lat.append(time.perf_counter() - t_fire)
+                    svc["version"] = r + 1
+                    end_segment()                  # contributors redispatch
+                    m = {"round": r, "t_virtual": float(ev.t),
+                         "loss": last_loss, "g_norm": g_norm,
+                         "staleness_mean": float(tau.mean()),
+                         "staleness_max": int(tau.max()),
+                         "byz_in_buffer": int((clients < spec.n_byz).sum()),
+                         "cursor": svc["cursor"]}
+                    history.append(m)
+                    if ledger is not None:
+                        rec = {k: v for k, v in m.items()
+                               if k not in ("loss", "g_norm")}
+                        rec.update(accepted=buffer.stats["accepted"],
+                                   rej_replay=buffer.stats["rej_replay"],
+                                   rej_dup_client=buffer.stats
+                                   ["rej_dup_client"],
+                                   dropped=svc["dropped"],
+                                   wall_s=round(time.time() - t0, 4))
+                        if digest:
+                            rec["params_sha1"] = params_digest(
+                                state["params"])
+                        ledger.append(f"round-{r:06d}", "fired", **rec)
+                    if verbose:
+                        print(f"[serve] round {r:4d} t={ev.t:9.3f} "
+                              f"stale(mean={tau.mean():.2f} "
+                              f"max={int(tau.max())}) "
+                              f"byz={m['byz_in_buffer']}/{K}")
+                    if checkpoint and checkpoint_every and \
+                            (r + 1 - start_round) % checkpoint_every == 0:
+                        save_checkpoint(checkpoint, self._snapshot(
+                            state, inflight, svc), step=svc["version"])
+                    if svc["version"] >= rounds:
+                        stop = True
+            if stop:
+                break
+            if stop_after_events is not None and \
+                    svc["cursor"] - start_cursor >= stop_after_events:
+                # simulated crash: no checkpoint, state as-is
+                return self._result(history, state, buffer, svc, fire_lat,
+                                    time.time() - t0, n_params)
+            if svc["cursor"] - start_cursor > budget:
+                raise RuntimeError(
+                    f"consumed {svc['cursor'] - start_cursor} events "
+                    f"without reaching {rounds} rounds — dropout/duplicate "
+                    "chaos too high or buffer_size too large; raise "
+                    "max_events to override")
+        jax.block_until_ready(state["params"])
+        wall = time.time() - t0
+        if checkpoint and inflight is not None:
+            save_checkpoint(checkpoint, self._snapshot(
+                state, inflight, svc), step=svc["version"])
+        # history device scalars -> floats, one pass after the final sync
+        for m in history:
+            m["loss"] = float(m["loss"])
+            m["g_norm"] = float(m["g_norm"])
+        return self._result(history, state, buffer, svc, fire_lat, wall,
+                            n_params)
+
+    def _result(self, history, state, buffer, svc, fire_lat, wall,
+                n_params) -> ServeResult:
+        for m in history:
+            if not isinstance(m.get("loss"), float):
+                m["loss"] = float(m["loss"])
+                m["g_norm"] = float(m["g_norm"])
+        stats = {**buffer.stats, "dropped": svc["dropped"],
+                 "events": svc["cursor"], "rounds": svc["version"]}
+        return ServeResult(
+            spec=self.spec, history=history, state=state, stats=stats,
+            n_params=n_params, wall_s=wall,
+            updates_per_s=buffer.stats["accepted"] / max(wall, 1e-9),
+            fire_latencies_s=fire_lat)
+
+    def arrival_process(self):
+        return make_arrivals(self.spec)
+
+
+def params_digest(params) -> str:
+    """sha1 over the raw bytes of every leaf, in tree order (a device
+    sync; used by the ledger's audit trail and the resume tests)."""
+    h = hashlib.sha1()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(jax.device_get(leaf)).tobytes())
+    return h.hexdigest()

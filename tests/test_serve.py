@@ -1,0 +1,254 @@
+"""Streaming-aggregation service invariants (repro.serve, DESIGN.md §4).
+
+The load-bearing guarantees, each pinned bit-for-bit:
+
+* arrivals are a pure function of the seed: regenerate == replay, and a
+  resume cursor is just regenerate+skip;
+* the buffer's sequence dedup makes chaos invisible to the trajectory —
+  a trace with duplicate deliveries finishes with the SAME params as the
+  same trace with the replays stripped;
+* FedBuff staleness weighting fused into the aggregation ``w`` path
+  matches the hand-rolled attack→scale→rule oracle (gspmd bitwise,
+  pallas numerically) and the exact FedBuff weighted mean for rule=mean;
+* the sync limit (K = n, const latency, no chaos) reproduces the
+  synchronous engine trajectory bit-for-bit;
+* a run killed mid-buffer and resumed from its checkpoint finishes
+  bit-identical to the uninterrupted run (ledger digests agree).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ServeSpec
+from repro.core import ByzVRMarinaConfig, engine, get_aggregator, get_attack
+from repro.serve import (ArrivalProcess, DoubleBuffer, params_digest,
+                         staleness_weights)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _chaos_spec(**kw):
+    base = dict(task="logreg", method="sgdm", n_clients=8, n_byz=1,
+                attack="IPM", aggregator="cm", buffer_size=4, rounds=4,
+                lr=0.3, arrival="exp", seed=11,
+                arrival_kwargs={"mean_latency": 1.0, "straggler_frac": 0.25,
+                                "straggler_factor": 4.0, "dropout": 0.1,
+                                "duplicate": 0.25},
+                data_kwargs={"dim": 12, "n_samples": 96, "batch_size": 8})
+    base.update(kw)
+    return ServeSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# arrivals: seeded purity
+# ---------------------------------------------------------------------------
+
+def _take(proc, n, start=0):
+    out = []
+    for ev in proc.events(start=start):
+        out.append(ev)
+        if len(out) >= n:
+            break
+    return out
+
+
+def test_arrivals_regenerate_and_skip():
+    mk = lambda: ArrivalProcess("exp", 6, seed=3, mean_latency=1.0,
+                                straggler_frac=0.34, dropout=0.2,
+                                duplicate=0.3)
+    a, b = _take(mk(), 50), _take(mk(), 50)
+    assert a == b                                # regenerate == replay
+    assert _take(mk(), 30, start=20) == a[20:]   # resume == skip
+    ts = [ev.t for ev in a]
+    assert ts == sorted(ts)                      # virtual-time ordered
+
+
+def test_trace_roundtrip(tmp_path):
+    proc = ArrivalProcess("lognormal", 5, seed=9, sigma=1.2, duplicate=0.2)
+    path = os.path.join(tmp_path, "trace.json")
+    saved = proc.save_trace(path, 40)
+    replayed = _take(ArrivalProcess("trace", 5, path=path), 40)
+    assert saved == replayed
+
+
+# ---------------------------------------------------------------------------
+# buffer: sequence dedup
+# ---------------------------------------------------------------------------
+
+def test_buffer_dedup_and_swap():
+    buf = DoubleBuffer(2, 4, donate=False)
+    tree = {"w": jnp.arange(4 * 3, dtype=jnp.float32).reshape(4, 3)}
+    assert buf.offer(0, 1, 0, tree)
+    assert not buf.offer(0, 1, 0, tree)          # replayed delivery
+    assert buf.stats["rej_replay"] == 1
+    assert not buf.offer(0, 2, 0, tree)          # client already buffered
+    assert buf.stats["rej_dup_client"] == 1
+    assert buf.offer(1, 1, 0, tree) and buf.full()
+    out, clients, versions, seqs = buf.swap()
+    assert list(clients) == [0, 1] and list(seqs) == [1, 1]
+    np.testing.assert_array_equal(out["w"][0], tree["w"][0])
+    assert not buf.offer(1, 1, 1, tree)          # replayed seq after swap
+    assert buf.stats["rej_replay"] == 2
+    assert buf.offer(1, 2, 1, tree)              # next dispatch is fine
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_formula():
+    tau = np.array([0, 1, 3, 8])
+    w = staleness_weights(tau)
+    s = 1.0 / np.sqrt(1.0 + tau)
+    np.testing.assert_allclose(w, len(s) * s / s.sum(), rtol=1e-6)
+    np.testing.assert_array_equal(staleness_weights(np.zeros(5, np.int64)),
+                                  np.ones(5, np.float32))
+
+
+def _rand_stack(key, k, dim):
+    ka, kb = jax.random.split(key)
+    return {"w": jax.random.normal(ka, (k, dim)),
+            "b": jax.random.normal(kb, (k,))}
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "pallas"])
+def test_weighted_ingest_matches_hand_oracle(mode):
+    k = 6
+    # n_byz=1 keeps cfg validation quiet; the per-call byz_mask (2 of 6
+    # buffered entries) is what the attack actually uses
+    cfg = ByzVRMarinaConfig(
+        n_workers=k, n_byz=1, p=0.5, lr=0.1, agg_mode=mode,
+        aggregator=get_aggregator("cm", bucket_size=2),
+        attack=get_attack("ALIE"))
+    cand = _rand_stack(KEY, k, 33)
+    byz_mask = jnp.array([True, False, True, False, False, False])
+    w = jnp.asarray(staleness_weights(np.array([0, 2, 1, 0, 5, 3])))
+    ka, kg = jax.random.split(jax.random.PRNGKey(4))
+    got = engine.ingest_message_phase(cfg, ka, kg, cand, byz_mask=byz_mask,
+                                      weights=w)
+    sent = engine.apply_attack(cfg, ka, cand, mask=byz_mask)
+    scaled = jax.tree.map(
+        lambda a: a * w.reshape((-1,) + (1,) * (a.ndim - 1)), sent)
+    ref = cfg.aggregator.tree(kg, scaled)
+    assert_fn = (np.testing.assert_array_equal if mode == "gspmd" else
+                 lambda a, b: np.testing.assert_allclose(a, b, rtol=2e-5,
+                                                         atol=1e-6))
+    jax.tree.map(lambda a, b: assert_fn(np.asarray(a), np.asarray(b)),
+                 got, ref)
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "pallas"])
+def test_fedbuff_weighted_mean_identity(mode):
+    # rule=mean + the service's normalized weights == the exact FedBuff
+    # weighted mean sum_i s_i u_i / sum_j s_j
+    k = 5
+    cfg = ByzVRMarinaConfig(n_workers=k, n_byz=0, p=0.5, lr=0.1,
+                            agg_mode=mode,
+                            aggregator=get_aggregator("mean"),
+                            attack=get_attack("NA"))
+    cand = _rand_stack(jax.random.PRNGKey(2), k, 17)
+    tau = np.array([0, 1, 4, 2, 0])
+    w = jnp.asarray(staleness_weights(tau))
+    ka, kg = jax.random.split(jax.random.PRNGKey(5))
+    got = engine.ingest_message_phase(
+        cfg, ka, kg, cand, byz_mask=jnp.zeros(k, bool), weights=w)
+    s = 1.0 / np.sqrt(1.0 + tau)
+    ref = jax.tree.map(
+        lambda a: np.tensordot(s / s.sum(), np.asarray(a), axes=1), cand)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), b, rtol=2e-5, atol=1e-6), got, ref)
+
+
+# ---------------------------------------------------------------------------
+# service: sync limit, determinism, dedup-equivalence, kill-and-resume
+# ---------------------------------------------------------------------------
+
+def _assert_params_equal(pa, pb):
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pa, pb)
+
+
+def test_sync_limit_matches_synchronous_engine():
+    # K = n, const latency, no chaos: every buffer is one full fresh round
+    spec = ServeSpec(task="logreg", method="sgd", n_clients=6, n_byz=2,
+                     attack="ALIE", aggregator="cm", buffer_size=6,
+                     rounds=5, lr=0.5, arrival="const", seed=3,
+                     data_kwargs={"dim": 10, "n_samples": 60,
+                                  "batch_size": 8})
+    res = spec.build().run()
+    ref = spec.to_run_spec().run()
+    _assert_params_equal(res.params, ref.state["params"])
+    assert res.stats["rounds"] == 5
+    assert all(m["staleness_max"] == 0 for m in res.history)
+
+
+def test_service_replay_is_bit_identical():
+    spec = _chaos_spec()
+    r1, r2 = spec.build().run(), spec.build().run()
+    _assert_params_equal(r1.params, r2.params)
+    assert [m["g_norm"] for m in r1.history] == \
+        [m["g_norm"] for m in r2.history]
+
+
+def test_dedup_makes_duplicate_deliveries_invisible(tmp_path):
+    # same trace with and without the duplicate deliveries => same params
+    chaos = _chaos_spec()
+    path = os.path.join(tmp_path, "trace.json")
+    evs = chaos.build().arrival_process().save_trace(path, 200)
+    as_dicts = [e.to_dict() for e in evs]
+    dup = chaos.replace(arrival="trace",
+                        arrival_kwargs={"events": as_dicts})
+    clean = chaos.replace(
+        arrival="trace",
+        arrival_kwargs={"events": [d for d in as_dicts
+                                   if not d["replay"]]})
+    r_dup = dup.build().run()
+    r_clean = clean.build().run()
+    assert r_dup.stats["rej_replay"] + r_dup.stats["rej_dup_client"] > 0
+    assert r_clean.stats["rej_replay"] == 0
+    _assert_params_equal(r_dup.params, r_clean.params)
+
+
+def test_kill_mid_buffer_and_resume_is_bit_identical(tmp_path):
+    spec = _chaos_spec(rounds=6)
+    lg_full = os.path.join(tmp_path, "full.jsonl")
+    full = spec.build().run(ledger_path=lg_full, digest=True)
+    d_full = params_digest(full.params)
+
+    ck = os.path.join(tmp_path, "ck")
+    lg = os.path.join(tmp_path, "resumed.jsonl")
+    crash = spec.build().run(checkpoint=ck, checkpoint_every=2,
+                             stop_after_events=25, digest=True,
+                             ledger_path=lg)
+    assert crash.stats["rounds"] < 6          # genuinely died mid-run
+    resumed = spec.build().run(resume=ck, ledger_path=lg, digest=True)
+    assert resumed.stats["rounds"] == 6
+    _assert_params_equal(full.params, resumed.params)
+    assert params_digest(resumed.params) == d_full
+
+    from repro.exec.ledger import Ledger
+    ref = {r["run_id"]: r["params_sha1"]
+           for r in Ledger(lg_full).iter_records()}
+    for rec in Ledger(lg).iter_records():
+        assert rec["params_sha1"] == ref[rec["run_id"]]
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_validation():
+    with pytest.raises(ValueError, match="buffer_size"):
+        ServeSpec(n_clients=4, n_byz=1, buffer_size=5)
+    with pytest.raises(ValueError, match="robust aggregator exists"):
+        ServeSpec(n_clients=8, n_byz=4)
+    with pytest.raises(ValueError, match="streamable"):
+        ServeSpec(method="marina", n_clients=8, n_byz=1)
+    with pytest.warns(UserWarning, match="buffered byzantine"):
+        ServeSpec(n_clients=12, n_byz=3, buffer_size=4)
+    spec = _chaos_spec()
+    rt = ServeSpec.from_json(spec.to_json())
+    assert rt == spec
