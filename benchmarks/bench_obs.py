@@ -1,0 +1,95 @@
+"""Telemetry-overhead benchmark: steps/sec with the RoundTrace twin ON vs
+OFF (repro.obs, DESIGN.md §5).
+
+For every {backend} x {rule} cell the same seeded logreg trajectory runs
+twice — ``trace=False`` (the untouched hot path) and ``trace=True`` (the
+telemetry twin fires at log cadence, materializing influence / distance /
+filter-decision diagnostics and detection precision/recall). Both runs are
+compile-warmed off the clock, so the ratio isolates the steady-state cost
+of (a) the extra traced jaxpr at 1-in-``LOG_EVERY`` steps and (b) the
+host materialization of the trace pytree at those same steps.
+
+Grid (ISSUE 8 acceptance): {gspmd, pallas} x {mean, krum, rfa} ->
+``experiments/bench/BENCH_obs.json`` (uploaded by the CI bench job).
+The acceptance bar is ``overhead_pct <= 5`` at ``log_every=10``.
+"""
+import json
+import os
+
+from benchmarks.common import ART_DIR, emit
+from repro.api import RunSpec
+
+BACKENDS = ("gspmd", "pallas")
+RULES = ("mean", "krum", "rfa")
+N_WORKERS = 16
+DIM = 512
+STEPS = 200
+LOG_EVERY = 10
+
+
+def _spec(mode: str, rule: str, trace: bool) -> RunSpec:
+    return RunSpec(
+        task="logreg", method="marina", n_workers=N_WORKERS,
+        n_byz=N_WORKERS // 8, attack="ALIE", aggregator=rule,
+        bucket_size=2 if rule != "mean" else 0, agg_mode=mode,
+        steps=STEPS, lr=0.1, trace=trace,
+        data_kwargs={"dim": DIM, "n_samples": 256, "batch_size": 16})
+
+
+REPS = 5
+
+
+def _steps_per_s(spec: RunSpec) -> tuple:
+    exp = spec.build()
+    # warmup=True compiles both twins off the runner's clock; the last
+    # history entry's wall_s is pure post-compile loop time. Best-of-REPS
+    # because a single 200-step pass on this small problem is noisy.
+    best, result = 0.0, None
+    for _ in range(REPS):
+        result = exp.run(log_every=LOG_EVERY, warmup=True)
+        best = max(best, STEPS / max(result.history[-1]["wall_s"], 1e-9))
+    return best, result
+
+
+def run():
+    payload = {"n_workers": N_WORKERS, "dim": DIM, "steps": STEPS,
+               "log_every": LOG_EVERY, "cells": []}
+    for mode in BACKENDS:
+        for rule in RULES:
+            name = f"obs/{mode}/{rule}"
+            try:
+                off_sps, off_res = _steps_per_s(_spec(mode, rule, False))
+                on_sps, on_res = _steps_per_s(_spec(mode, rule, True))
+            except Exception as e:  # noqa: BLE001 — report, keep grid
+                emit(name, 0.0, f"FAILED {type(e).__name__}: {e}")
+                continue
+            overhead = (off_sps / max(on_sps, 1e-9) - 1.0) * 100.0
+            det = on_res.detection_summary()
+            identical = (off_res.history[-1]["loss"]
+                         == on_res.history[-1]["loss"])
+            cell = {
+                "agg_mode": mode, "rule": rule,
+                "steps_per_s_off": round(off_sps, 1),
+                "steps_per_s_on": round(on_sps, 1),
+                "overhead_pct": round(overhead, 2),
+                "traced_rounds": det["rounds"],
+                "detect_precision": round(det["precision"], 3),
+                "detect_recall": round(det["recall"], 3),
+                "final_loss_identical": identical,
+                "spec": _spec(mode, rule, True).to_dict(),
+            }
+            payload["cells"].append(cell)
+            emit(name,
+                 1e6 / max(on_sps, 1e-9),   # us per traced-run step
+                 f"off={cell['steps_per_s_off']}sps "
+                 f"on={cell['steps_per_s_on']}sps "
+                 f"overhead={cell['overhead_pct']}% "
+                 f"identical={identical}")
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "BENCH_obs.json"), "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

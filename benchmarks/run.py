@@ -16,6 +16,10 @@
             p50/p99 round latency, {gspmd, pallas} x {mean, krum} x
             buffer {64, 256} -> experiments/bench/BENCH_serve.json
             (CI bench job)
+  obs       (system) telemetry overhead: steps/sec with the RoundTrace
+            twin ON vs OFF, {gspmd, pallas} x {mean, krum, rfa} ->
+            experiments/bench/BENCH_obs.json (CI bench job; bar is
+            <= 5% overhead at log_every=10)
 
 Prints ``name,us_per_call,derived`` CSV. Select a subset with argv, e.g.
 ``python -m benchmarks.run fig1 roofline``.
@@ -27,8 +31,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_ablations, bench_aggregators,
                             bench_compressors, bench_fig1, bench_fig8,
-                            bench_roofline, bench_serve, bench_sweep,
-                            bench_table2, bench_trainer)
+                            bench_obs, bench_roofline, bench_serve,
+                            bench_sweep, bench_table2, bench_trainer)
     suites = {
         "ablate": bench_ablations.run,
         "sweep": bench_sweep.run,
@@ -36,6 +40,7 @@ def main() -> None:
         "agg": bench_aggregators.run,
         "compress": bench_compressors.run,
         "serve": bench_serve.run,
+        "obs": bench_obs.run,
         "fig1": bench_fig1.run,
         "table2": bench_table2.run,
         "fig8": bench_fig8.run,

@@ -179,6 +179,8 @@ class RunResult:
     n_params: int
     comm_bits: float                     # total uploaded bits per worker
     wall_s: float
+    traces: list = dataclasses.field(default_factory=list)
+    # host RoundTrace dicts, one per logged step (spec.trace runs only)
 
     @property
     def params(self):
@@ -188,12 +190,21 @@ class RunResult:
     def final(self) -> dict:
         return self.history[-1] if self.history else {}
 
+    def detection_summary(self, frac: float = 0.5) -> dict:
+        """Mean filter precision/recall + byzantine influence leakage over
+        the run's logged RoundTraces ({} without spec.trace)."""
+        from repro.obs import detect
+        return detect.summarize(self.traces, frac)
+
     def to_dict(self) -> dict:
         """Artifact payload: the resolved spec next to the trajectory, so a
         result file alone reproduces the run."""
-        return {"spec": self.spec.to_dict(), "n_params": self.n_params,
-                "comm_bits": self.comm_bits, "wall_s": self.wall_s,
-                "history": self.history}
+        out = {"spec": self.spec.to_dict(), "n_params": self.n_params,
+               "comm_bits": self.comm_bits, "wall_s": self.wall_s,
+               "history": self.history}
+        if self.traces:
+            out["detection"] = self.detection_summary()
+        return out
 
 
 def run(spec, **run_kw) -> RunResult:
@@ -224,6 +235,11 @@ def run(spec, **run_kw) -> RunResult:
                      Metrics are float()-materialized (a device sync) only
                      on log/callback steps, so a frequent probe doesn't
                      force per-step syncs via log_every=1.
+      sink         — repro.obs.sink.MetricSink: every logged round is also
+                     emitted as a {"type": "round"} event, traced rounds as
+                     {"type": "trace"} (spec.trace), and the run itself as a
+                     {"type": "span", "name": "run"}.
+      metrics_jsonl — path: shorthand for (and fan-out with) a JsonlSink.
     """
     return _run_experiment(build(spec), **run_kw)
 
@@ -235,8 +251,15 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
                     resume: Optional[str] = None,
                     metrics_out: Optional[str] = None,
                     callback: Optional[Callable] = None,
-                    callback_every: Optional[int] = None) -> RunResult:
+                    callback_every: Optional[int] = None,
+                    sink=None,
+                    metrics_jsonl: Optional[str] = None) -> RunResult:
     spec = exp.spec
+    own_jsonl = None
+    if metrics_jsonl:
+        from repro.obs.sink import FanoutSink, JsonlSink
+        own_jsonl = JsonlSink(metrics_jsonl)
+        sink = FanoutSink(sink, own_jsonl) if sink is not None else own_jsonl
     key = jax.random.PRNGKey(spec.seed)
     k_init, k_run = jax.random.split(key)
     params = exp.init_params(k_init)
@@ -250,31 +273,45 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
         if verbose:
             print(f"[run] resumed from {resume}.npz at step {start}")
     step = jax.jit(exp.method.step)
+    step_traced = None
+    if spec.trace:
+        from repro.obs import detect as obs_detect
+        from repro.obs import trace as obs_trace
+        step_traced = jax.jit(exp.method.step_traced)
 
     if warmup and spec.steps > 0:
         k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, 1))
-        thrown, _ = step(state, exp.minibatch(0, k_batch), exp.anchor(0),
-                         k_step)
+        wargs = (state, exp.minibatch(0, k_batch), exp.anchor(0), k_step)
+        thrown, _ = step(*wargs)
+        if step_traced is not None:      # compile the telemetry twin too,
+            thrown, _ = step_traced(*wargs)   # so log steps never compile
         jax.block_until_ready(thrown["g"])
-        del thrown
+        del thrown, wargs
 
     if checkpoint:
         from repro.checkpoint import save_checkpoint
 
     history = []
+    traces: list = []
     comm_bits_total = 0.0
     pending_ck = []          # device arrays; synced only on log steps so the
     t0 = time.time()         # loop keeps JAX's async dispatch pipelined
     for it in range(start, spec.steps):
         k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, it + 1))
-        state, metrics = step(state, exp.minibatch(it, k_batch),
-                              exp.anchor(it), k_step)
-        pending_ck.append(metrics.get("c_k"))
         last = it == spec.steps - 1
         do_log = it % max(log_every, 1) == 0 or last
         do_cb = callback is not None and (
             (it + 1) % max(callback_every, 1) == 0 or last
             if callback_every is not None else do_log)
+        # the telemetry twin runs only at log cadence (bit-identical
+        # trajectory, pinned by tests/test_obs.py), so the off-cadence hot
+        # path stays the untraced jaxpr
+        fn = step_traced if (step_traced is not None
+                             and (do_log or do_cb)) else step
+        state, metrics = fn(state, exp.minibatch(it, k_batch),
+                            exp.anchor(it), k_step)
+        rt = metrics.pop("trace", None) if spec.trace else None
+        pending_ck.append(metrics.get("c_k"))
         if do_log or do_cb:
             for ck in pending_ck:
                 comm_bits_total += exp.method.round_bits(
@@ -285,8 +322,25 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
             m["wall_s"] = round(time.time() - t0, 2)
             m["comm_bits"] = comm_bits_total
             m["comm_gbits"] = round(comm_bits_total / 1e9, 4)
+            trace_host = None
+            if rt is not None:
+                # the only extra sync is here, at log cadence, where the
+                # float() materialization above already fenced the device
+                trace_host = obs_trace.to_host(rt)
+                det = obs_detect.detection_metrics(trace_host)
+                m["detect_precision"] = det["precision"]
+                m["detect_recall"] = det["recall"]
+                m["byz_leakage"] = det["byz_leakage"]
+                m["n_filtered"] = det["n_filtered"]
             if do_log:
                 history.append(m)
+                if trace_host is not None:
+                    traces.append(trace_host)
+                if sink is not None:
+                    sink.emit({"type": "round", **m})
+                    if trace_host is not None:
+                        sink.emit({"type": "trace", "step": it,
+                                   **trace_host})
             if verbose and do_log:
                 ck = f" c_k={int(m['c_k'])}" if "c_k" in m else ""
                 print(f"  step {it:5d} loss {m['loss']:.4f} "
@@ -305,7 +359,16 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
     jax.block_until_ready(state["g"])
     result = RunResult(spec=spec, history=history, state=state,
                        n_params=n_params, comm_bits=comm_bits_total,
-                       wall_s=time.time() - t0)
+                       wall_s=time.time() - t0, traces=traces)
+    if sink is not None:
+        sink.emit({"type": "span", "name": "run",
+                   "wall_s": round(result.wall_s, 6),
+                   "steps": spec.steps - start})
+        if traces:
+            sink.emit({"type": "gauge", "name": "detection_summary",
+                       "value": result.detection_summary()})
+        if own_jsonl is not None:
+            own_jsonl.close()
 
     if checkpoint:
         # the FULL engine state (params + estimator extras + step), so a

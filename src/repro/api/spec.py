@@ -72,6 +72,10 @@ class RunSpec:
     # schedule
     steps: int = 100
     seed: int = 0
+    # observability (repro.obs): log-cadence steps run the telemetry twin
+    # (bit-identical trajectory) and history rounds carry RoundTrace +
+    # detection metrics
+    trace: bool = False
     # per-component kwargs (JSON scalars only)
     method_kwargs: dict = dataclasses.field(default_factory=dict)
     attack_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -144,6 +148,13 @@ class RunSpec:
                     "E||C(x)-x||^2 <= delta_C ||x||^2, and unbiasedness "
                     "scaling (randk's d/K) breaks it; got "
                     f"compressor={self.compressor!r}")
+        if self.trace and self.agg_mode in ("all_to_all", "sparse_support"):
+            raise ValueError(
+                f"trace=True is not supported under agg_mode="
+                f"{self.agg_mode!r}: the sharded wire modes never hold the "
+                "stacked candidates in one place, so per-worker influence / "
+                "distance diagnostics have nothing to read. Use 'gspmd' or "
+                "'pallas'")
         if self.method == "marina" and self.agg_mode == "sparse_support":
             if (self.compressor != "randk"
                     or not self.compressor_kwargs.get("common_randomness")):
@@ -310,6 +321,9 @@ class ServeSpec:
     # arrival process (repro.serve.arrivals)
     arrival: str = "exp"                 # ARRIVAL_MODES
     seed: int = 0
+    # observability (repro.obs): fired rounds additionally run the traced
+    # aggregation twin and the result carries per-fire RoundTraces
+    trace: bool = False
     # per-component kwargs (JSON scalars only)
     arrival_kwargs: dict = dataclasses.field(default_factory=dict)
     method_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -470,6 +484,7 @@ class ServeSpec:
             aggregator=self.aggregator, bucket_size=self.bucket_size,
             agg_mode=self.agg_mode, compressor=self.compressor,
             p=1.0, lr=self.lr, steps=self.rounds, seed=self.seed,
+            trace=self.trace,
             method_kwargs=dict(self.method_kwargs),
             attack_kwargs=dict(self.attack_kwargs),
             aggregator_kwargs=dict(self.aggregator_kwargs),

@@ -181,18 +181,64 @@ class Aggregator:
             return self._krum_tree(key, xs, axis_name)
         raise ValueError(self.rule)
 
+    # -- traced twin (repro.obs telemetry) ----------------------------------
+    def tree_traced(self, key, xs, axis_name=None):
+        """``(tree(key, xs), info)``: the identical aggregate — same op
+        sequence, so the output is bitwise equal to ``tree`` — plus the
+        rule's own intermediates for ``repro.obs.trace.RoundTrace``:
+
+          * ``perm``            — the shared bucketing permutation (None when
+                                  bucketing is off / rule is mean);
+          * ``bucket_weights``  — RFA's final Weiszfeld weights or Krum's
+                                  selection one-hot over the (bucketed) rows;
+          * ``rfa_sq``          — squared distances of the rows to the RFA
+                                  output (one extra distance pass);
+          * ``krum_scores`` / ``krum_selected`` — Eq. 15 scores and argmin.
+
+        Coordinate-wise rules return only ``perm``; their per-row selection
+        fractions are recomputed host-of-band by the obs layer."""
+        n = jax.tree.leaves(xs)[0].shape[0]
+        info = {"perm": None}
+        if self.bucket_size > 1 and self.rule != "mean":
+            perm = jax.random.permutation(key, n)
+            info["perm"] = perm
+            xs = jax.tree.map(
+                lambda a: _bucketize_perm(a, perm, self.bucket_size), xs)
+        if self.rule == "mean":
+            return jax.tree.map(lambda a: jnp.mean(a, axis=0), xs), info
+        if self.rule == "cm":
+            return jax.tree.map(coord_median, xs), info
+        if self.rule == "tm":
+            return (jax.tree.map(lambda a: coord_trimmed_mean(a, self.trim),
+                                 xs), info)
+        if self.rule == "rfa":
+            z, extra = self._rfa_tree(key, xs, axis_name, return_info=True)
+        elif self.rule == "krum":
+            z, extra = self._krum_tree(key, xs, axis_name, return_info=True)
+        else:
+            raise ValueError(self.rule)
+        info.update(extra)
+        return z, info
+
     # -- norm-based rules (global distances) --------------------------------
-    def _rfa_tree(self, key, xs, axis_name=None):
+    def _rfa_tree(self, key, xs, axis_name=None, return_info=False):
         """Geometric median via smoothed Weiszfeld (Pillutla et al. 2022)."""
         z = jax.tree.map(lambda a: jnp.mean(a, axis=0), xs)
+        w = None
         for _ in range(self.iters):
             sq = _tree_sqdist_to(xs, z, axis_name)
             w = 1.0 / jnp.sqrt(sq + self.eps)
             w = w / jnp.sum(w)
             z = _tree_weighted_sum(w, xs)
-        return z
+        if not return_info:
+            return z
+        if w is None:            # iters == 0: z is the plain mean
+            n = jax.tree.leaves(xs)[0].shape[0]
+            w = jnp.full((n,), 1.0 / n, jnp.float32)
+        sq_t = _tree_sqdist_to(xs, z, axis_name)
+        return z, {"bucket_weights": w, "rfa_sq": sq_t}
 
-    def _krum_tree(self, key, xs, axis_name=None):
+    def _krum_tree(self, key, xs, axis_name=None, return_info=False):
         """Krum (Eq. 15): vector minimizing the sum of squared distances to
         its n - n_byz - 2 nearest neighbours."""
         n = jax.tree.leaves(xs)[0].shape[0]
@@ -202,7 +248,11 @@ class Aggregator:
         scores = jnp.sum(jnp.sort(d2, axis=1)[:, :m], axis=1)
         best = jnp.argmin(scores)
         onehot = jax.nn.one_hot(best, n)
-        return _tree_weighted_sum(onehot, xs)
+        z = _tree_weighted_sum(onehot, xs)
+        if not return_info:
+            return z
+        return z, {"bucket_weights": onehot, "krum_scores": scores,
+                   "krum_selected": best}
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,22 @@ def aggregate(cfg, key, sent):
     raise ValueError(f"agg_mode {mode!r} not in {AGG_BACKENDS}")
 
 
+def fusable_attack_ctx(cfg, cand, mask):
+    """Build the ``sharded_agg.AttackCtx`` for a kernel-fusable omniscient
+    attack (BF/ALIE/IPM via ``Attack.coord_apply``): the byzantine mask plus
+    the good workers' per-coordinate mean/std trees, computed only when the
+    attack reads them. Shared by ``message_phase``/``ingest_message_phase``
+    and the traced twins in ``repro.obs.trace``."""
+    from repro.core.sharded_agg import AttackCtx
+    means = stds = None
+    if cfg.attack.needs_mean or cfg.attack.needs_std:
+        means, stds = tu.masked_mean_std(cand, ~mask)
+        if not cfg.attack.needs_std:
+            stds = None
+    return AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
+                     means=means, stds=stds)
+
+
 def message_phase(cfg, attack_key, agg_key, cand):
     """Lines 9-10 of the round: omniscient attack, then robust aggregation.
 
@@ -125,22 +141,35 @@ def message_phase(cfg, attack_key, agg_key, cand):
     if isinstance(cand, wire.WireCandidates):
         return wire.wire_message_phase(cfg, attack_key, agg_key, cand)
     if cfg.agg_mode == "pallas":
-        from repro.core.sharded_agg import AttackCtx, tree_aggregate_pallas
+        from repro.core.sharded_agg import tree_aggregate_pallas
         clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
         if clean:
             return tree_aggregate_pallas(cfg, agg_key, cand)
         if cfg.attack.coord_apply is not None:
-            mask = cfg.byz_mask()
-            means = stds = None
-            if cfg.attack.needs_mean or cfg.attack.needs_std:
-                means, stds = tu.masked_mean_std(cand, ~mask)
-                if not cfg.attack.needs_std:
-                    stds = None
-            ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
-                            means=means, stds=stds)
+            ctx = fusable_attack_ctx(cfg, cand, cfg.byz_mask())
             return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx)
     sent = apply_attack(cfg, attack_key, cand)
     return aggregate(cfg, agg_key, sent)
+
+
+# Trace-time routing for estimators that own their message phase (MARINA's
+# lax.cond branches): the telemetry twin built by make_engine_step(trace=True)
+# flips this flag while est.round traces, so ``phase_with_trace`` — called
+# from INSIDE the branch — returns (agg, RoundTrace) and the trace escapes
+# the cond through ``RoundOutput.trace`` (both branches build the same
+# RoundTrace structure for a fixed rule, so lax.cond accepts it). The flag is
+# read at trace time only; with it off the call is byte-for-byte
+# ``message_phase`` and the extra None output adds no jaxpr equations.
+_PHASE_TRACE = [False]
+
+
+def phase_with_trace(cfg, attack_key, agg_key, cand):
+    """``message_phase`` that also returns this round's RoundTrace when the
+    enclosing engine step is the telemetry twin; ``(agg, None)`` otherwise."""
+    if _PHASE_TRACE[0]:
+        from repro.obs import trace as obs_trace
+        return obs_trace.traced_message_phase(cfg, attack_key, agg_key, cand)
+    return message_phase(cfg, attack_key, agg_key, cand), None
 
 
 def ingest_message_phase(cfg, attack_key, agg_key, cand, *, byz_mask=None,
@@ -175,18 +204,12 @@ def ingest_message_phase(cfg, attack_key, agg_key, cand, *, byz_mask=None,
     clean = cfg.attack.name in ("NA", "LF") or (byz_mask is None
                                                 and cfg.n_byz == 0)
     if cfg.agg_mode == "pallas":
-        from repro.core.sharded_agg import AttackCtx, tree_aggregate_pallas
+        from repro.core.sharded_agg import tree_aggregate_pallas
         if clean:
             return tree_aggregate_pallas(cfg, agg_key, cand, weights=weights)
         if cfg.attack.coord_apply is not None:
             mask = byz_mask if byz_mask is not None else cfg.byz_mask()
-            means = stds = None
-            if cfg.attack.needs_mean or cfg.attack.needs_std:
-                means, stds = tu.masked_mean_std(cand, ~mask)
-                if not cfg.attack.needs_std:
-                    stds = None
-            ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
-                            means=means, stds=stds)
+            ctx = fusable_attack_ctx(cfg, cand, mask)
             return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx,
                                          weights=weights)
         # unfusable attack (RN): materialize, but keep the weights fused
@@ -232,7 +255,9 @@ class RoundOutput:
     with optional ``finalize(agg) -> (g, state_updates)`` server-side
     post-processing) or ``g_new`` (the estimator ran the message phase
     itself — the sparse-support path, where attack/aggregation happen on
-    the shared RandK support only).
+    the shared RandK support only). ``trace`` carries the RoundTrace out of
+    estimator-owned message phases (``phase_with_trace``) when the
+    telemetry twin is running; None otherwise.
     """
     loss: Any
     cand: Any = None
@@ -240,6 +265,7 @@ class RoundOutput:
     g_new: Any = None
     updates: Optional[dict] = None
     metrics: Optional[dict] = None
+    trace: Any = None
 
 
 class GradientEstimator:
@@ -313,7 +339,16 @@ def make_engine_init(cfg, loss_fn, estimator: GradientEstimator,
 
 
 def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
-                     corrupt_fn: Optional[Callable] = None):
+                     corrupt_fn: Optional[Callable] = None,
+                     trace: bool = False):
+    """``trace=True`` builds the telemetry twin: the message phase runs
+    through ``repro.obs.trace.traced_message_phase`` — the identical
+    aggregation calls plus the rule's own intermediates — and the returned
+    metrics gain a ``"trace"`` RoundTrace entry. Estimators that own their
+    message phase route through ``phase_with_trace`` and hand the trace back
+    via ``RoundOutput.trace`` (None when they aggregate without the shared
+    phase, e.g. sparse-support VR rounds). The default ``trace=False`` path
+    is byte-for-byte today's step."""
     est = estimator
     assert est.rng[-2:] == ("attack", "agg"), est.rng
 
@@ -330,14 +365,27 @@ def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
         batch = maybe_corrupt(cfg, corrupt_fn, batch)
         anchor = maybe_corrupt(cfg, corrupt_fn, anchor)
 
-        ro = est.round(cfg, loss_fn, state, new_params, old_params, batch,
-                       anchor, keys)
+        prev_flag = _PHASE_TRACE[0]
+        _PHASE_TRACE[0] = trace
+        try:
+            ro = est.round(cfg, loss_fn, state, new_params, old_params,
+                           batch, anchor, keys)
+        finally:
+            _PHASE_TRACE[0] = prev_flag
         updates = dict(ro.updates or {})
 
+        rt = None
         if ro.g_new is not None:
             g = ro.g_new
+            rt = ro.trace
         else:
-            agg = message_phase(cfg, keys["attack"], keys["agg"], ro.cand)
+            if trace:
+                from repro.obs import trace as obs_trace
+                agg, rt = obs_trace.traced_message_phase(
+                    cfg, keys["attack"], keys["agg"], ro.cand)
+            else:
+                agg = message_phase(cfg, keys["attack"], keys["agg"],
+                                    ro.cand)
             if ro.finalize is not None:
                 g, fin_updates = ro.finalize(agg)
                 updates.update(fin_updates)
@@ -353,6 +401,8 @@ def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
         metrics = {"loss": ro.loss,
                    **(ro.metrics or {}),
                    "g_norm": jnp.sqrt(tu.tree_norm_sq(g))}
+        if trace:
+            metrics["trace"] = rt
         return new_state, metrics
 
     return step
@@ -369,12 +419,16 @@ class Method:
     ``init(params, anchor, key) -> state`` and
     ``step(state, batch, anchor, key) -> (state, metrics)`` run through the
     shared engine; ``estimator`` is the plugged-in GradientEstimator.
+    ``step_traced`` is the telemetry twin (metrics carry a ``"trace"``
+    RoundTrace; the trajectory is bit-identical to ``step``) used by the
+    runner on log-cadence steps when ``RunSpec.trace`` is on.
     """
     name: str
     estimator: GradientEstimator
     init: Callable
     step: Callable
     cfg: Any
+    step_traced: Optional[Callable] = None
 
     def round_bits(self, d: int, full_round: bool = True) -> int:
         return self.estimator.round_bits(self.cfg, d, full_round)
@@ -396,7 +450,9 @@ def make_method(name: str, cfg, loss_fn,
     return Method(
         name=name, estimator=est, cfg=cfg,
         init=make_engine_init(cfg, loss_fn, est, corrupt_fn),
-        step=make_engine_step(cfg, loss_fn, est, corrupt_fn))
+        step=make_engine_step(cfg, loss_fn, est, corrupt_fn),
+        step_traced=make_engine_step(cfg, loss_fn, est, corrupt_fn,
+                                     trace=True))
 
 
 def list_methods():

@@ -50,7 +50,8 @@ from jax import lax
 
 from repro.core import tree_utils as tu
 from repro.core.engine import (GradientEstimator, RoundOutput,
-                               apply_attack, message_phase, stacked_grads)
+                               apply_attack, message_phase,
+                               phase_with_trace, stacked_grads)
 
 
 def _zeros_like_f32(params):
@@ -98,11 +99,15 @@ class MarinaEstimator(GradientEstimator):
         # pytree structure, and the VR branch's wire payload has none of the
         # full branch's dense shape): each branch attacks + aggregates with
         # the SAME keys the engine would have used, so trajectories are
-        # unchanged vs. the engine-side phase.
+        # unchanged vs. the engine-side phase. phase_with_trace lets the
+        # telemetry twin's RoundTrace escape the cond (both branches build
+        # the same trace structure); on the untraced step it IS
+        # message_phase and the None slot adds nothing to the jaxpr.
         def full_branch(_):
             loss, grads = stacked_grads(loss_fn, params, anchor, wkeys)
-            return loss, message_phase(cfg, keys["attack"], keys["agg"],
-                                       grads)
+            g, rt = phase_with_trace(cfg, keys["attack"], keys["agg"],
+                                     grads)
+            return loss, g, rt
 
         def vr_branch(_):
             qkeys = tu.per_worker_keys(
@@ -120,23 +125,25 @@ class MarinaEstimator(GradientEstimator):
                 # reconstruction base, Q(delta) as the wire payload.
                 wc = wire.pack_candidates(cfg.compressor, qkeys, deltas,
                                           base=state["g"], base_shared=True)
-                return loss, message_phase(cfg, keys["attack"], keys["agg"],
-                                           wc)
+                g, rt = phase_with_trace(cfg, keys["attack"], keys["agg"],
+                                         wc)
+                return loss, g, rt
             qs = jax.vmap(
                 lambda kq, t: tu.compress_tree(cfg.compressor, kq, t)
             )(qkeys, deltas)
             cand = jax.tree.map(lambda g0, q: g0[None] + q, state["g"], qs)
-            return loss, message_phase(cfg, keys["attack"], keys["agg"],
-                                       cand)
+            g, rt = phase_with_trace(cfg, keys["attack"], keys["agg"],
+                                     cand)
+            return loss, g, rt
 
-        loss, g_new = lax.cond(c_k, full_branch, vr_branch, operand=None)
+        loss, g_new, rt = lax.cond(c_k, full_branch, vr_branch, operand=None)
         dims = [int(p.size) for p in jax.tree.leaves(params)]
         vr_bits = wire.tree_wire_bits(
             cfg.compressor,
             jax.tree.map(lambda p: p[None], params))
         wire_bits = jnp.where(c_k, jnp.float32(32.0 * sum(dims)),
                               jnp.float32(vr_bits))
-        return RoundOutput(loss=loss, g_new=g_new,
+        return RoundOutput(loss=loss, g_new=g_new, trace=rt,
                            metrics={"c_k": c_k.astype(jnp.int32),
                                     "wire_bits": wire_bits})
 

@@ -266,7 +266,8 @@ def _segments(leaves, attack_ctx):
     return segs, means, stds, splits
 
 
-def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
+def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
+                          return_info=False):
     """Aggregate the stacked candidate pytree through the one-sweep Pallas
     kernels — every rule, no jnp fallback, zero per-round HBM copies:
 
@@ -285,6 +286,12 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
       diagonal composed into the on-chip ``w_mat`` operator, so the scaled
       stack is never materialized either. Semantics (the jnp oracle):
       ``aggregator.tree(key, sent * weights[:, None])``.
+
+    ``return_info`` (repro.obs telemetry) returns ``(tree, info)`` where
+    ``info`` carries the norm-rule drivers' own scoring intermediates
+    (final Weiszfeld weights / Krum scores+argmin — see kernels/norm_agg);
+    coordinate rules return an empty info. The aggregate is produced by the
+    identical kernel calls either way.
 
     fp32 accumulation, per-leaf output dtype preserved.
     """
@@ -308,6 +315,7 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
         attack_fn, mask = attack_ctx.fn, attack_ctx.mask
     segs, means, stds, splits = _segments(leaves, attack_ctx)
 
+    info: dict = {}
     if agg.rule in COORD_KERNEL_RULE:
         rule = COORD_KERNEL_RULE[agg.rule]
         outs = [coord_kernel(xs, w_mat, mask, mu, sd, rule=rule,
@@ -316,11 +324,17 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
     elif agg.rule == "rfa":
         outs = norm_agg.rfa_segments(
             segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
-            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps)
+            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps,
+            return_info=return_info)
+        if return_info:
+            outs, info = outs
     elif agg.rule == "krum":
         outs = norm_agg.krum_segments(
             segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
-            attack_fn=attack_fn, n_byz=agg.n_byz)
+            attack_fn=attack_fn, n_byz=agg.n_byz,
+            return_info=return_info)
+        if return_info:
+            outs, info = outs
     else:  # pragma: no cover — RULES is closed
         raise ValueError(agg.rule)
 
@@ -330,10 +344,12 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None):
             tree_out[i] = (out[off:off + sz]
                            .reshape(leaves[i].shape[1:])
                            .astype(leaves[i].dtype))
-    return jax.tree.unflatten(treedef, tree_out)
+    tree = jax.tree.unflatten(treedef, tree_out)
+    return (tree, info) if return_info else tree
 
 
-def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None):
+def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
+                               return_info=False):
     """Wire twin of ``tree_aggregate_pallas``: the candidates arrive as a
     ``wire.WireCandidates`` payload and each leaf launches its kernels on a
     ``quantize.WireSrc`` — reconstruction (decode + base add), attack,
@@ -368,6 +384,7 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None):
             stds = list(attack_ctx.stds)
 
     srcs = W.wire_srcs(wc)
+    info: dict = {}
     if agg.rule in COORD_KERNEL_RULE:
         rule = COORD_KERNEL_RULE[agg.rule]
         outs = [coord_kernel(src, w_mat, mask, mu, sd, rule=rule,
@@ -376,14 +393,21 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None):
     elif agg.rule == "rfa":
         outs = norm_agg.rfa_segments(
             srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
-            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps)
+            attack_fn=attack_fn, iters=agg.iters, eps=agg.eps,
+            return_info=return_info)
+        if return_info:
+            outs, info = outs
     elif agg.rule == "krum":
         outs = norm_agg.krum_segments(
             srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
-            attack_fn=attack_fn, n_byz=agg.n_byz)
+            attack_fn=attack_fn, n_byz=agg.n_byz,
+            return_info=return_info)
+        if return_info:
+            outs, info = outs
     else:  # pragma: no cover — RULES is closed
         raise ValueError(agg.rule)
 
     tree_out = [out.reshape(shape).astype(dt)
                 for out, shape, dt in zip(outs, wc.shapes, wc.dtypes)]
-    return jax.tree.unflatten(wc.treedef, tree_out)
+    tree = jax.tree.unflatten(wc.treedef, tree_out)
+    return (tree, info) if return_info else tree

@@ -344,20 +344,28 @@ def wire_stats(wc: WireCandidates, good_mask):
 # the wire message phase (engine lines 9-10 over a WireCandidates)
 # ---------------------------------------------------------------------------
 
-def wire_message_phase(cfg, attack_key, agg_key, wc: WireCandidates):
+def wire_message_phase(cfg, attack_key, agg_key, wc: WireCandidates,
+                       return_info=False):
     """Omniscient attack + robust aggregation over a wire payload. The
     fused path (kernel-fusable attacks, pallas backend) never materializes
     the (n, d) candidates; RN-style attacks (exact jax.random stream on the
     materialized tensor) and non-pallas modes reconstruct densely, keeping
-    the trajectory identical to the Compressor-oracle path."""
+    the trajectory identical to the Compressor-oracle path.
+
+    ``return_info`` (repro.obs telemetry) returns ``(agg, info)`` with the
+    rule drivers' scoring intermediates; the aggregate itself is produced
+    by the identical calls either way."""
     from repro.core import engine
     if cfg.agg_mode != "pallas":   # defensive: estimators gate on pallas
         sent = engine.apply_attack(cfg, attack_key, reconstruct(wc))
+        if return_info:
+            return cfg.aggregator.tree_traced(agg_key, sent)
         return engine.aggregate(cfg, agg_key, sent)
     from repro.core.sharded_agg import (AttackCtx, tree_aggregate_pallas,
                                         tree_aggregate_pallas_wire)
     if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
-        return tree_aggregate_pallas_wire(cfg, agg_key, wc)
+        return tree_aggregate_pallas_wire(cfg, agg_key, wc,
+                                          return_info=return_info)
     if cfg.attack.coord_apply is not None:
         mask = cfg.byz_mask()
         means = stds = None
@@ -367,6 +375,8 @@ def wire_message_phase(cfg, attack_key, agg_key, wc: WireCandidates):
                 stds = None
         ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
                         means=means, stds=stds)
-        return tree_aggregate_pallas_wire(cfg, agg_key, wc, attack_ctx=ctx)
+        return tree_aggregate_pallas_wire(cfg, agg_key, wc, attack_ctx=ctx,
+                                          return_info=return_info)
     sent = engine.apply_attack(cfg, attack_key, reconstruct(wc))
-    return tree_aggregate_pallas(cfg, agg_key, sent)
+    return tree_aggregate_pallas(cfg, agg_key, sent,
+                                 return_info=return_info)

@@ -74,6 +74,9 @@ def can_batch(cells: Sequence[Tuple[str, object]],
         return False                     # TokenStream data is seed-baked
     if spec.agg_mode != "gspmd":
         return False                     # shard_map/pallas don't vmap
+    if getattr(spec, "trace", False):
+        return False                     # traces are per-trajectory host
+        # artifacts; the vmapped group loop has no log-cadence twin
     if not estimators.seed_batchable(spec.method):
         return False                     # per-worker tables don't stack
     seen = set()

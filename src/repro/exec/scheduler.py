@@ -45,6 +45,8 @@ from repro.api.runner import run as run_spec
 from repro.api.spec import RunSpec
 from repro.exec import batching
 from repro.exec.ledger import Ledger, device_kind, git_sha
+from repro.obs.sink import TagSink
+from repro.obs.sink import span as obs_span
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +208,7 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
               pool: Optional[WorkerPool] = None,
               run_kw: Optional[Mapping] = None,
               cell_hook: Optional[Callable] = None,
+              sink=None,
               verbose: bool = False) -> SweepRun:
     """Execute ``[(run_id, spec), ...]`` through the batched engine.
 
@@ -218,6 +221,12 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
     (hooked cells and non-JSON loop knobs stay in-process — closures don't
     cross processes; without ``out_dir`` the workers hand results back
     through a scratch dir that is cleaned up afterwards).
+    ``sink``: a ``repro.obs.sink.MetricSink``. In-process serial cells get
+    a run_id-tagged view of it threaded into the runner (round/trace
+    events), every cell and vmapped group is wrapped in a span event, and
+    the final engine accounting lands as ``sweep_*`` gauges. Subprocess
+    cells don't stream (sinks don't cross processes) — their artifacts
+    carry the history instead.
     """
     run_kw = dict(run_kw or {})
     srun = SweepRun()
@@ -311,11 +320,14 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
             return
         engine = "serial"
         _start(run_id, spec, engine, group)
+        if sink is not None and "sink" not in kw:
+            kw["sink"] = TagSink(sink, run_id=run_id)
         try:
-            if exp is not None:
-                result = exp.run(**kw)
-            else:
-                result = run_spec(spec, **kw)
+            with obs_span(sink, "cell", run_id=run_id, engine=engine):
+                if exp is not None:
+                    result = exp.run(**kw)
+                else:
+                    result = run_spec(spec, **kw)
         except Exception as e:                    # noqa: BLE001 — isolate
             _fail(run_id, engine, group, e)
             return
@@ -344,7 +356,9 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
         for run_id, spec in members:
             _start(run_id, spec, "vmapped", digest)
         try:
-            results, stats = batching.run_group(members, **run_kw)
+            with obs_span(sink, "vmapped_group", group=digest,
+                          n_cells=len(members)):
+                results, stats = batching.run_group(members, **run_kw)
         except Exception as e:                    # noqa: BLE001 — isolate
             for run_id, _ in members:
                 _fail(run_id, "vmapped", digest, e)
@@ -389,4 +403,9 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
     if verbose and srun.failures:
         for rid, rec in srun.failures.items():
             print(f"[exec] FAILED {rid}: {rec['error']}")
+    if sink is not None:
+        for k, v in srun.stats.items():
+            sink.emit({"type": "gauge", "name": f"sweep_{k}", "value": v})
+        sink.emit({"type": "counter", "name": "sweep_failures",
+                   "value": len(srun.failures)})
     return srun

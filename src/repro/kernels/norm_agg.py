@@ -290,12 +290,19 @@ def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, *,
 
 def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
                  attack_fn=None, iters: int = 8, eps: float = 1e-8,
-                 tile_d: int = DEFAULT_TILE_D, interpret=None):
+                 tile_d: int = DEFAULT_TILE_D, interpret=None,
+                 return_info: bool = False):
     """Smoothed Weiszfeld (Pillutla et al. 2022) with global distances across
     segments; semantics of ``Aggregator._rfa_tree``. T+1 sweeps total: the
     t-th fused pass computes z_t = w_tᵀ·xb AND the distances to z_t; uniform
     w_0 makes z_0 the (bucketed) mean, and the final weighted sum realizes
-    z_T. Returns the list of per-segment (d_j,) fp32 aggregates."""
+    z_T. Returns the list of per-segment (d_j,) fp32 aggregates.
+
+    ``return_info`` (repro.obs telemetry) additionally returns the rule's own
+    intermediates ``{"bucket_weights": w_T, "rfa_sq": ||xb - z_T||²}`` — the
+    final Weiszfeld weights and, via ONE extra fused pass, the squared
+    distances of the (bucketed) rows to the output. The aggregate itself is
+    computed by the identical calls either way."""
     n = src_dims(segs[0])[0]
     m = w_mat.shape[0] if w_mat is not None else n
     means = means if means is not None else [None] * len(segs)
@@ -308,17 +315,29 @@ def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
         w = 1.0 / jnp.sqrt(sq + eps)
         w = w / jnp.sum(w)
     w_eff = w if w_mat is None else w @ w_mat
-    return [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
+    outs = [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
                          tile_d=tile_d, interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds)]
+    if not return_info:
+        return outs
+    sq_t = sum(rfa_iter(xs, w, w_mat, mask, mu, sd, attack_fn=attack_fn,
+                        tile_d=tile_d, interpret=interpret)[1]
+               for xs, mu, sd in zip(segs, means, stds))
+    return outs, {"bucket_weights": w, "rfa_sq": sq_t}
 
 
 def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
                   attack_fn=None, n_byz: int = 1,
-                  tile_d: int = DEFAULT_TILE_D, interpret=None):
+                  tile_d: int = DEFAULT_TILE_D, interpret=None,
+                  return_info: bool = False):
     """Krum (Eq. 15) in 2 sweeps: one Gram pass (global pairwise distances),
     tiny O(m²) scoring in jnp, one weighted-sum pass extracting the winner
-    (through Wᵀ when bucketed). Semantics of ``Aggregator._krum_tree``."""
+    (through Wᵀ when bucketed). Semantics of ``Aggregator._krum_tree``.
+
+    ``return_info`` (repro.obs telemetry) additionally returns
+    ``{"bucket_weights": onehot, "krum_scores": scores, "krum_selected":
+    argmin}`` — the scoring intermediates this driver computes anyway between
+    the two sweeps; the aggregate is the identical calls either way."""
     means = means if means is not None else [None] * len(segs)
     stds = stds if stds is not None else [None] * len(segs)
     g = sum(pair_gram(xs, w_mat, mask, mu, sd, attack_fn=attack_fn,
@@ -330,8 +349,13 @@ def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
     k = max(m - n_byz - 2, 1)
     scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
-    onehot = jax.nn.one_hot(jnp.argmin(scores), m, dtype=jnp.float32)
+    best = jnp.argmin(scores)
+    onehot = jax.nn.one_hot(best, m, dtype=jnp.float32)
     w_eff = onehot if w_mat is None else onehot @ w_mat
-    return [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
+    outs = [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
                          tile_d=tile_d, interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds)]
+    if not return_info:
+        return outs
+    return outs, {"bucket_weights": onehot, "krum_scores": scores,
+                  "krum_selected": best}

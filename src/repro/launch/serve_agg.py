@@ -89,6 +89,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="block per fire and report latency percentiles "
                          "instead of overlapping ingest with aggregation")
     ap.add_argument("--metrics-out", help="dump ServeResult JSON here")
+    ap.add_argument("--latency-sample-every", type=int, default=8,
+                    metavar="N", help="free-running mode: fence every Nth "
+                    "fire for sampled latency percentiles (0 = never)")
+    from repro.obs import profile
+    profile.add_cli_args(ap)            # --metrics-out-jsonl, --profile-dir
     ap.add_argument("--quiet", action="store_true")
     return ap
 
@@ -104,15 +109,21 @@ def spec_from_args(args) -> ServeSpec:
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
+    from repro.obs import profile
+    if args.profile_dir:
+        profile.enable_step_markers()   # before the first backend touch
     spec = spec_from_args(args)
     if args.spec_out:
         with open(args.spec_out, "w") as f:
             f.write(spec.to_json())
-    res = spec.build().run(
-        ledger_path=args.ledger, checkpoint=args.checkpoint,
-        checkpoint_every=args.checkpoint_every, resume=args.resume,
-        sync_each_fire=args.sync_each_fire, digest=args.digest,
-        verbose=not args.quiet)
+    with profile.profile_trace(args.profile_dir):
+        res = spec.build().run(
+            ledger_path=args.ledger, checkpoint=args.checkpoint,
+            checkpoint_every=args.checkpoint_every, resume=args.resume,
+            sync_each_fire=args.sync_each_fire, digest=args.digest,
+            metrics_jsonl=args.metrics_out_jsonl,
+            latency_sample_every=args.latency_sample_every,
+            verbose=not args.quiet)
     pct = res.latency_percentiles()
     lat = (f" p50 {pct['p50_ms']:.2f}ms p99 {pct['p99_ms']:.2f}ms"
            if pct else "")
@@ -122,11 +133,22 @@ def main(argv=None) -> None:
           f"{res.stats['rej_dup_client']} dups rejected, "
           f"{res.stats['dropped']} dropped) in {res.wall_s:.2f}s — "
           f"{res.updates_per_s:.1f} updates/s{lat}")
+    spct = res.staleness_percentiles()
+    if spct:
+        print(f"[serve_agg] staleness p50 {spct['staleness_p50']:.0f} "
+              f"p90 {spct['staleness_p90']:.0f} "
+              f"worst {spct['staleness_worst']:.0f}")
     if res.history:
         m = res.history[-1]
         print(f"[serve_agg] final loss {m['loss']:.4f} "
               f"|g| {m['g_norm']:.3e} "
               f"staleness mean {m['staleness_mean']:.2f}")
+    if spec.trace and res.traces:
+        det = res.detection_summary()
+        print(f"[serve_agg] detection over {det['rounds']} traced rounds: "
+              f"precision {det['precision']:.3f} "
+              f"recall {det['recall']:.3f} "
+              f"byz_leakage {det['byz_leakage']:.3f}")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(res.to_dict(), f, indent=1)

@@ -77,6 +77,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help='JAX_PLATFORMS for worker subprocesses, e.g. "cpu"')
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--warmup", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="set spec.trace on every cell: log-cadence steps "
+                         "run the telemetry twin (aggregator-decision "
+                         "RoundTraces + detection metrics; trajectory is "
+                         "bit-identical). Traced cells run serially — "
+                         "traces are per-trajectory host artifacts")
+    from repro.obs import profile
+    profile.add_cli_args(ap)            # --metrics-out-jsonl, --profile-dir
     ap.add_argument("--list", action="store_true",
                     help="print the expanded run ids and exit")
     return ap
@@ -94,6 +102,8 @@ def sweep_from_args(args) -> Sweep:
         overrides[key] = _parse_value(val)
     if "agg_mode" in overrides:
         overrides["agg_mode"] = resolve_agg_mode(overrides["agg_mode"])
+    if getattr(args, "trace", False):
+        overrides["trace"] = True
     if overrides:
         base = base.replace(**overrides)
     grid = dict(args.grid)
@@ -104,6 +114,9 @@ def sweep_from_args(args) -> Sweep:
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    if args.profile_dir:
+        from repro.obs import profile
+        profile.enable_step_markers()   # before the first backend touch
     sweep = sweep_from_args(args)
     cells = list(sweep.expand())
     if args.list:
@@ -112,17 +125,27 @@ def main(argv=None):
         return None
 
     from repro import exec as xc
+    from repro.obs import profile
+    from repro.obs.sink import JsonlSink
     pool = None
     if args.workers:
         pool = xc.WorkerPool(
             max_workers=args.workers, timeout_s=args.timeout,
             gpu_ids=args.gpus.split(",") if args.gpus else None,
             jax_platform=args.platform)
-    srun = xc.run_cells(
-        cells, out_dir=args.out_dir, resume=args.resume,
-        batch=False if args.no_batch else "auto", pool=pool,
-        run_kw={"log_every": args.log_every, "warmup": args.warmup},
-        verbose=True)
+    sink = (JsonlSink(args.metrics_out_jsonl) if args.metrics_out_jsonl
+            else None)
+    try:
+        with profile.profile_trace(args.profile_dir):
+            srun = xc.run_cells(
+                cells, out_dir=args.out_dir, resume=args.resume,
+                batch=False if args.no_batch else "auto", pool=pool,
+                run_kw={"log_every": args.log_every,
+                        "warmup": args.warmup},
+                sink=sink, verbose=True)
+    finally:
+        if sink is not None:
+            sink.close()
 
     summary = xc.summarize(srun.artifacts)
     bench_dir = os.environ.get("BENCH_ART_DIR", "experiments/bench")

@@ -66,6 +66,8 @@ def build_parser() -> argparse.ArgumentParser:
         elif f.default_factory is dict:          # per-component kwargs
             ap.add_argument(flag, type=json.loads, default={},
                             help=f"JSON dict merged into spec.{f.name}")
+        elif isinstance(default, bool):          # bool('False') is True
+            ap.add_argument(*flags, action="store_true", default=default)
         else:
             ap.add_argument(flags[0], *flags[1:], type=type(f.default),
                             default=default)
@@ -90,6 +92,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "wrote; the trajectory continues exactly where "
                          "the interrupted run left off")
     ap.add_argument("--metrics-out", default=None)
+    from repro.obs import profile
+    profile.add_cli_args(ap)            # --metrics-out-jsonl, --profile-dir
     ap.add_argument("--spec", default=None,
                     help="load a serialized RunSpec JSON (flags ignored)")
     ap.add_argument("--spec-out", default=None,
@@ -134,6 +138,7 @@ def spec_from_args(args) -> RunSpec:
         aggregator=args.aggregator, bucket_size=args.bucket_size,
         agg_mode=agg_mode, compressor=compressor, p=args.p, lr=args.lr,
         optimizer=args.optimizer, steps=args.steps, seed=args.seed,
+        trace=args.trace,
         method_kwargs=args.method_kwargs, attack_kwargs=args.attack_kwargs,
         aggregator_kwargs=args.aggregator_kwargs, compressor_kwargs=ckw,
         optimizer_kwargs=args.optimizer_kwargs, data_kwargs=data_kwargs)
@@ -141,6 +146,10 @@ def spec_from_args(args) -> RunSpec:
 
 def main():
     args = build_parser().parse_args()
+    from repro.obs import profile
+    if args.profile_dir:
+        # before the first backend touch (spec resolution may init jax)
+        profile.enable_step_markers()
     if args.list_components:
         for kind in ("arch", "method", "attack", "aggregator", "compressor",
                      "optimizer", "agg_mode"):
@@ -161,11 +170,19 @@ def main():
           f"{spec.n_workers} workers ({spec.n_byz} byzantine, "
           f"attack={spec.attack}, agg={exp.cfg.aggregator.name}, "
           f"backend={spec.agg_mode})")
-    result = exp.run(log_every=args.log_every, verbose=True,
-                     checkpoint=args.checkpoint,
-                     checkpoint_every=args.checkpoint_every,
-                     resume=args.resume,
-                     metrics_out=args.metrics_out)
+    with profile.profile_trace(args.profile_dir):
+        result = exp.run(log_every=args.log_every, verbose=True,
+                         checkpoint=args.checkpoint,
+                         checkpoint_every=args.checkpoint_every,
+                         resume=args.resume,
+                         metrics_out=args.metrics_out,
+                         metrics_jsonl=args.metrics_out_jsonl)
+    if spec.trace and result.traces:
+        det = result.detection_summary()
+        print(f"[train] detection over {det['rounds']} traced rounds: "
+              f"precision {det['precision']:.3f} "
+              f"recall {det['recall']:.3f} "
+              f"byz_leakage {det['byz_leakage']:.3f}")
     return result.history
 
 

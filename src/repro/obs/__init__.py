@@ -1,0 +1,29 @@
+"""repro.obs — the observability layer (DESIGN.md §5).
+
+Four pieces, shared by ``api.runner``, ``repro.exec`` and ``repro.serve``:
+
+* ``trace``   — ``RoundTrace``: per-round aggregator-decision telemetry
+                (who the rule picked, how much each worker influenced the
+                aggregate) emitted from the *same* backend calls that
+                compute the aggregate, gated by ``RunSpec.trace``.
+* ``detect``  — host-side detection-quality metrics against the ground-
+                truth byzantine mask (filter precision/recall, influence
+                leakage).
+* ``sink``    — the ``MetricSink`` event protocol (JSONL stream, in-memory
+                ring, fan-out) plus wall-clock spans that fence with
+                ``block_until_ready`` only at log-cadence boundaries.
+* ``profile`` — ``jax.profiler`` trace context + the XLA step-marker env
+                idiom, wired into the launch CLIs as ``--profile-dir``.
+"""
+from repro.obs.detect import detection_metrics, filtered_mask, summarize
+from repro.obs.sink import (FanoutSink, JsonlSink, MetricSink, NullSink,
+                            RingSink, TagSink, span, verify_jsonl)
+from repro.obs.trace import (RoundTrace, to_host, traced_ingest_message_phase,
+                             traced_message_phase)
+
+__all__ = [
+    "RoundTrace", "traced_message_phase", "traced_ingest_message_phase",
+    "to_host", "detection_metrics", "filtered_mask", "summarize",
+    "MetricSink", "JsonlSink", "RingSink", "FanoutSink", "NullSink",
+    "TagSink", "span", "verify_jsonl",
+]

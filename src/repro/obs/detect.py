@@ -1,0 +1,69 @@
+"""Detection-quality metrics against the ground-truth byzantine mask.
+
+The paper-science observable behind Table 2: a robust rule "works" when the
+byzantine rows end up with (near-)zero effective weight in the aggregate.
+``RoundTrace.influence`` records exactly that weight, so detection quality
+is a pure host-side readout:
+
+* a worker counts as FILTERED when its influence falls below ``frac`` of
+  the uniform share 1/n (default: half the uniform share);
+* precision / recall score the filtered set against ``byz_mask``;
+* ``byz_leakage`` is the fraction of total (positive) influence mass held
+  by byzantine rows — the quantity that actually perturbs the aggregate,
+  and the one ALIE-style attacks are designed to keep high.
+
+Works on a device RoundTrace, a ``to_host`` dict, or a history record that
+embeds the trace fields.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _field(trace, name):
+    if isinstance(trace, dict):
+        return trace.get(name)
+    return getattr(trace, name, None)
+
+
+def filtered_mask(trace, frac: float = 0.5) -> np.ndarray:
+    """(n,) bool: workers whose influence is below ``frac``·(1/n)."""
+    infl = np.asarray(_field(trace, "influence"), np.float64)
+    return infl < frac / infl.shape[0]
+
+
+def detection_metrics(trace, frac: float = 0.5) -> dict:
+    """Precision/recall of the filtered-worker set vs the ground-truth
+    byzantine mask, plus the byzantine influence-leakage fraction.
+
+    Empty-denominator convention: with nothing filtered precision is 1.0
+    (no false accusations), with no byzantines recall is 1.0.
+    """
+    infl = np.asarray(_field(trace, "influence"), np.float64)
+    byz = np.asarray(_field(trace, "byz_mask"), bool)
+    filt = filtered_mask(trace, frac)
+    tp = int((filt & byz).sum())
+    fp = int((filt & ~byz).sum())
+    fn = int((~filt & byz).sum())
+    pos = np.clip(infl, 0.0, None)
+    tot = pos.sum()
+    return {
+        "n_filtered": int(filt.sum()),
+        "precision": tp / (tp + fp) if tp + fp else 1.0,
+        "recall": tp / (tp + fn) if tp + fn else 1.0,
+        "byz_leakage": float(pos[byz].sum() / tot) if tot > 0 else 0.0,
+    }
+
+
+def summarize(traces, frac: float = 0.5) -> dict:
+    """Mean detection metrics over a run's logged traces (host dicts or
+    RoundTrace objects); {} when there is nothing to summarize."""
+    mets = [detection_metrics(t, frac) for t in traces
+            if _field(t, "influence") is not None]
+    if not mets:
+        return {}
+    out = {k: float(np.mean([m[k] for m in mets]))
+           for k in ("precision", "recall", "byz_leakage")}
+    out["n_filtered_mean"] = float(np.mean([m["n_filtered"] for m in mets]))
+    out["rounds"] = len(mets)
+    return out

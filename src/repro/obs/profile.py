@@ -1,0 +1,67 @@
+"""Span profiling: jax.profiler traces + the XLA step-marker idiom.
+
+``profile_trace(dir)`` wraps a run in ``jax.profiler.trace`` so the launch
+CLIs can dump a TensorBoard-loadable device trace with ``--profile-dir``.
+``enable_step_markers()`` applies the XLA step-marker env idiom
+(``--xla_step_marker_location=1`` — mark the outer while/training step, 0
+would mark the program entry) so profiler timelines show per-step
+boundaries; it must run before the first backend touch, which is why the
+CLIs call it at parse time rather than inside the run. The flag only
+exists in TPU XLA builds — and XLA's env-flag parsing is fail-closed
+(an unknown flag aborts the process) — so it is applied only when a TPU
+runtime is detectable without initializing the backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import glob
+import importlib.util
+import os
+
+
+STEP_MARKER_FLAG = "--xla_step_marker_location=1"
+
+
+def _tpu_runtime_present() -> bool:
+    """TPU detection WITHOUT touching the jax backend (which would freeze
+    XLA_FLAGS): an explicit platform request, or the libtpu wheel plus an
+    actual accelerator device node (the wheel alone proves nothing — CPU
+    images ship it and then fall back)."""
+    if "tpu" in os.environ.get("JAX_PLATFORMS", "").lower():
+        return True
+    return (importlib.util.find_spec("libtpu") is not None
+            and bool(glob.glob("/dev/accel*")))
+
+
+def enable_step_markers() -> None:
+    """Prepend the step-marker flag to XLA_FLAGS (idempotent). No-op once
+    the backend is initialized — call before any jax import touches it —
+    and on non-TPU builds, whose XLA rejects the flag outright."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_step_marker_location" in flags or not _tpu_runtime_present():
+        return
+    os.environ["XLA_FLAGS"] = (STEP_MARKER_FLAG + (" " + flags if flags
+                                                  else ""))
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir=None):
+    """``jax.profiler.trace`` context when ``profile_dir`` is set; a
+    nullcontext otherwise, so call sites can wrap unconditionally."""
+    if not profile_dir:
+        yield
+        return
+    import jax
+    os.makedirs(profile_dir, exist_ok=True)
+    with jax.profiler.trace(profile_dir):
+        yield
+
+
+def add_cli_args(ap) -> None:
+    """The shared observability CLI surface for the launch drivers."""
+    ap.add_argument("--metrics-out-jsonl", metavar="PATH",
+                    help="append metric events (rounds, traces, spans) as "
+                         "one JSON line each — the obs.sink stream")
+    ap.add_argument("--profile-dir", metavar="DIR",
+                    help="dump a jax.profiler device trace here "
+                         "(TensorBoard-loadable) with XLA step markers")

@@ -1,0 +1,236 @@
+"""RoundTrace — per-round aggregator-decision telemetry (DESIGN.md §5).
+
+The robust aggregator is the whole point of Byz-VR-MARINA, yet the round's
+metrics only report scalars; nothing records *who* Krum selected, what RFA's
+Weiszfeld weights converged to, or how much byzantine mass leaked into the
+aggregate. ``traced_message_phase`` / ``traced_ingest_message_phase`` are
+the telemetry twins of the engine's message phase: they produce the SAME
+aggregate — bit-identical, because the aggregation runs through the
+identical backend calls (``Aggregator.tree_traced`` on gspmd,
+``tree_aggregate_pallas(..., return_info=True)`` on pallas) — plus a
+``RoundTrace`` pytree assembled from quantities those backends already hold:
+
+* ``influence``      — (n,) effective weight of each worker's row in the
+                       final aggregate: rule weights pushed back through the
+                       bucketing operator (``bucket_matrix``) and any
+                       per-row staleness scale. Sums to ~1.
+* ``dist_to_agg``    — (n,) distance from each SENT vector (post-attack) to
+                       the aggregate.
+* ``bucket_weights`` — (m,) the rule's weight per (bucketed) row: uniform
+                       for mean, final Weiszfeld weights for RFA, the
+                       selection one-hot for Krum, coordinate-averaged
+                       selection fractions for CM/TM.
+* ``byz_mask``       — (n,) ground truth (static worker prefix, or the
+                       per-fire buffered mask in repro.serve).
+* ``krum_scores`` / ``krum_selected`` / ``rfa_weights`` / ``rfa_residual``
+                     — rule-specific intermediates (None for other rules).
+
+Everything here is diagnostics-only: the aggregate value never flows
+through this module's extra ops, so numerics cannot drift (pinned by
+tests/test_obs.py), and none of it traces when ``RunSpec.trace`` is off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundTrace:
+    """One round's aggregator decisions. Registered as a pytree (``rule``
+    is static aux data) so it can ride through jit in the step's metrics."""
+    rule: str
+    influence: Any                 # (n,) f32
+    dist_to_agg: Any               # (n,) f32
+    bucket_weights: Any            # (m,) f32
+    byz_mask: Any                  # (n,) bool
+    krum_scores: Any = None        # (m,) f32 | None
+    krum_selected: Any = None      # ()   i32 | None
+    rfa_weights: Any = None        # (m,) f32 | None
+    rfa_residual: Any = None       # ()   f32 | None
+
+
+_RT_DATA = ("influence", "dist_to_agg", "bucket_weights", "byz_mask",
+            "krum_scores", "krum_selected", "rfa_weights", "rfa_residual")
+
+jax.tree_util.register_pytree_node(
+    RoundTrace,
+    lambda rt: (tuple(getattr(rt, f) for f in _RT_DATA), rt.rule),
+    lambda rule, kids: RoundTrace(rule, *kids))
+
+
+def to_host(rt: RoundTrace) -> dict:
+    """Materialize a (device) RoundTrace into a JSON-ready dict: lists /
+    scalars only, None fields dropped. This is the only sync point."""
+    import numpy as np
+    out = {"rule": rt.rule}
+    for f in _RT_DATA:
+        v = getattr(rt, f)
+        if v is None:
+            continue
+        a = np.asarray(jax.device_get(v))
+        if a.ndim == 0:
+            out[f] = a.item()
+        elif a.dtype == np.bool_:
+            out[f] = [bool(x) for x in a]
+        else:
+            out[f] = [float(x) for x in a]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the traced message phase
+# ---------------------------------------------------------------------------
+
+def traced_message_phase(cfg, attack_key, agg_key, cand):
+    """Telemetry twin of ``engine.message_phase``: (agg, RoundTrace) with
+    ``agg`` bit-identical to the untraced phase."""
+    return traced_ingest_message_phase(cfg, attack_key, agg_key, cand)
+
+
+def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
+                                byz_mask=None, weights=None):
+    """Telemetry twin of ``engine.ingest_message_phase``.
+
+    The aggregate is produced by the SAME backend calls the engine makes
+    (same branch structure: fused attack ctx under pallas, scaled-tree
+    oracle under gspmd) with ``return_info=True`` where the norm rules
+    compute their scores — so trajectories are bit-identical with tracing
+    on. The diagnostics additionally materialize the attacked ``sent``
+    stack (the oracle twin of the fused in-kernel injection) to measure
+    per-worker distances; that tensor feeds ONLY the trace, never ``g``.
+    """
+    from repro.core import wire
+
+    if cfg.agg_mode == "all_to_all":
+        raise ValueError(
+            "trace is not supported under agg_mode='all_to_all' — the "
+            "shard_map backend never holds the stacked candidates in one "
+            "place (RunSpec validates this)")
+    if isinstance(cand, wire.WireCandidates):
+        if byz_mask is not None or weights is not None:
+            raise TypeError("wire payloads carry no per-entry mask/weights")
+        agg, info = wire.wire_message_phase(cfg, attack_key, agg_key, cand,
+                                            return_info=True)
+        dense = wire.reconstruct(cand)
+        sent = engine.apply_attack(cfg, attack_key, dense)
+        return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=None,
+                                 weights=None, info=info)
+
+    clean = cfg.attack.name in ("NA", "LF") or (byz_mask is None
+                                                and cfg.n_byz == 0)
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        if clean:
+            agg, info = tree_aggregate_pallas(cfg, agg_key, cand,
+                                              weights=weights,
+                                              return_info=True)
+            sent = cand
+        elif cfg.attack.coord_apply is not None:
+            mask = byz_mask if byz_mask is not None else cfg.byz_mask()
+            ctx = engine.fusable_attack_ctx(cfg, cand, mask)
+            agg, info = tree_aggregate_pallas(cfg, agg_key, cand,
+                                              attack_ctx=ctx,
+                                              weights=weights,
+                                              return_info=True)
+            # diagnostics twin of the in-kernel injection (same values up
+            # to the packed-leaf dtype round-trip); feeds only the trace
+            sent = engine.apply_attack(cfg, attack_key, cand, mask=byz_mask)
+        else:                        # unfusable attack (RN): materialize
+            sent = engine.apply_attack(cfg, attack_key, cand, mask=byz_mask)
+            agg, info = tree_aggregate_pallas(cfg, agg_key, sent,
+                                              weights=weights,
+                                              return_info=True)
+    else:                            # gspmd / sparse_support dense rounds
+        sent = engine.apply_attack(cfg, attack_key, cand, mask=byz_mask)
+        scaled = sent
+        if weights is not None:
+            w = weights.astype(jnp.float32)
+            scaled = jax.tree.map(
+                lambda a: (a.astype(jnp.float32)
+                           * w.reshape((-1,) + (1,) * (a.ndim - 1))
+                           ).astype(a.dtype), sent)
+        agg, info = cfg.aggregator.tree_traced(agg_key, scaled)
+
+    return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=byz_mask,
+                             weights=weights, info=info)
+
+
+# ---------------------------------------------------------------------------
+# trace assembly
+# ---------------------------------------------------------------------------
+
+def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
+                 info) -> RoundTrace:
+    """Assemble the RoundTrace from the backend's rule intermediates plus
+    the materialized sent stack. All fp32, diagnostics only."""
+    from repro.kernels.norm_agg import bucket_matrix
+
+    agg_obj = cfg.aggregator
+    leaves = jax.tree.leaves(sent)
+    n = leaves[0].shape[0]
+    x = jnp.concatenate(
+        [a.reshape(n, -1).astype(jnp.float32) for a in leaves], axis=1)
+    w_row = None if weights is None else weights.astype(jnp.float32)
+    xs = x if w_row is None else x * w_row[:, None]
+
+    w_b = None
+    if agg_obj.bucket_size > 1 and agg_obj.rule != "mean":
+        perm = info.get("perm")
+        if perm is None:
+            # pallas holds the operator on-chip; the permutation is a pure
+            # function of agg_key (engine key schedule), so recompute it
+            perm = jax.random.permutation(agg_key, n)
+        w_b = bucket_matrix(perm, n, agg_obj.bucket_size)
+        y = w_b @ xs
+    else:
+        y = xs
+    m = y.shape[0]
+
+    rule = agg_obj.rule
+    krum_scores = krum_selected = rfa_weights = rfa_residual = None
+    if rule == "mean":
+        bw = jnp.full((m,), 1.0 / m, jnp.float32)
+    elif rule in ("cm", "tm"):
+        # per-coordinate selection fractions via ranks of the (bucketed)
+        # stack the rule actually sorted, averaged over coordinates
+        r = jnp.argsort(jnp.argsort(y, axis=0), axis=0)
+        if rule == "cm":
+            if m % 2:
+                sel = (r == m // 2).astype(jnp.float32)
+            else:
+                sel = 0.5 * ((r == m // 2 - 1) | (r == m // 2)
+                             ).astype(jnp.float32)
+        else:
+            t = min(agg_obj.trim, (m - 1) // 2)
+            sel = ((r >= t) & (r < m - t)).astype(jnp.float32) / (m - 2 * t)
+        bw = jnp.mean(sel, axis=1)
+    elif rule == "rfa":
+        bw = rfa_weights = info["bucket_weights"]
+        rfa_residual = jnp.mean(jnp.sqrt(info["rfa_sq"] + agg_obj.eps))
+    else:                            # krum
+        bw = info["bucket_weights"]
+        krum_scores = info["krum_scores"]
+        krum_selected = jnp.asarray(info["krum_selected"], jnp.int32)
+
+    infl = bw if w_b is None else bw @ w_b
+    if w_row is not None:
+        infl = infl * w_row
+
+    agg_flat = jnp.concatenate(
+        [a.reshape(-1).astype(jnp.float32) for a in jax.tree.leaves(agg)])
+    dist = jnp.sqrt(jnp.sum((x - agg_flat[None, :]) ** 2, axis=1))
+
+    mask = byz_mask
+    if mask is None:
+        mask = (cfg.byz_mask() if cfg.n_byz
+                else jnp.zeros((n,), bool))
+    return RoundTrace(rule=rule, influence=infl, dist_to_agg=dist,
+                      bucket_weights=bw, byz_mask=mask,
+                      krum_scores=krum_scores, krum_selected=krum_selected,
+                      rfa_weights=rfa_weights, rfa_residual=rfa_residual)

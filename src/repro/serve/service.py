@@ -74,7 +74,12 @@ class ServeResult:
     n_params: int
     wall_s: float
     updates_per_s: float           # accepted ingests per wall second
-    fire_latencies_s: list         # per-fire wall latency (sync mode only)
+    fire_latencies_s: list         # per-fire wall latency (sync mode: every
+    # fire; free-running: every latency_sample_every-th fire is fenced)
+    staleness_hist: dict = dataclasses.field(default_factory=dict)
+    # tau -> count over every buffered entry of every fired round
+    traces: list = dataclasses.field(default_factory=list)
+    # host RoundTrace dicts, one per fired round (spec.trace runs only)
 
     @property
     def params(self):
@@ -91,12 +96,33 @@ class ServeResult:
         return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
                 "p99_ms": float(np.percentile(lat, 99) * 1e3)}
 
+    def staleness_percentiles(self) -> dict:
+        """Percentiles of the per-entry staleness distribution, expanded
+        from the histogram ({} before the first fire)."""
+        if not self.staleness_hist:
+            return {}
+        taus = np.repeat([int(t) for t in self.staleness_hist],
+                         [int(c) for c in self.staleness_hist.values()])
+        return {"staleness_p50": float(np.percentile(taus, 50)),
+                "staleness_p90": float(np.percentile(taus, 90)),
+                "staleness_worst": int(taus.max())}
+
+    def detection_summary(self, frac: float = 0.5) -> dict:
+        from repro.obs import detect
+        return detect.summarize(self.traces, frac)
+
     def to_dict(self) -> dict:
-        return {"spec": self.spec.to_dict(), "n_params": self.n_params,
-                "wall_s": self.wall_s, "updates_per_s": self.updates_per_s,
-                "stats": dict(self.stats),
-                **self.latency_percentiles(),
-                "history": self.history}
+        out = {"spec": self.spec.to_dict(), "n_params": self.n_params,
+               "wall_s": self.wall_s, "updates_per_s": self.updates_per_s,
+               "stats": dict(self.stats),
+               **self.latency_percentiles(),
+               **self.staleness_percentiles(),
+               "staleness_hist": {str(k): int(v) for k, v in
+                                  sorted(self.staleness_hist.items())},
+               "history": self.history}
+        if self.traces:
+            out["detection"] = self.detection_summary()
+        return out
 
 
 class AggregationService:
@@ -117,6 +143,8 @@ class AggregationService:
         self._commit_jit = jax.jit(self._commit_impl)
         self._fire_jit = jax.jit(self._fire_impl,
                                  static_argnames=("weighted",))
+        self._fire_traced_jit = jax.jit(self._fire_traced_impl,
+                                        static_argnames=("weighted",))
 
     # -- jitted bodies ------------------------------------------------------
     def _flush_impl(self, state, batch, anchor, k_step):
@@ -173,6 +201,22 @@ class AggregationService:
                      "opt_state": new_opt, "step": state["step"] + 1}
         return new_state, jnp.sqrt(tu.tree_norm_sq(g))
 
+    def _fire_traced_impl(self, state, buf, byz_mask, weights, k_attack,
+                          k_agg, *, weighted):
+        """Telemetry twin of ``_fire_impl`` (spec.trace): the identical
+        aggregation calls plus the fired round's RoundTrace — influence /
+        distances over the BUFFERED entries, byz_mask the per-fire one."""
+        from repro.obs import trace as obs_trace
+        cfg = self.cfg
+        g, rt = obs_trace.traced_ingest_message_phase(
+            cfg, k_attack, k_agg, buf, byz_mask=byz_mask,
+            weights=weights if weighted else None)
+        new_params, new_opt = engine.param_update(
+            cfg, state["params"], g, state["opt_state"])
+        new_state = {**state, "params": new_params, "g": g,
+                     "opt_state": new_opt, "step": state["step"] + 1}
+        return new_state, jnp.sqrt(tu.tree_norm_sq(g)), rt
+
     # -- the service state snapshot (checkpoint payload) --------------------
     def _snapshot(self, state, inflight, svc) -> dict:
         return {
@@ -198,22 +242,40 @@ class AggregationService:
             digest: bool = False,
             stop_after_events: Optional[int] = None,
             max_events: Optional[int] = None,
+            sink=None,
+            metrics_jsonl: Optional[str] = None,
+            latency_sample_every: int = 8,
             verbose: bool = False) -> ServeResult:
         """Drive the service for ``rounds`` fired rounds.
 
         ``sync_each_fire`` blocks on every fire (per-round latency
-        percentiles); off, aggregation overlaps ingestion (throughput).
+        percentiles); off, aggregation overlaps ingestion (throughput) and
+        every ``latency_sample_every``-th fire is fenced instead, so
+        free-running runs still report sampled latency percentiles (0
+        disables sampling).
         ``digest`` adds a sha1 of the post-fire params to each ledger
         record (forces a device sync — tests/audits only).
         ``stop_after_events`` aborts after consuming that many arrival
         events WITHOUT checkpointing — the crash-injection hook for the
         kill-and-resume test. ``resume`` reloads a checkpoint prefix and
         replays the arrival stream from its cursor.
+        ``sink`` / ``metrics_jsonl``: a ``repro.obs.sink.MetricSink`` (and/
+        or a JSONL stream path). In-loop the service emits only host-side
+        events — per-fire buffer-occupancy gauge, per-reason rejection
+        counters, spans for fenced fires; the per-round {"type": "round"}
+        and {"type": "trace"} events are flushed after the final sync so
+        telemetry never forces an extra device fence mid-stream.
         """
         spec = self.spec
         rounds = spec.rounds if rounds is None else int(rounds)
         exp = self.exp
         n, K = self.n, self.k
+        own_jsonl = None
+        if metrics_jsonl:
+            from repro.obs.sink import FanoutSink, JsonlSink
+            own_jsonl = JsonlSink(metrics_jsonl)
+            sink = (FanoutSink(sink, own_jsonl) if sink is not None
+                    else own_jsonl)
 
         key = jax.random.PRNGKey(spec.seed)
         k_init, k_run = jax.random.split(key)
@@ -291,9 +353,31 @@ class AggregationService:
         history: list = []
         fire_lat: list = []
         redispatch: list = []
+        stale_hist: dict = {}
+        dev_traces: list = []      # device RoundTraces; host-side at the end
+        occ_sum = 0
+        occ_n = 0
+
+        def _finish(result: "ServeResult") -> "ServeResult":
+            """Flush the per-round / trace events (post-sync, so the floats
+            exist) and close any sink this call opened."""
+            if sink is not None:
+                for i, m in enumerate(result.history):
+                    sink.emit({"type": "round", **m})
+                    if i < len(result.traces):
+                        sink.emit({"type": "trace", "round": m["round"],
+                                   **result.traces[i]})
+                if result.staleness_hist:
+                    sink.emit({"type": "gauge", "name": "staleness_hist",
+                               "value": {str(k): int(v) for k, v in sorted(
+                                   result.staleness_hist.items())}})
+            if own_jsonl is not None:
+                own_jsonl.close()
+            return result
+
         if svc["version"] >= rounds:       # resumed a finished run
-            return self._result(history, state, buffer, svc, fire_lat,
-                                0.0, n_params)
+            return _finish(self._result(history, state, buffer, svc,
+                                        fire_lat, 0.0, n_params))
         start_cursor = svc["cursor"]
         start_round = svc["version"]
         events = self.arrival_process().events(start=start_cursor)
@@ -327,8 +411,12 @@ class AggregationService:
                         ev.seq > buffer.last_accepted[ev.client] and \
                         not buffer.in_buffer[ev.client]:
                     flush()                        # lazy batched dispatch
-                if buffer.offer(ev.client, ev.seq, svc["disp_version"]
-                                [ev.client], inflight) and buffer.full():
+                offered = buffer.offer(ev.client, ev.seq,
+                                       svc["disp_version"][ev.client],
+                                       inflight)
+                occ_sum += buffer.count            # occupancy sample per
+                occ_n += 1                         # offer (host ints only)
+                if offered and buffer.full():
                     if np.any(svc["pending"]):
                         flush()                    # params advance next
                     buf, clients, versions, _ = buffer.swap()
@@ -342,13 +430,47 @@ class AggregationService:
                     k_step, _ = k_version(r)
                     ks = jax.random.split(k_step, len(self.est.rng))
                     keys = dict(zip(self.est.rng, ks))
+                    for t in tau.tolist():
+                        stale_hist[int(t)] = stale_hist.get(int(t), 0) + 1
+                    # fence this fire? always in sync mode; every Nth fire
+                    # in free-running mode (sampled latency percentiles)
+                    fence = sync_each_fire or (
+                        latency_sample_every and (r - start_round)
+                        % max(latency_sample_every, 1) == 0)
                     t_fire = time.perf_counter()
-                    state, g_norm = self._fire_jit(
-                        state, buf, byz_mask, w, keys["attack"],
-                        keys["agg"], weighted=weighted)
-                    if sync_each_fire:
+                    if spec.trace:
+                        state, g_norm, rt = self._fire_traced_jit(
+                            state, buf, byz_mask, w, keys["attack"],
+                            keys["agg"], weighted=weighted)
+                        dev_traces.append(rt)
+                    else:
+                        state, g_norm = self._fire_jit(
+                            state, buf, byz_mask, w, keys["attack"],
+                            keys["agg"], weighted=weighted)
+                    if fence:
                         jax.block_until_ready(state["params"])
-                        fire_lat.append(time.perf_counter() - t_fire)
+                        lat = time.perf_counter() - t_fire
+                        fire_lat.append(lat)
+                        if sink is not None:
+                            sink.emit({"type": "span", "name": "fire",
+                                       "round": r,
+                                       "wall_s": round(lat, 6),
+                                       "fenced": True})
+                    if sink is not None:
+                        sink.emit({"type": "gauge",
+                                   "name": "buffer_occupancy",
+                                   "round": r,
+                                   "value": round(occ_sum / max(occ_n, 1),
+                                                  4)})
+                        for cname in ("accepted", "rej_replay",
+                                      "rej_dup_client"):
+                            sink.emit({"type": "counter", "name": cname,
+                                       "round": r,
+                                       "value": int(buffer.stats[cname])})
+                        sink.emit({"type": "counter", "name": "dropped",
+                                   "round": r, "value": int(svc["dropped"])})
+                    occ_sum = 0
+                    occ_n = 0
                     svc["version"] = r + 1
                     end_segment()                  # contributors redispatch
                     m = {"round": r, "t_virtual": float(ev.t),
@@ -387,8 +509,10 @@ class AggregationService:
             if stop_after_events is not None and \
                     svc["cursor"] - start_cursor >= stop_after_events:
                 # simulated crash: no checkpoint, state as-is
-                return self._result(history, state, buffer, svc, fire_lat,
-                                    time.time() - t0, n_params)
+                return _finish(self._result(
+                    history, state, buffer, svc, fire_lat,
+                    time.time() - t0, n_params, stale_hist=stale_hist,
+                    dev_traces=dev_traces))
             if svc["cursor"] - start_cursor > budget:
                 raise RuntimeError(
                     f"consumed {svc['cursor'] - start_cursor} events "
@@ -404,22 +528,38 @@ class AggregationService:
         for m in history:
             m["loss"] = float(m["loss"])
             m["g_norm"] = float(m["g_norm"])
-        return self._result(history, state, buffer, svc, fire_lat, wall,
-                            n_params)
+        return _finish(self._result(history, state, buffer, svc, fire_lat,
+                                    wall, n_params, stale_hist=stale_hist,
+                                    dev_traces=dev_traces))
 
     def _result(self, history, state, buffer, svc, fire_lat, wall,
-                n_params) -> ServeResult:
+                n_params, stale_hist=None, dev_traces=None) -> ServeResult:
         for m in history:
             if not isinstance(m.get("loss"), float):
                 m["loss"] = float(m["loss"])
                 m["g_norm"] = float(m["g_norm"])
+        traces: list = []
+        if dev_traces:
+            # one host materialization pass, after the final sync — the
+            # in-loop fire path never fenced for telemetry
+            from repro.obs import detect as obs_detect
+            from repro.obs import trace as obs_trace
+            for m, rt in zip(history, dev_traces):
+                th = obs_trace.to_host(rt)
+                det = obs_detect.detection_metrics(th)
+                m["detect_precision"] = det["precision"]
+                m["detect_recall"] = det["recall"]
+                m["byz_leakage"] = det["byz_leakage"]
+                m["n_filtered"] = det["n_filtered"]
+                traces.append(th)
         stats = {**buffer.stats, "dropped": svc["dropped"],
                  "events": svc["cursor"], "rounds": svc["version"]}
         return ServeResult(
             spec=self.spec, history=history, state=state, stats=stats,
             n_params=n_params, wall_s=wall,
             updates_per_s=buffer.stats["accepted"] / max(wall, 1e-9),
-            fire_latencies_s=fire_lat)
+            fire_latencies_s=fire_lat, staleness_hist=stale_hist or {},
+            traces=traces)
 
     def arrival_process(self):
         return make_arrivals(self.spec)

@@ -1,0 +1,284 @@
+"""Observability invariants (repro.obs, DESIGN.md §5).
+
+The load-bearing guarantees:
+
+* the telemetry twin is FREE on the trajectory: trace=True finishes with
+  bit-identical engine state to trace=False on every backend x rule cell
+  (the traced aggregate runs through the identical backend calls);
+* the OFF path is untouched: the untraced step's jaxpr is canonically
+  identical whether or not the spec enables tracing, and the traced twin
+  is a strict superset (its diagnostics only ADD equations);
+* rule intermediates are faithful: Krum's recorded selection/scores and
+  RFA's Weiszfeld weights reproduce the Aggregator oracle, and
+  ``influence`` actually reconstructs the aggregate (infl @ sent == agg);
+* detection metrics and the MetricSink protocol behave per contract,
+  including the fail-closed JSONL verification CI gates on.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, build
+from repro.core import get_aggregator
+from repro.core.byz_vr_marina import ByzVRMarinaConfig
+from repro.obs import detect
+from repro.obs import trace as obs_trace
+from repro.obs.sink import (FanoutSink, JsonlSink, RingSink, TagSink, span,
+                            verify_jsonl)
+from tests._jaxpr_scan import iter_eqns
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _spec(agg_mode, rule, *, method="marina", attack="ALIE", trace=False):
+    return RunSpec(task="logreg", method=method, n_workers=8, n_byz=2,
+                   attack=attack, aggregator=rule,
+                   bucket_size=2 if rule != "mean" else 0,
+                   agg_mode=agg_mode, steps=6, seed=3, trace=trace,
+                   data_kwargs={"dim": 12, "n_samples": 64,
+                                "batch_size": 8})
+
+
+def _run_steps(exp, traced, steps=6):
+    """The runner's exact key schedule, returning (state, traces)."""
+    k_init, k_run = jax.random.split(jax.random.PRNGKey(exp.spec.seed))
+    params = exp.init_params(k_init)
+    state = exp.method.init(params, exp.anchor(0), k_run)
+    fn = jax.jit(exp.method.step_traced if traced else exp.method.step)
+    traces = []
+    for it in range(steps):
+        k_step, k_batch = jax.random.split(
+            jax.random.fold_in(k_run, it + 1))
+        state, metrics = fn(state, exp.minibatch(it, k_batch),
+                            exp.anchor(it), k_step)
+        traces.append(metrics.pop("trace", None))
+    return state, traces
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: the telemetry twin never perturbs the trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg_mode", ["gspmd", "pallas"])
+@pytest.mark.parametrize("rule", ["mean", "cm", "rfa", "krum"])
+def test_traced_trajectory_bit_identical(agg_mode, rule):
+    exp = build(_spec(agg_mode, rule))
+    s_off, _ = _run_steps(exp, traced=False)
+    s_on, traces = _run_steps(exp, traced=True)
+    for a, b in zip(jax.tree.leaves(s_off), jax.tree.leaves(s_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # every round produced a populated, finite trace
+    for rt in traces:
+        assert rt is not None and rt.rule == rule
+        infl = np.asarray(rt.influence)
+        assert infl.shape == (8,) and np.isfinite(infl).all()
+        assert abs(infl.sum() - 1.0) < 1e-4
+        assert np.isfinite(np.asarray(rt.dist_to_agg)).all()
+        assert np.asarray(rt.byz_mask).sum() == 2
+        if rule == "krum":
+            assert int(rt.krum_selected) >= 0
+        if rule == "rfa":
+            assert float(rt.rfa_residual) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# OFF path untouched: jaxpr pin
+# ---------------------------------------------------------------------------
+
+def _canon_eqns(fn, args):
+    """Canonical (primitive, in-avals, out-avals) sequence — stable across
+    processes, unlike str(jaxpr) var names (see tests/_jaxpr_scan.py)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return [(e.primitive.name,
+             tuple(str(v.aval) for v in e.invars),
+             tuple(str(v.aval) for v in e.outvars))
+            for e in iter_eqns(closed.jaxpr)]
+
+
+@pytest.mark.parametrize("agg_mode", ["gspmd", "pallas"])
+def test_off_path_jaxpr_unchanged_by_trace_flag(agg_mode):
+    exp_off = build(_spec(agg_mode, "krum", trace=False))
+    exp_on = build(_spec(agg_mode, "krum", trace=True))
+    k_init, k_run = jax.random.split(jax.random.PRNGKey(3))
+    params = exp_off.init_params(k_init)
+    state = exp_off.method.init(params, exp_off.anchor(0), k_run)
+    k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, 1))
+    args = (state, exp_off.minibatch(0, k_batch), exp_off.anchor(0), k_step)
+    base = _canon_eqns(exp_off.method.step, args)
+    # enabling spec.trace must not change the untraced step's jaxpr
+    assert _canon_eqns(exp_on.method.step, args) == base
+    # ... and the telemetry twin only ADDS equations
+    assert len(_canon_eqns(exp_on.method.step_traced, args)) > len(base)
+
+
+# ---------------------------------------------------------------------------
+# rule intermediates vs the Aggregator oracle
+# ---------------------------------------------------------------------------
+
+def _cand(n=8, d=6):
+    kw, kb = jax.random.split(KEY)
+    return {"w": jax.random.normal(kw, (n, d), jnp.float32),
+            "b": jax.random.normal(kb, (n,), jnp.float32)}
+
+
+def _flat(tree, n=None):
+    leaves = jax.tree.leaves(tree)
+    if n is None:                        # single vector
+        return np.concatenate([np.asarray(a, np.float64).ravel()
+                               for a in leaves])
+    return np.concatenate([np.asarray(a, np.float64).reshape(n, -1)
+                           for a in leaves], axis=1)
+
+
+@pytest.mark.parametrize("agg_mode", ["gspmd", "pallas"])
+def test_krum_trace_matches_oracle(agg_mode):
+    cfg = ByzVRMarinaConfig(n_workers=8,
+                            aggregator=get_aggregator("krum"),
+                            agg_mode=agg_mode)
+    cand = _cand()
+    k_att, k_agg = jax.random.split(KEY)
+    agg, rt = obs_trace.traced_ingest_message_phase(cfg, k_att, k_agg, cand)
+    sel = int(rt.krum_selected)
+    scores = np.asarray(rt.krum_scores)
+    assert sel == int(np.argmin(scores))
+    # bucketless Krum returns a row verbatim; the one-hot says which
+    np.testing.assert_allclose(np.asarray(rt.bucket_weights),
+                               np.eye(8)[sel], atol=1e-6)
+    np.testing.assert_allclose(_flat(agg), _flat(cand, 8)[sel], atol=1e-5)
+    # the untraced rule agrees with the traced twin's aggregate
+    oracle = cfg.aggregator.tree(k_agg, cand)
+    np.testing.assert_allclose(_flat(agg), _flat(oracle), atol=1e-6)
+
+
+@pytest.mark.parametrize("agg_mode", ["gspmd", "pallas"])
+def test_rfa_trace_matches_oracle(agg_mode):
+    cfg = ByzVRMarinaConfig(n_workers=8,
+                            aggregator=get_aggregator("rfa", bucket_size=2),
+                            agg_mode=agg_mode)
+    cand = _cand()
+    k_att, k_agg = jax.random.split(KEY)
+    agg, rt = obs_trace.traced_ingest_message_phase(cfg, k_att, k_agg, cand)
+    w = np.asarray(rt.rfa_weights)
+    assert w.shape == (4,) and (w >= 0).all()
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+    np.testing.assert_array_equal(w, np.asarray(rt.bucket_weights))
+    assert float(rt.rfa_residual) >= 0.0
+    # influence reconstructs the aggregate: agg == infl @ sent
+    infl = np.asarray(rt.influence, np.float64)
+    np.testing.assert_allclose(infl @ _flat(cand, 8), _flat(agg),
+                               atol=2e-5)
+    oracle = cfg.aggregator.tree(k_agg, cand)
+    np.testing.assert_allclose(_flat(agg), _flat(oracle), atol=1e-6)
+
+
+def test_trace_rejects_unsupported_backends():
+    with pytest.raises(ValueError, match="all_to_all"):
+        RunSpec(trace=True, agg_mode="all_to_all")
+    with pytest.raises(ValueError, match="sparse_support"):
+        RunSpec(trace=True, agg_mode="sparse_support")
+
+
+# ---------------------------------------------------------------------------
+# detection metrics
+# ---------------------------------------------------------------------------
+
+def test_detection_metrics_handbuilt():
+    t = {"influence": [0.0, 0.05, 0.475, 0.475],
+         "byz_mask": [True, True, False, False]}
+    m = detect.detection_metrics(t)          # threshold = 0.5/4 = 0.125
+    assert m["n_filtered"] == 2
+    assert m["precision"] == 1.0 and m["recall"] == 1.0
+    assert abs(m["byz_leakage"] - 0.05) < 1e-12
+
+    # false accusation: an honest worker below threshold
+    t2 = {"influence": [0.3, 0.05, 0.35, 0.3],
+          "byz_mask": [True, False, False, False]}
+    m2 = detect.detection_metrics(t2)
+    assert m2["n_filtered"] == 1
+    assert m2["precision"] == 0.0 and m2["recall"] == 0.0
+    assert abs(m2["byz_leakage"] - 0.3) < 1e-12
+
+    # empty-denominator conventions
+    clean = detect.detection_metrics(
+        {"influence": [0.5, 0.5], "byz_mask": [False, False]})
+    assert clean["precision"] == 1.0 and clean["recall"] == 1.0
+    assert clean["byz_leakage"] == 0.0
+
+    s = detect.summarize([t, t2])
+    assert s["rounds"] == 2
+    assert abs(s["precision"] - 0.5) < 1e-12
+    assert detect.summarize([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+def test_sink_protocol(tmp_path):
+    ring = RingSink(capacity=4)
+    for i in range(6):
+        ring.emit({"type": "counter", "name": "c", "value": i})
+    assert len(ring.events) == 4                     # ring evicts oldest
+    assert [e["value"] for e in ring.by_name("c")] == [2, 3, 4, 5]
+
+    tagged = RingSink()
+    TagSink(tagged, run_id="cell-7").emit({"type": "gauge", "name": "g",
+                                           "value": 1.0})
+    assert tagged.events[0]["run_id"] == "cell-7"
+
+    path = str(tmp_path / "m.jsonl")
+    jl = JsonlSink(path)
+    fan = FanoutSink(jl, ring)
+    with span(fan, "work", round=0):
+        pass
+    fan.close()
+    assert ring.by_type("span")[0]["name"] == "work"
+    assert "wall_s" in json.loads(open(path).read().splitlines()[-1])
+
+
+def test_verify_jsonl_fail_closed(tmp_path):
+    ok = tmp_path / "ok.jsonl"
+    ok.write_text(json.dumps({"type": "round", "loss": 0.5}) + "\n"
+                  + json.dumps({"type": "trace", "influence": [0.5]}) + "\n")
+    counts = verify_jsonl(str(ok))
+    assert counts == {"round": 1, "trace": 1}
+
+    nan = tmp_path / "nan.jsonl"
+    nan.write_text(json.dumps({"type": "trace",
+                               "influence": [0.5, float("nan")]}) + "\n")
+    with pytest.raises(ValueError, match="non-finite"):
+        verify_jsonl(str(nan))
+
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        verify_jsonl(str(empty))
+
+
+# ---------------------------------------------------------------------------
+# runner integration: sink events + detection summary
+# ---------------------------------------------------------------------------
+
+def test_runner_emits_rounds_traces_and_detection(tmp_path):
+    ring = RingSink()
+    path = str(tmp_path / "run.jsonl")
+    res = build(_spec("gspmd", "krum", trace=True)).run(
+        log_every=2, sink=ring, metrics_jsonl=path)
+    rounds = ring.by_type("round")
+    assert rounds and all("detect_precision" in e for e in rounds)
+    tr = ring.by_type("trace")
+    assert len(tr) == len(res.traces) > 0
+    assert all(len(e["influence"]) == 8 for e in tr)
+    assert ring.by_name("run")[0]["type"] == "span"
+    det = res.detection_summary()
+    assert det["rounds"] == len(res.traces)
+    assert res.to_dict()["detection"] == det
+    assert all(math.isfinite(v) for v in
+               (det["precision"], det["recall"], det["byz_leakage"]))
+    # the JSONL fan-out carries the same stream and passes the CI gate
+    counts = verify_jsonl(path)
+    assert counts["round"] == len(rounds) and counts["trace"] == len(tr)

@@ -237,6 +237,64 @@ def test_kill_mid_buffer_and_resume_is_bit_identical(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# observability: sink events + staleness histogram (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def test_serve_sink_counters_and_occupancy_gauge():
+    from repro.obs.sink import RingSink
+    ring = RingSink()
+    spec = _chaos_spec(rounds=5)          # duplicates + dropout exercised
+    res = spec.build().run(sink=ring)
+
+    # per-reason rejection counters are cumulative snapshots at each fire;
+    # the final one must agree with the service's own stats
+    for cname in ("accepted", "rej_replay", "rej_dup_client", "dropped"):
+        vals = [e["value"] for e in ring.by_name(cname)]
+        assert len(vals) == res.stats["rounds"]
+        assert vals == sorted(vals)                  # monotone counts
+        assert vals[-1] == res.stats[cname]
+    assert res.stats["rej_dup_client"] + res.stats["rej_replay"] > 0
+
+    # the occupancy gauge samples the open half between fires: the mean
+    # occupancy of a K-sized buffer lives in (0, K]
+    occ = [e["value"] for e in ring.by_name("buffer_occupancy")]
+    assert len(occ) == res.stats["rounds"]
+    assert all(0.0 < v <= spec.buffer_size for v in occ)
+
+    # staleness histogram: one entry per aggregated update, percentiles
+    # and the serialized form agree with it
+    hist = res.staleness_hist
+    assert sum(hist.values()) == res.stats["rounds"] * spec.buffer_size
+    pct = res.staleness_percentiles()
+    assert pct["staleness_p50"] <= pct["staleness_p90"] \
+        <= pct["staleness_worst"] == max(hist)
+    d = res.to_dict()
+    assert d["staleness_hist"] == {str(k): v for k, v in sorted(
+        hist.items())}
+    assert ring.by_name("staleness_hist")[0]["value"] == d[
+        "staleness_hist"]
+
+
+def test_serve_traced_run_bit_identical_with_detection():
+    spec = _chaos_spec(rounds=4, aggregator="krum", bucket_size=0)
+    plain = spec.build().run()
+    traced = spec.replace(trace=True).build().run()
+    _assert_params_equal(plain.params, traced.params)
+    assert len(traced.traces) == traced.stats["rounds"]
+    for t in traced.traces:
+        assert t["rule"] == "krum"
+        assert len(t["influence"]) == spec.buffer_size
+        # staleness weighting scales rows before the rule, so influence
+        # sums to the aggregated rows' total weight, not exactly 1
+        assert 0.0 < sum(t["influence"]) <= 1.0 + 1e-4
+    det = traced.detection_summary()
+    assert det["rounds"] == len(traced.traces)
+    # traced history rows carry the detection readout
+    assert all("detect_precision" in m for m in traced.history)
+    assert plain.detection_summary() == {}
+
+
+# ---------------------------------------------------------------------------
 # spec validation
 # ---------------------------------------------------------------------------
 
