@@ -1,0 +1,96 @@
+"""Fault-guard overhead benchmark: steps/sec with the fail-closed guard ON
+vs OFF (repro.faults, DESIGN.md §6).
+
+For every {backend} x {rule} cell the same seeded logreg trajectory runs
+twice — ``fault_guard=False`` (the untouched hot path; the guard-OFF jaxpr
+is pinned unchanged by tests/test_faults.py) and ``fault_guard=True`` with
+a live FaultPlan injecting nan_grad into a fixed honest worker every round.
+Both runs are compile-warmed off the clock, so the ratio isolates the
+steady-state cost of (a) the per-round finiteness reduction over the
+candidate stack and (b) the masked aggregation epilogue (``jnp.where``
+select — never multiply — routed through ``tree_masked`` under gspmd and
+the ``valid`` operand of the fused kernel under pallas).
+
+Grid (ISSUE 9 satellite 5): {gspmd, pallas} x {cm, krum, rfa} ->
+``experiments/bench/BENCH_faults.json`` (uploaded by the CI chaos job).
+Methodology matches bench_obs.py: best-of-REPS of the post-compile loop.
+"""
+import json
+import os
+
+from benchmarks.common import ART_DIR, emit
+from repro.api import RunSpec
+
+BACKENDS = ("gspmd", "pallas")
+RULES = ("cm", "krum", "rfa")
+N_WORKERS = 16
+DIM = 512
+STEPS = 200
+LOG_EVERY = 10
+REPS = 5
+
+
+def _spec(mode: str, rule: str, guard: bool) -> RunSpec:
+    faults = {"seed": 7, "faults": [{"kind": "nan_grad", "prob": 1.0,
+                                     "workers": [N_WORKERS - 1]}]} \
+        if guard else {}
+    return RunSpec(
+        task="logreg", method="marina", n_workers=N_WORKERS,
+        n_byz=N_WORKERS // 8, attack="ALIE", aggregator=rule,
+        bucket_size=0, agg_mode=mode, steps=STEPS, lr=0.1,
+        faults=faults, fault_guard=guard,
+        data_kwargs={"dim": DIM, "n_samples": 256, "batch_size": 16})
+
+
+def _steps_per_s(spec: RunSpec) -> tuple:
+    exp = spec.build()
+    # warmup=True compiles off the runner's clock; the last history entry's
+    # wall_s is pure post-compile loop time. Best-of-REPS because a single
+    # 200-step pass on this small problem is noisy.
+    best, result = 0.0, None
+    for _ in range(REPS):
+        result = exp.run(log_every=LOG_EVERY, warmup=True)
+        best = max(best, STEPS / max(result.history[-1]["wall_s"], 1e-9))
+    return best, result
+
+
+def run():
+    import math
+    payload = {"n_workers": N_WORKERS, "dim": DIM, "steps": STEPS,
+               "log_every": LOG_EVERY, "cells": []}
+    for mode in BACKENDS:
+        for rule in RULES:
+            name = f"faults/{mode}/{rule}"
+            try:
+                off_sps, off_res = _steps_per_s(_spec(mode, rule, False))
+                on_sps, on_res = _steps_per_s(_spec(mode, rule, True))
+            except Exception as e:  # noqa: BLE001 — report, keep grid
+                emit(name, 0.0, f"FAILED {type(e).__name__}: {e}")
+                continue
+            overhead = (off_sps / max(on_sps, 1e-9) - 1.0) * 100.0
+            # the guarded run absorbs a round-constant NaN injection: it
+            # must stay finite even though a worker is poisoned every step
+            finite = math.isfinite(on_res.history[-1]["loss"])
+            cell = {
+                "agg_mode": mode, "rule": rule,
+                "steps_per_s_off": round(off_sps, 1),
+                "steps_per_s_on": round(on_sps, 1),
+                "overhead_pct": round(overhead, 2),
+                "guarded_final_finite": finite,
+                "spec": _spec(mode, rule, True).to_dict(),
+            }
+            payload["cells"].append(cell)
+            emit(name,
+                 1e6 / max(on_sps, 1e-9),   # us per guarded step
+                 f"off={cell['steps_per_s_off']}sps "
+                 f"on={cell['steps_per_s_on']}sps "
+                 f"overhead={cell['overhead_pct']}% "
+                 f"finite={finite}")
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "BENCH_faults.json"), "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -20,6 +20,10 @@
             twin ON vs OFF, {gspmd, pallas} x {mean, krum, rfa} ->
             experiments/bench/BENCH_obs.json (CI bench job; bar is
             <= 5% overhead at log_every=10)
+  faults    (system) fault-guard overhead: steps/sec with the fail-closed
+            guard ON (live nan_grad plan) vs OFF, {gspmd, pallas} x
+            {cm, krum, rfa} -> experiments/bench/BENCH_faults.json
+            (CI chaos job)
 
 Prints ``name,us_per_call,derived`` CSV. Select a subset with argv, e.g.
 ``python -m benchmarks.run fig1 roofline``.
@@ -30,9 +34,10 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_ablations, bench_aggregators,
-                            bench_compressors, bench_fig1, bench_fig8,
-                            bench_obs, bench_roofline, bench_serve,
-                            bench_sweep, bench_table2, bench_trainer)
+                            bench_compressors, bench_faults, bench_fig1,
+                            bench_fig8, bench_obs, bench_roofline,
+                            bench_serve, bench_sweep, bench_table2,
+                            bench_trainer)
     suites = {
         "ablate": bench_ablations.run,
         "sweep": bench_sweep.run,
@@ -41,6 +46,7 @@ def main() -> None:
         "compress": bench_compressors.run,
         "serve": bench_serve.run,
         "obs": bench_obs.run,
+        "faults": bench_faults.run,
         "fig1": bench_fig1.run,
         "table2": bench_table2.run,
         "fig8": bench_fig8.run,

@@ -332,6 +332,11 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
                 m["detect_recall"] = det["recall"]
                 m["byz_leakage"] = det["byz_leakage"]
                 m["n_filtered"] = det["n_filtered"]
+                fm = obs_detect.fault_metrics(trace_host)
+                if fm:                 # chaos rounds: guard-vs-injected
+                    m["fault_precision"] = fm["fault_precision"]
+                    m["fault_recall"] = fm["fault_recall"]
+                    m["n_fault_rejected"] = fm["n_rejected"]
             if do_log:
                 history.append(m)
                 if trace_host is not None:

@@ -32,7 +32,8 @@ from repro.core.engine import AGG_BACKENDS
 SCHEMA_VERSION = 1
 
 _KWARGS_FIELDS = ("method_kwargs", "attack_kwargs", "aggregator_kwargs",
-                  "compressor_kwargs", "optimizer_kwargs", "data_kwargs")
+                  "compressor_kwargs", "optimizer_kwargs", "data_kwargs",
+                  "faults")
 
 
 def resolve_agg_mode(mode: str) -> str:
@@ -76,6 +77,12 @@ class RunSpec:
     # (bit-identical trajectory) and history rounds carry RoundTrace +
     # detection metrics
     trace: bool = False
+    # chaos layer (repro.faults, DESIGN.md §6): ``faults`` is a FaultPlan
+    # payload ({"seed": ..., "faults": [{"kind": ..., "prob": ...,
+    # "workers": [...]}, ...]}; {} = no plan), ``fault_guard`` turns on the
+    # fail-closed non-finite masking in the aggregation prologue
+    faults: dict = dataclasses.field(default_factory=dict)
+    fault_guard: bool = False
     # per-component kwargs (JSON scalars only)
     method_kwargs: dict = dataclasses.field(default_factory=dict)
     attack_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -155,6 +162,26 @@ class RunSpec:
                 "stacked candidates in one place, so per-worker influence / "
                 "distance diagnostics have nothing to read. Use 'gspmd' or "
                 "'pallas'")
+        if self.faults or self.fault_guard:
+            from repro.faults.plan import as_plan
+            plan = as_plan(self.faults)    # raises on unknown kinds/keys
+            if self.fault_guard and self.agg_mode not in ("gspmd", "pallas"):
+                raise ValueError(
+                    f"fault_guard=True is not supported under agg_mode="
+                    f"{self.agg_mode!r}: the fail-closed masking lives in "
+                    "the aggregation prologue of the gspmd and pallas "
+                    "backends (DESIGN.md §6)")
+            if plan is not None:
+                f = plan.worst_case_faulty(self.n_workers)
+                if f and 2 * (self.n_byz + f) >= self.n_workers:
+                    warnings.warn(
+                        f"fault plan can hit {f} worker(s) on top of "
+                        f"n_byz={self.n_byz}: worst-case 2*(byz+faulty) = "
+                        f"{2 * (self.n_byz + f)} >= n_workers="
+                        f"{self.n_workers}, outside the guard's delta "
+                        "budget — the drop-faulty-workers equivalence is "
+                        "not guaranteed this round",
+                        stacklevel=2)
         if self.method == "marina" and self.agg_mode == "sparse_support":
             if (self.compressor != "randk"
                     or not self.compressor_kwargs.get("common_randomness")):
@@ -239,11 +266,14 @@ class RunSpec:
         engine-facing config; distributed extras like mesh/grad_specs are
         added by the caller via ``dataclasses.replace``)."""
         from repro.core.byz_vr_marina import ByzVRMarinaConfig
+        from repro.faults.plan import as_plan
         agg_kw = {"n_byz": self.n_byz, **self.aggregator_kwargs}
         if self.aggregator == "mean":
             agg_kw.pop("n_byz")          # mean ignores it; keep cfg minimal
         opt_kw = {"lr": self.lr, **self.optimizer_kwargs}
         return ByzVRMarinaConfig(
+            fault_plan=as_plan(self.faults),
+            fault_guard=self.fault_guard,
             n_workers=self.n_workers,
             n_byz=self.n_byz,
             p=self.p,

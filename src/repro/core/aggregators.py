@@ -63,6 +63,56 @@ def _bucketize_perm(x, perm, s: int):
 
 
 # ---------------------------------------------------------------------------
+# masked primitives (the fault-guard oracle; repro.faults.guard supplies the
+# validity masks and the renormalized bucket operator)
+# ---------------------------------------------------------------------------
+
+def _row_mask(valid, a):
+    return valid.reshape((-1,) + (1,) * (a.ndim - 1))
+
+
+def _sanitize_rows(xs, valid):
+    """Zero out invalid rows — NEVER multiply (0·NaN = NaN); select."""
+    return jax.tree.map(
+        lambda a: jnp.where(_row_mask(valid, a), a, jnp.zeros((), a.dtype)),
+        xs)
+
+
+def masked_mean(x, valid):
+    """Mean over valid rows only (invalid rows contribute nothing)."""
+    cnt = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    xc = jnp.where(_row_mask(valid, x), x, jnp.zeros((), x.dtype))
+    return jnp.sum(xc, axis=0) / cnt.astype(x.dtype)
+
+
+def masked_coord_median(x, valid):
+    """Coordinate-wise median over the valid rows: invalid rows fill with
+    +inf so the sort pushes them past every real entry, then the two middle
+    ranks of the valid count c are gathered at traced indices. For odd c
+    the two ranks coincide and 0.5·(v + v) == v bitwise."""
+    c = jnp.sum(valid.astype(jnp.int32))
+    xs = jnp.sort(jnp.where(_row_mask(valid, x),
+                            x, jnp.asarray(jnp.inf, x.dtype)), axis=0)
+    lo = jnp.take(xs, (c - 1) // 2, axis=0)
+    hi = jnp.take(xs, c // 2, axis=0)
+    return 0.5 * (lo + hi)
+
+
+def masked_coord_trimmed_mean(x, valid, trim: int):
+    """Trimmed mean over the valid rows: sort with +inf fill, keep ranks
+    [t, c - t) of the valid count c, t = min(trim, (c-1)//2)."""
+    m = x.shape[0]
+    c = jnp.sum(valid.astype(jnp.int32))
+    t = jnp.minimum(trim, (c - 1) // 2)
+    xs = jnp.sort(jnp.where(_row_mask(valid, x),
+                            x, jnp.asarray(jnp.inf, x.dtype)), axis=0)
+    rank = jnp.arange(m).reshape((-1,) + (1,) * (x.ndim - 1))
+    keep = (rank >= t) & (rank < c - t)
+    kept = jnp.where(keep, xs, jnp.zeros((), x.dtype))
+    return jnp.sum(kept, axis=0) / jnp.maximum(c - 2 * t, 1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # tree helpers
 # ---------------------------------------------------------------------------
 
@@ -219,6 +269,85 @@ class Aggregator:
             raise ValueError(self.rule)
         info.update(extra)
         return z, info
+
+    # -- masked (fault-guarded) tree path ------------------------------------
+    def tree_masked(self, key, xs, valid, axis_name=None, return_info=False):
+        """Guarded twin of ``tree``: rows with ``valid[i] == False`` get
+        exactly zero aggregation weight — the oracle for "drop these
+        workers explicitly". Invalid rows are select-zeroed (never
+        multiplied) before any arithmetic, so NaN/inf rows cannot poison
+        the aggregate; bucketing renormalizes each bucket over its valid
+        members (``faults.guard.masked_bucket_matrix``), and a bucket with
+        no valid members is itself dropped. This is a separate method (not
+        a ``valid=`` default) so the unguarded path's jaxpr stays pinned
+        byte-identical."""
+        from repro.faults.guard import masked_bucket_matrix
+        n = jax.tree.leaves(xs)[0].shape[0]
+        info = {"perm": None}
+        if self.bucket_size > 1 and self.rule != "mean":
+            perm = jax.random.permutation(key, n)
+            info["perm"] = perm
+            w_mat, bvalid = masked_bucket_matrix(perm, n, self.bucket_size,
+                                                 valid)
+            xs = _sanitize_rows(xs, valid)
+            xs = jax.tree.map(
+                lambda a: jnp.einsum("bn,n...->b...", w_mat,
+                                     a.astype(jnp.float32)).astype(a.dtype),
+                xs)
+        else:
+            bvalid = valid
+            xs = _sanitize_rows(xs, valid)
+        if self.rule == "mean":
+            agg = jax.tree.map(lambda a: masked_mean(a, bvalid), xs)
+        elif self.rule == "cm":
+            agg = jax.tree.map(lambda a: masked_coord_median(a, bvalid), xs)
+        elif self.rule == "tm":
+            agg = jax.tree.map(
+                lambda a: masked_coord_trimmed_mean(a, bvalid, self.trim), xs)
+        elif self.rule == "rfa":
+            agg, extra = self._rfa_masked(xs, bvalid, axis_name)
+            info.update(extra)
+        elif self.rule == "krum":
+            agg, extra = self._krum_masked(xs, bvalid, axis_name)
+            info.update(extra)
+        else:
+            raise ValueError(self.rule)
+        return (agg, info) if return_info else agg
+
+    def _rfa_masked(self, xs, valid, axis_name=None):
+        """Weiszfeld over the valid (pre-sanitized) rows: invalid rows get
+        zero weight at every iteration and the init is the valid mean."""
+        v = valid.astype(jnp.float32)
+        z = jax.tree.map(lambda a: masked_mean(a, valid), xs)
+        w = v / jnp.maximum(jnp.sum(v), 1.0)
+        for _ in range(self.iters):
+            sq = _tree_sqdist_to(xs, z, axis_name)
+            w = jnp.where(valid, 1.0 / jnp.sqrt(sq + self.eps), 0.0)
+            w = w / jnp.maximum(jnp.sum(w), 1e-30)
+            z = _tree_weighted_sum(w, xs)
+        sq_t = _tree_sqdist_to(xs, z, axis_name)
+        return z, {"bucket_weights": w, "rfa_sq": sq_t}
+
+    def _krum_masked(self, xs, valid, axis_name=None):
+        """Krum over the valid rows: invalid rows/columns are +inf in the
+        distance matrix, the neighbour count tracks the valid count c
+        (k = max(c - n_byz - 2, 1)), and invalid rows can never win."""
+        n = jax.tree.leaves(xs)[0].shape[0]
+        d2 = _tree_pair_sqdists(xs, axis_name)
+        pair_ok = valid[:, None] & valid[None, :]
+        d2 = jnp.where(pair_ok, d2, jnp.inf)
+        d2 = d2 + jnp.diag(jnp.full((n,), jnp.inf, d2.dtype))
+        c = jnp.sum(valid.astype(jnp.int32))
+        k = jnp.maximum(c - self.n_byz - 2, 1)
+        srt = jnp.sort(d2, axis=1)
+        near = jnp.arange(n)[None, :] < k
+        scores = jnp.sum(jnp.where(near, srt, 0.0), axis=1)
+        scores = jnp.where(valid, scores, jnp.inf)
+        best = jnp.argmin(scores)
+        onehot = jax.nn.one_hot(best, n)
+        z = _tree_weighted_sum(onehot, xs)
+        return z, {"bucket_weights": onehot, "krum_scores": scores,
+                   "krum_selected": best}
 
     # -- norm-based rules (global distances) --------------------------------
     def _rfa_tree(self, key, xs, axis_name=None, return_info=False):

@@ -58,6 +58,9 @@ class ByzVRMarinaConfig:
     model_axis: Optional[str] = None
     mesh: Optional[object] = None        # jax Mesh (all_to_all mode)
     grad_specs: Optional[object] = None  # PartitionSpec pytree (all_to_all)
+    # system-fault chaos layer (repro.faults, DESIGN.md §6)
+    fault_plan: Optional[object] = None  # faults.FaultPlan or None
+    fault_guard: bool = False            # fail-closed non-finite masking
 
     def __post_init__(self):
         """Eager validation: a bad agg_mode / byzantine count used to
@@ -84,6 +87,15 @@ class ByzVRMarinaConfig:
                 f"{self.n_byz * s / self.n_workers:.2f} >= 1/2; Def. 2.1's "
                 "robustness guarantee is void — reduce bucket_size or n_byz",
                 stacklevel=2)
+        if self.fault_plan is not None:
+            f = self.fault_plan.worst_case_faulty(self.n_workers)
+            if f and 2 * (self.n_byz + f) >= self.n_workers:
+                warnings.warn(
+                    f"fault plan can corrupt up to f={f} workers on top of "
+                    f"n_byz={self.n_byz}: 2·(n_byz+f) >= n_workers, so the "
+                    "guarded δ budget is exceeded in the worst round — the "
+                    "masked aggregate may be unprotected (DESIGN.md §6)",
+                    stacklevel=2)
 
     def byz_mask(self):
         return jnp.arange(self.n_workers) < self.n_byz

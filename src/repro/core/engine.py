@@ -53,7 +53,7 @@ AGG_BACKENDS = ("gspmd", "all_to_all", "sparse_support", "pallas")
 # shared round primitives
 # ---------------------------------------------------------------------------
 
-def apply_attack(cfg, key, cand, mask=None):
+def apply_attack(cfg, key, cand, mask=None, stats_valid=None):
     """cand: stacked pytree (n, ...). Returns the vectors actually 'sent'.
 
     Omniscient attacks see the good workers' per-coordinate mean/std; NA/LF
@@ -61,14 +61,20 @@ def apply_attack(cfg, key, cand, mask=None):
     overrides ``cfg.byz_mask()`` for callers whose byzantine set is decided
     per call rather than by worker index — the buffered-async service
     (repro.serve) passes the byzantine flags of whatever updates happen to
-    sit in the fired buffer.
+    sit in the fired buffer. ``stats_valid`` (fault guard, DESIGN.md §6)
+    additionally restricts the attack's mean/std statistics to valid rows,
+    so a NaN-faulted honest worker cannot poison the omniscient attack the
+    way it cannot poison the masked aggregate.
     """
     if cfg.attack.name in ("NA", "LF") or (mask is None and cfg.n_byz == 0):
         return cand
     if mask is None:
         mask = cfg.byz_mask()
     good = ~mask
-    means, stds = tu.masked_mean_std(cand, good)
+    if stats_valid is not None:
+        good = good & stats_valid
+    means, stds = tu.masked_mean_std(cand, good,
+                                     sanitize=stats_valid is not None)
 
     def leaf(h, m, s):
         v = cfg.attack.apply(key, h, m, s).astype(h.dtype)
@@ -87,35 +93,48 @@ def stacked_grads(loss_fn, params, batches, keys):
     return jnp.mean(losses), grads
 
 
-def aggregate(cfg, key, sent):
-    """Backend dispatch for line 10 (g = ARAgg(sent_1, ..., sent_n))."""
+def aggregate(cfg, key, sent, valid=None):
+    """Backend dispatch for line 10 (g = ARAgg(sent_1, ..., sent_n)).
+
+    ``valid`` (fault guard) is the (n,) row-validity mask: invalid rows get
+    zero aggregation weight via the masked rule twins. ``None`` (the
+    default) is byte-for-byte the unguarded dispatch."""
     mode = cfg.agg_mode
     if mode in ("gspmd", "sparse_support"):
         # sparse_support only changes the MARINA VR branch (the estimator
         # aggregates on the shared support itself); dense aggregations
         # (init, full-grad rounds, other estimators) stay gspmd.
+        if valid is not None:
+            return cfg.aggregator.tree_masked(key, sent, valid)
         return cfg.aggregator.tree(key, sent)
     if mode == "all_to_all":
+        if valid is not None:
+            raise ValueError("fault_guard is not supported under "
+                             "agg_mode='all_to_all' (guarded backends: "
+                             "gspmd, pallas — DESIGN.md §6)")
         from repro.core.sharded_agg import tree_aggregate_all_to_all
         return tree_aggregate_all_to_all(cfg, key, sent)
     if mode == "pallas":
         from repro.core.sharded_agg import tree_aggregate_pallas
-        return tree_aggregate_pallas(cfg, key, sent)
+        return tree_aggregate_pallas(cfg, key, sent, valid=valid)
     # backstop only: ByzVRMarinaConfig/RunSpec validate agg_mode eagerly at
     # construction, so a hand-rolled cfg is the only way to get here.
     raise ValueError(f"agg_mode {mode!r} not in {AGG_BACKENDS}")
 
 
-def fusable_attack_ctx(cfg, cand, mask):
+def fusable_attack_ctx(cfg, cand, mask, stats_valid=None):
     """Build the ``sharded_agg.AttackCtx`` for a kernel-fusable omniscient
     attack (BF/ALIE/IPM via ``Attack.coord_apply``): the byzantine mask plus
     the good workers' per-coordinate mean/std trees, computed only when the
     attack reads them. Shared by ``message_phase``/``ingest_message_phase``
-    and the traced twins in ``repro.obs.trace``."""
+    and the traced twins in ``repro.obs.trace``. ``stats_valid`` (fault
+    guard) restricts the statistics to valid rows."""
     from repro.core.sharded_agg import AttackCtx
     means = stds = None
     if cfg.attack.needs_mean or cfg.attack.needs_std:
-        means, stds = tu.masked_mean_std(cand, ~mask)
+        good = ~mask if stats_valid is None else ~mask & stats_valid
+        means, stds = tu.masked_mean_std(cand, good,
+                                         sanitize=stats_valid is not None)
         if not cfg.attack.needs_std:
             stds = None
     return AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
@@ -136,10 +155,26 @@ def message_phase(cfg, attack_key, agg_key, cand):
     compressor declares a kernel wire format, under pallas): then even the
     candidates themselves never materialize — the kernels reconstruct
     base + decode(payload) per VMEM block (DESIGN.md §Wire).
+
+    The chaos layer (repro.faults, DESIGN.md §6) hooks in here: a
+    ``cfg.fault_plan`` injects message-site faults into ``cand`` before the
+    attack, and ``cfg.fault_guard`` reroutes to the fail-closed
+    ``guarded_message_phase``. Both are static Python branches — with the
+    plan unset and the guard off this function traces the identical jaxpr
+    it did before the faults layer existed (pinned in tests/test_faults).
     """
     from repro.core import wire
+    plan = getattr(cfg, "fault_plan", None)
     if isinstance(cand, wire.WireCandidates):
+        if plan is not None and plan.message_faults:
+            from repro.faults import inject
+            cand = inject.inject_wire(plan, attack_key, cand)
         return wire.wire_message_phase(cfg, attack_key, agg_key, cand)
+    if plan is not None and plan.tensor_faults:
+        from repro.faults import inject
+        cand = inject.inject_candidates(plan, attack_key, cand)
+    if getattr(cfg, "fault_guard", False):
+        return guarded_message_phase(cfg, attack_key, agg_key, cand)
     if cfg.agg_mode == "pallas":
         from repro.core.sharded_agg import tree_aggregate_pallas
         clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
@@ -150,6 +185,52 @@ def message_phase(cfg, attack_key, agg_key, cand):
             return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx)
     sent = apply_attack(cfg, attack_key, cand)
     return aggregate(cfg, agg_key, sent)
+
+
+def guarded_message_phase(cfg, attack_key, agg_key, cand, return_valid=False):
+    """Fail-closed twin of ``message_phase`` over dense candidates: rows
+    that are non-finite in any coordinate get zero aggregation weight and
+    count toward the δ budget (they are treated exactly as explicitly
+    dropped workers — the equivalence the fault-matrix test pins).
+
+    * attack statistics see only honest AND valid rows, matching the oracle
+      that never saw the faulted workers;
+    * a Byzantine row overwritten by the attack is valid again (the attack
+      value is finite by construction — it is a *statistical* adversary,
+      which is the aggregator's job, not the guard's);
+    * materializing paths re-check finiteness on the attacked tensor, so
+      even a non-finite attack output fails closed.
+
+    ``return_valid`` additionally returns the final (n,) validity mask (the
+    obs layer records ``~valid`` as the guard's detection next to the
+    injected ground truth).
+    """
+    from repro.faults import guard as fguard
+    valid_pre = fguard.finite_row_mask(cand)
+    clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
+    byz = None if clean else cfg.byz_mask()
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        if clean:
+            agg = tree_aggregate_pallas(cfg, agg_key, cand, valid=valid_pre)
+            return (agg, valid_pre) if return_valid else agg
+        if cfg.attack.coord_apply is not None:
+            ctx = fusable_attack_ctx(cfg, cand, byz, stats_valid=valid_pre)
+            # keep valid_pre: BF-style coord_apply transforms the candidate
+            # value, so a byz∩faulty row's attacked value is still NaN —
+            # crediting byz rows back as valid would let it through. The
+            # prologue orders attack-select -> valid-select, zeroing it.
+            agg = tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx,
+                                        valid=valid_pre)
+            return (agg, valid_pre) if return_valid else agg
+        sent = apply_attack(cfg, attack_key, cand, stats_valid=valid_pre)
+        valid = fguard.finite_row_mask(sent)
+        agg = tree_aggregate_pallas(cfg, agg_key, sent, valid=valid)
+        return (agg, valid) if return_valid else agg
+    sent = apply_attack(cfg, attack_key, cand, stats_valid=valid_pre)
+    valid = fguard.finite_row_mask(sent)
+    agg = aggregate(cfg, agg_key, sent, valid=valid)
+    return (agg, valid) if return_valid else agg
 
 
 # Trace-time routing for estimators that own their message phase (MARINA's
@@ -203,6 +284,23 @@ def ingest_message_phase(cfg, attack_key, agg_key, cand, *, byz_mask=None,
         return message_phase(cfg, attack_key, agg_key, cand)
     clean = cfg.attack.name in ("NA", "LF") or (byz_mask is None
                                                 and cfg.n_byz == 0)
+    if getattr(cfg, "fault_guard", False):
+        from repro.faults import guard as fguard
+        valid_pre = fguard.finite_row_mask(cand)
+        sent = apply_attack(cfg, attack_key, cand, mask=byz_mask,
+                            stats_valid=valid_pre)
+        valid = fguard.finite_row_mask(sent)
+        if cfg.agg_mode == "pallas":
+            from repro.core.sharded_agg import tree_aggregate_pallas
+            return tree_aggregate_pallas(cfg, agg_key, sent, weights=weights,
+                                         valid=valid)
+        if weights is not None:
+            w = weights.astype(jnp.float32)
+            sent = jax.tree.map(
+                lambda a: (a.astype(jnp.float32)
+                           * w.reshape((-1,) + (1,) * (a.ndim - 1))
+                           ).astype(a.dtype), sent)
+        return aggregate(cfg, agg_key, sent, valid=valid)
     if cfg.agg_mode == "pallas":
         from repro.core.sharded_agg import tree_aggregate_pallas
         if clean:

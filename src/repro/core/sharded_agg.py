@@ -267,7 +267,7 @@ def _segments(leaves, attack_ctx):
 
 
 def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
-                          return_info=False):
+                          return_info=False, valid=None):
     """Aggregate the stacked candidate pytree through the one-sweep Pallas
     kernels — every rule, no jnp fallback, zero per-round HBM copies:
 
@@ -293,6 +293,13 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
     coordinate rules return an empty info. The aggregate is produced by the
     identical kernel calls either way.
 
+    ``valid`` ((n,) bool, fault guard — DESIGN.md §6) switches every rule
+    to its masked twin: invalid rows are select-zeroed in the kernel
+    prologue, bucketing renormalizes over valid members
+    (``faults.guard.masked_bucket_matrix`` rides as the on-chip operator),
+    and selection/weighting tracks the valid count. ``None`` is
+    byte-for-byte the unguarded launch.
+
     fp32 accumulation, per-leaf output dtype preserved.
     """
     agg = cfg.aggregator
@@ -301,8 +308,16 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
 
     leaves, treedef = jax.tree.flatten(sent)
     n = leaves[0].shape[0]
-    w_mat = None
-    if agg.bucket_size > 1 and agg.rule != "mean":
+    w_mat = bvalid = None
+    if valid is not None:
+        if agg.bucket_size > 1 and agg.rule != "mean":
+            from repro.faults.guard import masked_bucket_matrix
+            perm = jax.random.permutation(key, n)
+            w_mat, bvalid = masked_bucket_matrix(perm, n, agg.bucket_size,
+                                                 valid)
+        else:
+            bvalid = valid
+    elif agg.bucket_size > 1 and agg.rule != "mean":
         perm = jax.random.permutation(key, n)
         w_mat = norm_agg.bucket_matrix(perm, n, agg.bucket_size)
     if weights is not None:
@@ -318,21 +333,21 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
     info: dict = {}
     if agg.rule in COORD_KERNEL_RULE:
         rule = COORD_KERNEL_RULE[agg.rule]
-        outs = [coord_kernel(xs, w_mat, mask, mu, sd, rule=rule,
-                             trim=agg.trim, attack_fn=attack_fn)
+        outs = [coord_kernel(xs, w_mat, mask, mu, sd, valid, bvalid,
+                             rule=rule, trim=agg.trim, attack_fn=attack_fn)
                 for xs, mu, sd in zip(segs, means, stds)]
     elif agg.rule == "rfa":
         outs = norm_agg.rfa_segments(
             segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
             attack_fn=attack_fn, iters=agg.iters, eps=agg.eps,
-            return_info=return_info)
+            return_info=return_info, valid=valid, bvalid=bvalid)
         if return_info:
             outs, info = outs
     elif agg.rule == "krum":
         outs = norm_agg.krum_segments(
             segs, w_mat=w_mat, mask=mask, means=means, stds=stds,
             attack_fn=attack_fn, n_byz=agg.n_byz,
-            return_info=return_info)
+            return_info=return_info, valid=valid, bvalid=bvalid)
         if return_info:
             outs, info = outs
     else:  # pragma: no cover — RULES is closed
@@ -349,7 +364,7 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
 
 
 def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
-                               return_info=False):
+                               return_info=False, valid=None):
     """Wire twin of ``tree_aggregate_pallas``: the candidates arrive as a
     ``wire.WireCandidates`` payload and each leaf launches its kernels on a
     ``quantize.WireSrc`` — reconstruction (decode + base add), attack,
@@ -361,7 +376,9 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
     don't concatenate; each leaf keeps its own launch) and ``attack_ctx``
     carries per-leaf FLAT (d_j,) stat lists (``wire.wire_stats``) rather
     than stat trees. RFA/Krum distances stay global across leaves exactly
-    like the dense path.
+    like the dense path. ``valid`` guards exactly as in the dense path —
+    invalid rows (``wire.payload_valid`` rejections) are select-zeroed
+    post-reconstruction in the kernel prologue.
     """
     agg = cfg.aggregator
     from repro.core import wire as W
@@ -369,8 +386,16 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
     from repro.kernels.robust_agg import robust_agg as coord_kernel
 
     n = wc.n
-    w_mat = None
-    if agg.bucket_size > 1 and agg.rule != "mean":
+    w_mat = bvalid = None
+    if valid is not None:
+        if agg.bucket_size > 1 and agg.rule != "mean":
+            from repro.faults.guard import masked_bucket_matrix
+            perm = jax.random.permutation(key, n)
+            w_mat, bvalid = masked_bucket_matrix(perm, n, agg.bucket_size,
+                                                 valid)
+        else:
+            bvalid = valid
+    elif agg.bucket_size > 1 and agg.rule != "mean":
         perm = jax.random.permutation(key, n)
         w_mat = norm_agg.bucket_matrix(perm, n, agg.bucket_size)
 
@@ -387,21 +412,21 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
     info: dict = {}
     if agg.rule in COORD_KERNEL_RULE:
         rule = COORD_KERNEL_RULE[agg.rule]
-        outs = [coord_kernel(src, w_mat, mask, mu, sd, rule=rule,
-                             trim=agg.trim, attack_fn=attack_fn)
+        outs = [coord_kernel(src, w_mat, mask, mu, sd, valid, bvalid,
+                             rule=rule, trim=agg.trim, attack_fn=attack_fn)
                 for src, mu, sd in zip(srcs, means, stds)]
     elif agg.rule == "rfa":
         outs = norm_agg.rfa_segments(
             srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
             attack_fn=attack_fn, iters=agg.iters, eps=agg.eps,
-            return_info=return_info)
+            return_info=return_info, valid=valid, bvalid=bvalid)
         if return_info:
             outs, info = outs
     elif agg.rule == "krum":
         outs = norm_agg.krum_segments(
             srcs, w_mat=w_mat, mask=mask, means=means, stds=stds,
             attack_fn=attack_fn, n_byz=agg.n_byz,
-            return_info=return_info)
+            return_info=return_info, valid=valid, bvalid=bvalid)
         if return_info:
             outs, info = outs
     else:  # pragma: no cover — RULES is closed

@@ -38,23 +38,35 @@ def tree_broadcast_leading(a, n):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), a)
 
 
-def masked_mean_std(xs, good_mask):
+def masked_mean_std(xs, good_mask, sanitize: bool = False):
     """Per-coordinate mean/std over the good workers of a stacked pytree.
 
     xs leaves: (n, ...). good_mask: (n,) bool. Returns (mean_tree, std_tree).
+
+    ``sanitize`` (fault guard, DESIGN.md §6): select-replace masked-out rows
+    before the weighted sums — a zero weight does NOT neutralize a
+    non-finite row (0·NaN = NaN), so guarded callers whose excluded rows may
+    be fault-poisoned must pass True. Static, so the default path's jaxpr is
+    unchanged.
     """
     g = good_mask.astype(jnp.float32)
     cnt = jnp.maximum(jnp.sum(g), 1.0)
 
     def mean_leaf(a):
         w = g.reshape((-1,) + (1,) * (a.ndim - 1))
-        return jnp.sum(a.astype(jnp.float32) * w, axis=0) / cnt
+        af = a.astype(jnp.float32)
+        if sanitize:
+            af = jnp.where(w > 0.0, af, 0.0)
+        return jnp.sum(af * w, axis=0) / cnt
 
     means = jax.tree.map(mean_leaf, xs)
 
     def std_leaf(a, m):
         w = g.reshape((-1,) + (1,) * (a.ndim - 1))
-        var = jnp.sum(jnp.square(a.astype(jnp.float32) - m[None]) * w,
+        af = a.astype(jnp.float32)
+        if sanitize:
+            af = jnp.where(w > 0.0, af, m[None])
+        var = jnp.sum(jnp.square(af - m[None]) * w,
                       axis=0) / cnt
         return jnp.sqrt(jnp.maximum(var, 0.0))
 

@@ -285,14 +285,19 @@ def tree_wire_bits(compressor, stacked) -> float:
 # omniscient-attack stats from the wire
 # ---------------------------------------------------------------------------
 
-def wire_stats(wc: WireCandidates, good_mask):
+def wire_stats(wc: WireCandidates, good_mask, sanitize: bool = False):
     """Good-worker per-coordinate (mean, std) of the candidates, as per-leaf
     FLAT (d_j,) lists — ``tree_utils.masked_mean_std`` semantics, computed
     from the wire. Dense formats decode elementwise (no scatter); sparse
     payloads use a flat scatter-add for Σ w·q plus gathered cross-terms for
     Σ w·(x-m)², so no (n, d) gather/scatter ever appears. Sparse leaves
     with a non-f32 candidate dtype reconstruct densely instead (leaf-dtype
-    rounding is not termwise-expressible) — the documented fallback."""
+    rounding is not termwise-expressible) — the documented fallback.
+
+    ``sanitize`` (fault guard): select-replace masked-out rows before the
+    weighted sums — a zero weight does not neutralize a fault-poisoned
+    payload (0·NaN = NaN, and garbled sparse indices would scatter out of
+    range). Static, so the unguarded jaxpr is unchanged."""
     g = good_mask.astype(jnp.float32)
     cnt = jnp.maximum(jnp.sum(g), 1.0)
     w = g[:, None]
@@ -307,11 +312,19 @@ def wire_stats(wc: WireCandidates, good_mask):
             if base is not None:
                 x = ((x + base.astype(jnp.float32))
                      .astype(dt).astype(jnp.float32))
+            if sanitize:
+                # select-zero, not multiply: masked rows are finite again,
+                # so the weighted sums below cannot see 0·NaN
+                x = jnp.where(w > 0.0, x, 0.0)
             m = jnp.sum(x * w, axis=0) / cnt
             var = jnp.sum(jnp.square(x - m[None]) * w, axis=0) / cnt
         else:
             vals = payload["vals"].astype(jnp.float32)        # (n, k)
             idx = payload["idx"]                              # (n, k) int32
+            if sanitize:
+                ok = good_mask[:, None]
+                vals = jnp.where(ok, vals, 0.0)
+                idx = jnp.where(ok, idx, 0)
             fi = idx.reshape(-1)
             qsum = jnp.zeros((d,), jnp.float32).at[fi].add(
                 (w * vals).reshape(-1))
@@ -345,38 +358,73 @@ def wire_stats(wc: WireCandidates, good_mask):
 # ---------------------------------------------------------------------------
 
 def wire_message_phase(cfg, attack_key, agg_key, wc: WireCandidates,
-                       return_info=False):
+                       return_info=False, return_valid=False):
     """Omniscient attack + robust aggregation over a wire payload. The
     fused path (kernel-fusable attacks, pallas backend) never materializes
     the (n, d) candidates; RN-style attacks (exact jax.random stream on the
     materialized tensor) and non-pallas modes reconstruct densely, keeping
     the trajectory identical to the Compressor-oracle path.
 
+    ``cfg.fault_guard`` (DESIGN.md §6) adds the fail-closed decode guard:
+    rows whose payload does not decode safely (``faults.guard.payload_valid``
+    — non-finite floats, sparse indices outside [0, d)) are *rejected*
+    before they can touch the aggregate or the omniscient attack's
+    statistics. Structurally valid garbage (garbled int8 levels under finite
+    norms, a replayed zero payload) passes BY DESIGN — arbitrary finite
+    deviation is the robust aggregator's job. The guard branch is static
+    Python; guard-off traces the pre-faults jaxpr unchanged.
+
     ``return_info`` (repro.obs telemetry) returns ``(agg, info)`` with the
-    rule drivers' scoring intermediates; the aggregate itself is produced
-    by the identical calls either way."""
+    rule drivers' scoring intermediates; ``return_valid`` appends the final
+    (n,) validity mask (None when unguarded). The aggregate itself is
+    produced by the identical calls either way."""
     from repro.core import engine
+
+    def _ret(out, valid):
+        return (out, valid) if return_valid else out
+
+    guard = bool(getattr(cfg, "fault_guard", False))
+    valid = None
+    if guard:
+        from repro.faults import guard as fguard
+        valid = fguard.payload_valid(wc)
     if cfg.agg_mode != "pallas":   # defensive: estimators gate on pallas
-        sent = engine.apply_attack(cfg, attack_key, reconstruct(wc))
+        sent = engine.apply_attack(cfg, attack_key, reconstruct(wc),
+                                   stats_valid=valid)
+        if guard:
+            from repro.faults import guard as fguard
+            valid = valid & fguard.finite_row_mask(sent)
         if return_info:
-            return cfg.aggregator.tree_traced(agg_key, sent)
-        return engine.aggregate(cfg, agg_key, sent)
+            if guard:
+                return _ret(cfg.aggregator.tree_masked(
+                    agg_key, sent, valid, return_info=True), valid)
+            return _ret(cfg.aggregator.tree_traced(agg_key, sent), valid)
+        return _ret(engine.aggregate(cfg, agg_key, sent, valid=valid), valid)
     from repro.core.sharded_agg import (AttackCtx, tree_aggregate_pallas,
                                         tree_aggregate_pallas_wire)
     if cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF"):
-        return tree_aggregate_pallas_wire(cfg, agg_key, wc,
-                                          return_info=return_info)
+        return _ret(tree_aggregate_pallas_wire(cfg, agg_key, wc,
+                                               return_info=return_info,
+                                               valid=valid), valid)
     if cfg.attack.coord_apply is not None:
         mask = cfg.byz_mask()
         means = stds = None
         if cfg.attack.needs_mean or cfg.attack.needs_std:
-            means, stds = wire_stats(wc, ~mask)
+            good = ~mask if valid is None else ~mask & valid
+            means, stds = wire_stats(wc, good, sanitize=guard)
             if not cfg.attack.needs_std:
                 stds = None
         ctx = AttackCtx(fn=cfg.attack.coord_apply, mask=mask,
                         means=means, stds=stds)
-        return tree_aggregate_pallas_wire(cfg, agg_key, wc, attack_ctx=ctx,
-                                          return_info=return_info)
-    sent = engine.apply_attack(cfg, attack_key, reconstruct(wc))
-    return tree_aggregate_pallas(cfg, agg_key, sent,
-                                 return_info=return_info)
+        return _ret(tree_aggregate_pallas_wire(cfg, agg_key, wc,
+                                               attack_ctx=ctx,
+                                               return_info=return_info,
+                                               valid=valid), valid)
+    sent = engine.apply_attack(cfg, attack_key, reconstruct(wc),
+                               stats_valid=valid)
+    if guard:
+        from repro.faults import guard as fguard
+        valid = valid & fguard.finite_row_mask(sent)
+    return _ret(tree_aggregate_pallas(cfg, agg_key, sent,
+                                      return_info=return_info, valid=valid),
+                valid)

@@ -127,14 +127,32 @@ class WorkerPool:
     device pinning happens before jax initializes: ``gpu_ids`` round-robins
     ``CUDA_VISIBLE_DEVICES`` across workers, ``jax_platform`` sets
     ``JAX_PLATFORMS`` (e.g. "cpu" to keep sweep workers off the trainer's
-    accelerator). ``timeout_s`` bounds each cell; a timed-out or crashed
-    cell records ``failed`` and the rest of the grid proceeds.
+    accelerator). ``timeout_s`` bounds each cell attempt; a crashed or
+    timed-out attempt is retried up to ``max_retries`` times on a FRESH
+    slot (the failed slot goes back to the queue — host re-queue), with
+    ``backoff_s · 2^attempt`` sleep between attempts and the per-attempt
+    timeout escalating by ``timeout_escalation``× each retry (a cell that
+    legitimately needs more time eventually gets it; a hung worker is
+    reaped each round). Only a cell that fails every attempt records
+    ``failed`` — with the final returncode, the stderr tail and the full
+    per-attempt history — and the rest of the grid proceeds.
+
+    ``fault_plan`` (repro.faults, DESIGN.md §6) injects process-site
+    chaos: cells selected by the plan's crash/hang specs get ``--fault``
+    on their FIRST attempt only, so with retries enabled the sweep
+    completes with artifacts byte-identical to a fault-free run.
     """
     max_workers: int = 2
     timeout_s: Optional[float] = None
     gpu_ids: Optional[Sequence[str]] = None
     jax_platform: Optional[str] = None
     extra_env: Mapping = dataclasses.field(default_factory=dict)
+    max_retries: int = 2
+    backoff_s: float = 0.25
+    timeout_escalation: float = 2.0
+    fault_plan: Optional[object] = None     # faults.FaultPlan or None
+    hang_timeout_s: float = 60.0            # cap for injected hangs when
+                                            # timeout_s is None
 
     def cell_env(self, slot) -> dict:
         env = dict(os.environ)
@@ -146,37 +164,104 @@ class WorkerPool:
         return env
 
 
-def _run_cell_subprocess(pool: WorkerPool, slots: queue.Queue, run_id: str,
-                         spec, out_path: str, run_kw: Mapping) -> dict:
-    """Run one cell in a pinned worker subprocess; returns a status dict."""
-    slot = slots.get()
+def process_fault(plan, run_id: str, idx: int) -> Optional[str]:
+    """Which process fault (if any) the plan injects into this cell's first
+    attempt. Deterministic in (plan.seed, spec.kind, run_id) — a chaotic
+    sweep replays the same kills. ``FaultSpec.workers`` for process-site
+    specs are CELL indices in submission order (empty = every cell,
+    thinned by ``prob``)."""
+    if plan is None:
+        return None
+    import zlib
+
+    from repro.faults.plan import PROCESS_FAULTS
+    for spec in plan.faults:
+        if spec.kind not in PROCESS_FAULTS:
+            continue
+        if spec.workers and idx not in spec.workers:
+            continue
+        if spec.prob >= 1.0:
+            return spec.kind
+        h = zlib.crc32(f"{plan.seed}:{spec.kind}:{run_id}".encode())
+        if (h % (1 << 20)) / float(1 << 20) < spec.prob:
+            return spec.kind
+    return None
+
+
+def _attempt_cell(pool: WorkerPool, slot, run_id: str, spec, out_path: str,
+                  run_kw: Mapping, fault: Optional[str],
+                  attempt: int) -> dict:
+    """One subprocess attempt; returns {"ok": bool, ...} with returncode +
+    stderr tail on failure."""
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=".spec.json", delete=False) as f:
+        f.write(spec.to_json())
+        spec_path = f.name
+    cmd = [sys.executable, "-m", "repro.exec.worker",
+           "--spec", spec_path, "--out", out_path,
+           "--run-kw", json.dumps(dict(run_kw))]
+    if fault is not None:
+        cmd += ["--fault", fault]
+    timeout = pool.timeout_s
+    if timeout is not None:
+        timeout = timeout * (pool.timeout_escalation ** attempt)
+    elif fault == "hang":
+        timeout = pool.hang_timeout_s    # never let injected chaos wedge
+    env = pool.cell_env(slot)
+    env.setdefault("PYTHONPATH", os.pathsep.join(
+        p for p in (os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))),
+            os.environ.get("PYTHONPATH")) if p))
     try:
-        with tempfile.NamedTemporaryFile(
-                "w", suffix=".spec.json", delete=False) as f:
-            f.write(spec.to_json())
-            spec_path = f.name
-        cmd = [sys.executable, "-m", "repro.exec.worker",
-               "--spec", spec_path, "--out", out_path,
-               "--run-kw", json.dumps(dict(run_kw))]
-        env = pool.cell_env(slot)
-        env.setdefault("PYTHONPATH", os.pathsep.join(
-            p for p in (os.path.dirname(os.path.dirname(
-                os.path.dirname(os.path.abspath(__file__)))),
-                os.environ.get("PYTHONPATH")) if p))
-        try:
-            proc = subprocess.run(cmd, capture_output=True, text=True,
-                                  env=env, timeout=pool.timeout_s)
-        except subprocess.TimeoutExpired:
-            return {"ok": False, "error": "timeout",
-                    "detail": f"cell exceeded {pool.timeout_s}s"}
-        finally:
-            os.unlink(spec_path)
-        if proc.returncode != 0 or not os.path.exists(out_path):
-            return {"ok": False, "error": "worker-failed",
-                    "detail": (proc.stderr or proc.stdout or "")[-2000:]}
-        return {"ok": True}
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              env=env, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return {"ok": False, "error": "timeout", "attempt": attempt,
+                "slot": str(slot), "injected_fault": fault,
+                "detail": f"attempt exceeded {timeout}s"}
     finally:
-        slots.put(slot)
+        os.unlink(spec_path)
+    if proc.returncode != 0 or not os.path.exists(out_path):
+        return {"ok": False, "error": "worker-failed", "attempt": attempt,
+                "slot": str(slot), "injected_fault": fault,
+                "returncode": proc.returncode,
+                "stderr_tail": (proc.stderr or proc.stdout or "")[-2000:]}
+    return {"ok": True, "attempt": attempt, "injected_fault": fault}
+
+
+def _run_cell_subprocess(pool: WorkerPool, slots: queue.Queue, run_id: str,
+                         spec, out_path: str, run_kw: Mapping,
+                         fault: Optional[str] = None) -> dict:
+    """Run one cell with bounded retry; returns a status dict carrying the
+    per-attempt history (ledger failure forensics — satellite of the chaos
+    layer). ``fault`` is injected on attempt 0 only."""
+    import time
+
+    history = []
+    max_attempts = 1 + max(int(pool.max_retries), 0)
+    for attempt in range(max_attempts):
+        slot = slots.get()          # fresh slot per attempt: host re-queue
+        try:
+            status = _attempt_cell(pool, slot, run_id, spec, out_path,
+                                   run_kw, fault if attempt == 0 else None,
+                                   attempt)
+        finally:
+            slots.put(slot)
+        if status.get("ok"):
+            status["attempts"] = attempt + 1
+            status["attempt_history"] = history
+            status["injected_fault"] = fault
+            return status
+        history.append(status)
+        if attempt + 1 < max_attempts and pool.backoff_s > 0:
+            time.sleep(pool.backoff_s * (2 ** attempt))
+    last = history[-1]
+    return {"ok": False, "error": last.get("error", "unknown"),
+            "detail": last.get("detail") or last.get("stderr_tail", ""),
+            "returncode": last.get("returncode"),
+            "stderr_tail": last.get("stderr_tail", ""),
+            "attempts": max_attempts, "attempt_history": history,
+            "injected_fault": fault}
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +380,7 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
 
     executor = slots = None
     futures = {}
+    sub_idx = [0]          # subprocess submission order (fault selection)
     if pool is not None:
         executor = concurrent.futures.ThreadPoolExecutor(pool.max_workers)
         slots = queue.Queue()
@@ -314,8 +400,10 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
         if pool is not None and exp is None and _jsonable(kw):
             _start(run_id, spec, "subprocess", group)
             out_path = _artifact_path(art_dir, run_id)
+            fault = process_fault(pool.fault_plan, run_id, sub_idx[0])
+            sub_idx[0] += 1
             fut = executor.submit(_run_cell_subprocess, pool, slots, run_id,
-                                  spec, out_path, kw)
+                                  spec, out_path, kw, fault)
             futures[fut] = (run_id, out_path, group)
             return
         engine = "serial"
@@ -385,13 +473,26 @@ def run_cells(cells: Sequence[Tuple[str, object]], *,
                     srun.artifacts[run_id] = json.load(f)
                 srun.stats["executed_cells"] += 1
                 srun.stats["subprocess_cells"] += 1
+                if status.get("attempts", 1) > 1:
+                    srun.stats["retried_cells"] = (
+                        srun.stats.get("retried_cells", 0) + 1)
                 if ledger:
                     ledger.append(run_id, "done", engine="subprocess",
-                                  group=group, **prov)
+                                  group=group,
+                                  attempts=status.get("attempts", 1),
+                                  injected_fault=status.get("injected_fault"),
+                                  attempt_history=status.get(
+                                      "attempt_history", []),
+                                  **prov)
             else:
                 rec = {"engine": "subprocess", "group": group,
                        "error": status.get("error", "unknown"),
-                       "detail": status.get("detail", "")}
+                       "detail": status.get("detail", ""),
+                       "returncode": status.get("returncode"),
+                       "stderr_tail": status.get("stderr_tail", ""),
+                       "attempts": status.get("attempts", 1),
+                       "attempt_history": status.get("attempt_history", []),
+                       "injected_fault": status.get("injected_fault")}
                 srun.failures[run_id] = rec
                 if ledger:
                     ledger.append(run_id, "failed", **{**prov, **rec})

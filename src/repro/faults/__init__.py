@@ -1,0 +1,21 @@
+"""repro.faults — seeded fault injection + graceful degradation.
+
+Three layers (DESIGN §6):
+
+* ``plan``   — the ``FaultPlan`` registry/schedule (static, JSON-able).
+* ``inject`` — deterministic message-site injection (dense rows, wire
+               bit-flips), replayable from ``(plan, attack_key)``.
+* ``guard``  — fail-closed validity masks + masked bucketing shared by
+               the gspmd oracle and the pallas kernels.
+
+Process-site faults (crash / hang) are consumed by ``exec.scheduler`` /
+``exec.worker`` and ``serve.arrivals`` rather than injected here.
+"""
+from repro.faults.plan import (FAULTS, MESSAGE_FAULTS, PROCESS_FAULTS,
+                               TENSOR_FAULTS, WIRE_FAULTS, FaultPlan,
+                               FaultSpec, as_plan)
+from repro.faults import guard, inject  # noqa: F401
+
+__all__ = ["FAULTS", "MESSAGE_FAULTS", "PROCESS_FAULTS", "TENSOR_FAULTS",
+           "WIRE_FAULTS", "FaultPlan", "FaultSpec", "as_plan", "guard",
+           "inject"]

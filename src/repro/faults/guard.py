@@ -1,0 +1,86 @@
+"""Graceful-degradation primitives: validity masks + masked bucketing.
+
+The guard contract (DESIGN §6): a worker whose message is *structurally*
+bad — non-finite candidate coordinates, non-finite wire floats, sparse
+indices outside [0, d) — gets **zero aggregation weight** and counts
+toward the δ budget, exactly as if the paper's Byzantine set had absorbed
+it. Structurally valid garbage (e.g. a replayed zero update, or garbled
+int8 levels under finite norms) passes the guard BY DESIGN: arbitrary
+finite deviation is precisely what the robust aggregators are for.
+
+Everything here is plain jnp so both backends share the identical validity
+and bucket arithmetic — the gspmd masked oracle and the pallas masked
+kernels consume the same ``valid`` vector and the same renormalized bucket
+matrix, which is what makes the drop-oracle equivalence test exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def finite_row_mask(tree):
+    """(n,) bool — worker i's row is finite in EVERY leaf coordinate.
+    Integer leaves are always finite."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    m = jnp.ones((n,), bool)
+    for leaf in leaves:
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            continue
+        axes = tuple(range(1, leaf.ndim))
+        m = m & jnp.all(jnp.isfinite(leaf), axis=axes)
+    return m
+
+
+def payload_valid(wc):
+    """(n,) bool — worker i's wire payload decodes safely: every float
+    payload array finite, and (sparse) every index inside [0, d). A False
+    row is *rejected* — routed to zero weight, never reconstructed into
+    the aggregate."""
+    m = jnp.ones((wc.n,), bool)
+    for payload, shape in zip(wc.payloads, wc.shapes):
+        d = int(np.prod(shape)) if shape else 1
+        for name, arr in payload.items():
+            a = arr.reshape(wc.n, -1)
+            dt = np.dtype(arr.dtype)
+            if np.issubdtype(dt, np.floating) or dt == np.dtype(jnp.bfloat16):
+                m = m & jnp.all(jnp.isfinite(a), axis=1)
+            elif name == "idx":
+                m = m & jnp.all((a >= 0) & (a < d), axis=1)
+    return m
+
+
+def masked_bucket_matrix(perm, n: int, s: int, valid):
+    """Renormalized (nb, n) bucket-mean operator over VALID members only,
+    plus the (nb,) bucket-validity mask (a bucket with zero valid members
+    is itself rejected downstream).
+
+    ``perm`` is the same per-round permutation both backends already use;
+    bucket b owns positions [b·s, (b+1)·s). With every worker valid and
+    s | n this is the plain bucket-mean operator; invalid members are
+    dropped and the bucket renormalizes over the survivors.
+    """
+    nb = -(-n // s)
+    bucket_of = jnp.arange(n) // s                       # position -> bucket
+    member = jnp.zeros((nb, n), jnp.float32).at[bucket_of, perm].set(1.0)
+    w = member * valid.astype(jnp.float32)[None, :]
+    cnt = jnp.sum(w, axis=1, keepdims=True)
+    bvalid = cnt[:, 0] > 0.0
+    return w / jnp.maximum(cnt, 1.0), bvalid
+
+
+def identity_bucket_matrix(n: int, valid):
+    """The s=1 degenerate case: diag(valid) with bucket validity = worker
+    validity — so the guarded path always goes through one (W, bvalid)
+    pair regardless of bucketing."""
+    w = jnp.eye(n, dtype=jnp.float32) * valid.astype(jnp.float32)[None, :]
+    return w, valid
+
+
+def masked_sort_fill(x, valid, fill=jnp.inf):
+    """Rows with valid=False become ``fill`` so a sort pushes them past
+    every real entry; used by the masked selection rules."""
+    v = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.where(v, x, jnp.asarray(fill, x.dtype))

@@ -1,0 +1,169 @@
+"""Message-site fault injection — deterministic, trace-safe, replayable.
+
+Every mask here is a pure function of ``(plan, key)`` where ``key`` is the
+engine's per-round attack key: ``fault_key`` folds the plan seed and the
+FaultSpec's index into it, so injections are bit-for-bit replayable and the
+traced telemetry twin can *recompute* the ground-truth ``fault_mask``
+without any side channel. All branching on the plan itself is Python-level
+(the plan is static config), so a ``fault_plan=None`` run traces the exact
+same jaxpr as before the faults layer existed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.plan import (MESSAGE_FAULTS, TENSOR_FILL, TENSOR_FAULTS,
+                               WIRE_FAULTS, FaultPlan)
+
+_SALT = 0xFA17  # folds the fault stream away from the attack stream
+
+
+def fault_key(plan: FaultPlan, key, index: int):
+    """The RNG key for FaultSpec ``index``: attack key ⊕ plan seed ⊕ index."""
+    k = jax.random.fold_in(key, _SALT + plan.seed % (1 << 20))
+    return jax.random.fold_in(k, index)
+
+
+def _eligible(spec, n: int):
+    """Static (n,) eligibility mask from the spec's worker list."""
+    if not spec.workers:
+        return np.ones((n,), bool)
+    m = np.zeros((n,), bool)
+    m[[w for w in spec.workers if w < n]] = True
+    return m
+
+
+def _spec_mask(plan, spec, index, key, n):
+    """Traced (n,) bool: does ``spec`` hit worker i this round?"""
+    elig = jnp.asarray(_eligible(spec, n))
+    if spec.prob >= 1.0:
+        return elig
+    if spec.prob <= 0.0:
+        return jnp.zeros((n,), bool)
+    hit = jax.random.bernoulli(fault_key(plan, key, index), spec.prob, (n,))
+    return hit & elig
+
+
+def fault_masks(plan: FaultPlan, key, n: int, kinds=MESSAGE_FAULTS):
+    """Per-kind (n,) hit masks for this round, OR-ed across same-kind
+    specs. Only kinds with at least one spec appear in the dict."""
+    masks = {}
+    for i, spec in enumerate(plan.faults):
+        if spec.kind not in kinds:
+            continue
+        m = _spec_mask(plan, spec, i, key, n)
+        masks[spec.kind] = masks[spec.kind] | m if spec.kind in masks else m
+    return masks
+
+
+def injected_mask(plan: FaultPlan, key, n: int, kinds=MESSAGE_FAULTS):
+    """Ground-truth (n,) bool: any fault of ``kinds`` hit worker i this
+    round. This is what ``RoundTrace.fault_mask`` records."""
+    masks = fault_masks(plan, key, n, kinds)
+    out = jnp.zeros((n,), bool)
+    for m in masks.values():
+        out = out | m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense candidates
+# ---------------------------------------------------------------------------
+
+def inject_candidates(plan: FaultPlan, key, cand):
+    """Apply the plan's tensor faults to a dense stacked candidate tree
+    (leaves (n, ...)). Later registry kinds overwrite earlier ones on
+    overlapping workers (a NaN worker that also replays stays stale)."""
+    masks = fault_masks(plan, key, jax.tree.leaves(cand)[0].shape[0],
+                        TENSOR_FAULTS)
+    if not masks:
+        return cand
+
+    def fill_rows(leaf, mask, value):
+        m = mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, jnp.asarray(value, leaf.dtype), leaf)
+
+    for kind in TENSOR_FAULTS:
+        if kind in masks:
+            cand = jax.tree.map(
+                lambda l, kind=kind: fill_rows(l, masks[kind],
+                                               TENSOR_FILL[kind]), cand)
+    return cand
+
+
+# ---------------------------------------------------------------------------
+# wire payloads
+# ---------------------------------------------------------------------------
+
+_BITCAST = {np.dtype(jnp.float32): jnp.uint32,
+            np.dtype(jnp.bfloat16): jnp.uint16,
+            np.dtype(jnp.float16): jnp.uint16}
+
+
+def _flip_bits(arr, key):
+    """XOR every element with random bits (float dtypes round-trip through
+    their same-width unsigned carrier)."""
+    dt = np.dtype(arr.dtype)
+    if np.issubdtype(dt, np.floating) or dt == np.dtype(jnp.bfloat16):
+        carrier = _BITCAST[dt]
+        bits = jax.lax.bitcast_convert_type(arr, carrier)
+        rnd = jax.random.bits(key, arr.shape, carrier)
+        return jax.lax.bitcast_convert_type(bits ^ rnd, arr.dtype)
+    rnd = jax.random.bits(key, arr.shape, jnp.dtype(dt)
+                          if np.issubdtype(dt, np.unsignedinteger)
+                          else {1: jnp.uint8, 2: jnp.uint16,
+                                4: jnp.uint32}[dt.itemsize])
+    if np.issubdtype(dt, np.unsignedinteger):
+        return arr ^ rnd
+    return jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(arr, rnd.dtype) ^ rnd, arr.dtype)
+
+
+def inject_wire(plan: FaultPlan, key, wc):
+    """Apply the plan's message faults to a ``WireCandidates``:
+
+    * ``corrupt_wire`` — random bit-flips XORed into every payload array of
+      the hit workers' rows (floats garble to arbitrary bit patterns,
+      sparse indices to arbitrary int32s — usually out of range, which the
+      decode guard rejects).
+    * tensor kinds — the hit workers' *float* payload arrays take the
+      kind's fill value (NaN / inf / 0): the wire-mode analogue of a
+      corrupted candidate row.
+    """
+    masks = fault_masks(plan, key, wc.n, MESSAGE_FAULTS)
+    if not masks:
+        return wc
+
+    def is_float(a):
+        dt = np.dtype(a.dtype)
+        return np.issubdtype(dt, np.floating) or dt == np.dtype(jnp.bfloat16)
+
+    new_payloads = []
+    for j, payload in enumerate(wc.payloads):
+        out = dict(payload)
+        for kind in TENSOR_FAULTS:
+            if kind not in masks:
+                continue
+            m = masks[kind]
+            for name, arr in out.items():
+                if not is_float(arr):
+                    continue
+                mm = m.reshape((-1,) + (1,) * (arr.ndim - 1))
+                out[name] = jnp.where(
+                    mm, jnp.asarray(TENSOR_FILL[kind], arr.dtype), arr)
+        for kind in WIRE_FAULTS:
+            if kind not in masks:
+                continue
+            m = masks[kind]
+            for name, arr in out.items():
+                k = jax.random.fold_in(fault_key(plan, key, _SALT + j),
+                                       zlib.crc32(name.encode()) % (1 << 20))
+                mm = m.reshape((-1,) + (1,) * (arr.ndim - 1))
+                out[name] = jnp.where(mm, _flip_bits(arr, k), arr)
+        new_payloads.append(out)
+    return dataclasses.replace(wc, payloads=tuple(new_payloads))

@@ -98,7 +98,7 @@ def src_dims(x):
     return x.shape
 
 
-def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
+def _assemble(x, w_mat, mask, good_mean, good_std, tile_d, valid=None):
     """Build (vals, in_specs, names, grid, dp, wire) for the optional-input
     kernels.
 
@@ -107,7 +107,10 @@ def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
     (the dense candidate matrix then never exists in HBM; the kernels
     reconstruct per block via ``_prologue``). w_mat (nb, n), mask (n, 1) and
     the RFA weights are tiny constant blocks revisited every step; mean/std
-    are (1, tile) blocks tiled like x.
+    are (1, tile) blocks tiled like x. ``valid`` (fault guard, DESIGN.md §6)
+    is the (n,) row-validity mask riding like ``mask``; ``_prologue``
+    select-zeroes invalid rows in VMEM so a NaN/inf row never reaches the
+    bucket matmul or the rule.
     """
     n, d = src_dims(x)
     wire = None
@@ -129,6 +132,10 @@ def _assemble(x, w_mat, mask, good_mean, good_std, tile_d):
         vals.append(mask.reshape(n, 1).astype(jnp.float32))
         specs.append(pl.BlockSpec((n, 1), lambda i: (0, 0)))
         names.append("mask")
+    if valid is not None:
+        vals.append(valid.reshape(n, 1).astype(jnp.float32))
+        specs.append(pl.BlockSpec((n, 1), lambda i: (0, 0)))
+        names.append("valid")
     for nm, stat in (("mean", good_mean), ("std", good_std)):
         if stat is not None:
             vals.append(_pad_cols(stat.reshape(1, d).astype(jnp.float32), dp))
@@ -162,6 +169,11 @@ def _prologue(env, attack_fn, wire=None):
         sd = env["std"][...] if "std" in env else None
         v = attack_fn(x, mu, sd).astype(cand_dtype).astype(jnp.float32)
         x = jnp.where(env["mask"][...] > 0.0, v, x)
+    if "valid" in env:
+        # fault guard (DESIGN.md §6): select-zero invalid rows — NEVER
+        # multiply (0·NaN = NaN) — before the bucket matmul, so a
+        # non-finite worker row cannot reach any accumulator.
+        x = jnp.where(env["valid"][...] > 0.0, x, 0.0)
     if "w_mat" in env:
         x = jnp.dot(env["w_mat"][...], x, preferred_element_type=jnp.float32)
     return x
@@ -173,15 +185,17 @@ def _prologue(env, attack_fn, wire=None):
 
 @functools.partial(jax.jit,
                    static_argnames=("attack_fn", "tile_d", "interpret"))
-def pair_gram(x, w_mat=None, mask=None, good_mean=None, good_std=None, *,
-              attack_fn=None, tile_d: int = DEFAULT_TILE_D, interpret=None):
+def pair_gram(x, w_mat=None, mask=None, good_mean=None, good_std=None,
+              valid=None, *, attack_fn=None, tile_d: int = DEFAULT_TILE_D,
+              interpret=None):
     """One-HBM-sweep (m, m) Gram matrix of the (attacked, bucketed) worker
     stack; m = nb when ``w_mat`` is given else n. Krum's pairwise squared
     distances are d²[i,j] = G[i,i] + G[j,j] - 2 G[i,j]."""
     n, d = src_dims(x)
     m = w_mat.shape[0] if w_mat is not None else n
     vals, specs, names, grid, dp, wire = _assemble(x, w_mat, mask, good_mean,
-                                                   good_std, tile_d)
+                                                   good_std, tile_d,
+                                                   valid=valid)
 
     def kernel(*refs):
         env = dict(zip(names, refs[:-1]))
@@ -206,15 +220,17 @@ def pair_gram(x, w_mat=None, mask=None, good_mean=None, good_std=None, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("attack_fn", "tile_d", "interpret"))
-def rfa_iter(x, w, w_mat=None, mask=None, good_mean=None, good_std=None, *,
-             attack_fn=None, tile_d: int = DEFAULT_TILE_D, interpret=None):
+def rfa_iter(x, w, w_mat=None, mask=None, good_mean=None, good_std=None,
+             valid=None, *, attack_fn=None, tile_d: int = DEFAULT_TILE_D,
+             interpret=None):
     """One fused smoothed-Weiszfeld pass in ONE sweep of x:
     z = Σ_b w_b · xb_b written tile-wise, and sq_b = ||xb_b - z||² accumulated
     in the revisited (m, 1) output block. Returns (z (d,), sq (m,)) fp32."""
     n, d = src_dims(x)
     m = w_mat.shape[0] if w_mat is not None else n
     vals, specs, names, grid, dp, wire = _assemble(x, w_mat, mask, good_mean,
-                                                   good_std, tile_d)
+                                                   good_std, tile_d,
+                                                   valid=valid)
     tile = dp // grid[0]
     vals.append(w.reshape(m, 1).astype(jnp.float32))
     specs.append(pl.BlockSpec((m, 1), lambda i: (0, 0)))
@@ -249,14 +265,15 @@ def rfa_iter(x, w, w_mat=None, mask=None, good_mean=None, good_std=None, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("attack_fn", "tile_d", "interpret"))
-def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, *,
-                 attack_fn=None, tile_d: int = DEFAULT_TILE_D,
+def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, valid=None,
+                 *, attack_fn=None, tile_d: int = DEFAULT_TILE_D,
                  interpret=None):
     """z = Σ_i w_i · sent_i in one sweep. Bucketing rides in the weights
     (w_eff = Wᵀ · w_bucket), so no bucketed matrix is ever formed."""
     n, d = src_dims(x)
     vals, specs, names, grid, dp, wire = _assemble(x, None, mask, good_mean,
-                                                   good_std, tile_d)
+                                                   good_std, tile_d,
+                                                   valid=valid)
     tile = dp // grid[0]
     vals.append(w.reshape(n, 1).astype(jnp.float32))
     specs.append(pl.BlockSpec((n, 1), lambda i: (0, 0)))
@@ -291,12 +308,17 @@ def weighted_sum(x, w, mask=None, good_mean=None, good_std=None, *,
 def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
                  attack_fn=None, iters: int = 8, eps: float = 1e-8,
                  tile_d: int = DEFAULT_TILE_D, interpret=None,
-                 return_info: bool = False):
+                 return_info: bool = False, valid=None, bvalid=None):
     """Smoothed Weiszfeld (Pillutla et al. 2022) with global distances across
     segments; semantics of ``Aggregator._rfa_tree``. T+1 sweeps total: the
     t-th fused pass computes z_t = w_tᵀ·xb AND the distances to z_t; uniform
     w_0 makes z_0 the (bucketed) mean, and the final weighted sum realizes
     z_T. Returns the list of per-segment (d_j,) fp32 aggregates.
+
+    ``valid`` / ``bvalid`` (fault guard, DESIGN.md §6): worker-level rows
+    are select-zeroed in the kernel prologue, and the Weiszfeld weights of
+    invalid (bucketed) rows are pinned to zero every iteration — the rule's
+    twin of ``Aggregator._rfa_masked``.
 
     ``return_info`` (repro.obs telemetry) additionally returns the rule's own
     intermediates ``{"bucket_weights": w_T, "rfa_sq": ||xb - z_T||²}`` — the
@@ -307,21 +329,30 @@ def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     m = w_mat.shape[0] if w_mat is not None else n
     means = means if means is not None else [None] * len(segs)
     stds = stds if stds is not None else [None] * len(segs)
-    w = jnp.full((m,), 1.0 / m, jnp.float32)
+    if bvalid is not None:
+        bv = bvalid.astype(jnp.float32)
+        w = bv / jnp.maximum(jnp.sum(bv), 1.0)
+    else:
+        w = jnp.full((m,), 1.0 / m, jnp.float32)
     for _ in range(iters):
-        sq = sum(rfa_iter(xs, w, w_mat, mask, mu, sd, attack_fn=attack_fn,
-                          tile_d=tile_d, interpret=interpret)[1]
+        sq = sum(rfa_iter(xs, w, w_mat, mask, mu, sd, valid,
+                          attack_fn=attack_fn, tile_d=tile_d,
+                          interpret=interpret)[1]
                  for xs, mu, sd in zip(segs, means, stds))
         w = 1.0 / jnp.sqrt(sq + eps)
-        w = w / jnp.sum(w)
+        if bvalid is not None:
+            w = jnp.where(bvalid, w, 0.0)
+        w = w / jnp.maximum(jnp.sum(w), 1e-30)
     w_eff = w if w_mat is None else w @ w_mat
-    outs = [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
-                         tile_d=tile_d, interpret=interpret)
+    outs = [weighted_sum(xs, w_eff, mask, mu, sd, valid,
+                         attack_fn=attack_fn, tile_d=tile_d,
+                         interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds)]
     if not return_info:
         return outs
-    sq_t = sum(rfa_iter(xs, w, w_mat, mask, mu, sd, attack_fn=attack_fn,
-                        tile_d=tile_d, interpret=interpret)[1]
+    sq_t = sum(rfa_iter(xs, w, w_mat, mask, mu, sd, valid,
+                        attack_fn=attack_fn, tile_d=tile_d,
+                        interpret=interpret)[1]
                for xs, mu, sd in zip(segs, means, stds))
     return outs, {"bucket_weights": w, "rfa_sq": sq_t}
 
@@ -329,7 +360,7 @@ def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
 def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
                   attack_fn=None, n_byz: int = 1,
                   tile_d: int = DEFAULT_TILE_D, interpret=None,
-                  return_info: bool = False):
+                  return_info: bool = False, valid=None, bvalid=None):
     """Krum (Eq. 15) in 2 sweeps: one Gram pass (global pairwise distances),
     tiny O(m²) scoring in jnp, one weighted-sum pass extracting the winner
     (through Wᵀ when bucketed). Semantics of ``Aggregator._krum_tree``.
@@ -340,20 +371,34 @@ def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     the two sweeps; the aggregate is the identical calls either way."""
     means = means if means is not None else [None] * len(segs)
     stds = stds if stds is not None else [None] * len(segs)
-    g = sum(pair_gram(xs, w_mat, mask, mu, sd, attack_fn=attack_fn,
+    g = sum(pair_gram(xs, w_mat, mask, mu, sd, valid, attack_fn=attack_fn,
                       tile_d=tile_d, interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds))
     m = g.shape[0]
     sq = jnp.diag(g)
     d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
-    k = max(m - n_byz - 2, 1)
-    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    if bvalid is not None:
+        # fault guard: invalid rows/cols leave the distance pool, the
+        # neighbour count tracks the valid count, and an invalid row can
+        # never be selected — Aggregator._krum_masked's twin.
+        pair_ok = bvalid[:, None] & bvalid[None, :]
+        d2 = jnp.where(pair_ok, d2, jnp.inf)
+        c = jnp.sum(bvalid.astype(jnp.int32))
+        kv = jnp.maximum(c - n_byz - 2, 1)
+        near = jnp.arange(m)[None, :] < kv
+        srt = jnp.sort(d2, axis=1)
+        scores = jnp.sum(jnp.where(near, srt, 0.0), axis=1)
+        scores = jnp.where(bvalid, scores, jnp.inf)
+    else:
+        k = max(m - n_byz - 2, 1)
+        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
     best = jnp.argmin(scores)
     onehot = jax.nn.one_hot(best, m, dtype=jnp.float32)
     w_eff = onehot if w_mat is None else onehot @ w_mat
-    outs = [weighted_sum(xs, w_eff, mask, mu, sd, attack_fn=attack_fn,
-                         tile_d=tile_d, interpret=interpret)
+    outs = [weighted_sum(xs, w_eff, mask, mu, sd, valid,
+                         attack_fn=attack_fn, tile_d=tile_d,
+                         interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds)]
     if not return_info:
         return outs

@@ -63,11 +63,41 @@ def _coord_rule_block(x, *, bucket_size, rule, trim, n):
     raise ValueError(rule)
 
 
+def _masked_coord_rule_block(x, bvalid, *, rule, trim):
+    """Fault-guarded coordinate rule on one in-VMEM block (DESIGN.md §6).
+
+    ``x`` (m, tile) is already sanitized (+ W-bucketed) by ``_prologue``;
+    ``bvalid`` (m, 1) marks the rows (buckets) with at least one valid
+    member. Invalid rows re-fill with +inf so the sublane sort pushes them
+    past every real entry, and the selection ranks track the TRACED valid
+    count c — the in-kernel twin of ``aggregators.masked_coord_median`` /
+    ``masked_coord_trimmed_mean``. Rank gathers are iota-compare selects
+    (dynamic sublane indexing doesn't vectorize on the VPU)."""
+    m = x.shape[0]
+    c = jnp.sum(bvalid.astype(jnp.int32))
+    if rule == "mean":
+        return jnp.sum(x, axis=0) / jnp.maximum(c, 1).astype(jnp.float32)
+    xf = jnp.where(bvalid > 0.0, x, jnp.inf)
+    xs = jnp.sort(xf, axis=0)
+    rank = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+    if rule == "median":
+        lo = jnp.sum(jnp.where(rank == (c - 1) // 2, xs, 0.0), axis=0)
+        hi = jnp.sum(jnp.where(rank == c // 2, xs, 0.0), axis=0)
+        return 0.5 * (lo + hi)
+    if rule == "trimmed":
+        t = jnp.minimum(trim, (c - 1) // 2)
+        keep = (rank >= t) & (rank < c - t)
+        kept = jnp.sum(jnp.where(keep, xs, 0.0), axis=0)
+        return kept / jnp.maximum(c - 2 * t, 1).astype(jnp.float32)
+    raise ValueError(rule)
+
+
 @functools.partial(jax.jit, static_argnames=("bucket_size", "rule", "trim",
                                              "tile_d", "interpret",
                                              "attack_fn"))
 def robust_agg(x, bucket_matrix=None, mask=None, good_mean=None,
-               good_std=None, *, bucket_size: int = 1, rule: str = "median",
+               good_std=None, valid=None, bvalid=None, *,
+               bucket_size: int = 1, rule: str = "median",
                trim: int = 1, tile_d: int = DEFAULT_TILE_D, interpret=None,
                attack_fn=None):
     """x: (n, d) dense stack OR a ``quantize.WireSrc`` payload -> (d,)
@@ -77,21 +107,34 @@ def robust_agg(x, bucket_matrix=None, mask=None, good_mean=None,
     carries the random permutation + Alg. 2 bucket means on-chip) or the
     legacy ``bucket_size`` over pre-permuted rows. ``attack_fn``/``mask``/
     ``good_mean``/``good_std`` inject the omniscient attack in-kernel.
+    ``valid`` ((n,), fault guard) select-zeroes invalid worker rows in the
+    prologue and ``bvalid`` ((m,) over the post-bucket rows) switches the
+    rule to its masked twin (``_masked_coord_rule_block``); guarded callers
+    pass ``faults.guard.masked_bucket_matrix`` as ``bucket_matrix``.
     ``interpret=None`` resolves per backend (kernels/backend.py).
     """
     n, d = src_dims(x)
     vals, specs, names, grid, dp, wire = _assemble(x, bucket_matrix, mask,
                                                    good_mean, good_std,
-                                                   tile_d)
+                                                   tile_d, valid=valid)
     tile = dp // grid[0]
     contiguous = bucket_size if bucket_matrix is None else 1
+    if bvalid is not None:
+        m = bucket_matrix.shape[0] if bucket_matrix is not None else n
+        vals.append(bvalid.reshape(m, 1).astype(jnp.float32))
+        specs.append(pl.BlockSpec((m, 1), lambda i: (0, 0)))
+        names.append("bvalid")
 
     def kernel(*refs):
         env = dict(zip(names, refs[:-1]))
         o_ref = refs[-1]
         xb = _prologue(env, attack_fn, wire)    # attacked (+W-bucketed)
-        o_ref[...] = _coord_rule_block(xb, bucket_size=contiguous, rule=rule,
-                                       trim=trim, n=n)
+        if "bvalid" in env:
+            o_ref[...] = _masked_coord_rule_block(xb, env["bvalid"][...],
+                                                  rule=rule, trim=trim)
+        else:
+            o_ref[...] = _coord_rule_block(xb, bucket_size=contiguous,
+                                           rule=rule, trim=trim, n=n)
 
     out = pl.pallas_call(
         kernel,

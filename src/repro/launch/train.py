@@ -138,7 +138,7 @@ def spec_from_args(args) -> RunSpec:
         aggregator=args.aggregator, bucket_size=args.bucket_size,
         agg_mode=agg_mode, compressor=compressor, p=args.p, lr=args.lr,
         optimizer=args.optimizer, steps=args.steps, seed=args.seed,
-        trace=args.trace,
+        trace=args.trace, faults=args.faults, fault_guard=args.fault_guard,
         method_kwargs=args.method_kwargs, attack_kwargs=args.attack_kwargs,
         aggregator_kwargs=args.aggregator_kwargs, compressor_kwargs=ckw,
         optimizer_kwargs=args.optimizer_kwargs, data_kwargs=data_kwargs)

@@ -55,6 +55,37 @@ def detection_metrics(trace, frac: float = 0.5) -> dict:
     }
 
 
+def fault_metrics(trace) -> dict:
+    """Precision/recall of the fail-closed guard's rejections against the
+    chaos layer's injected ground truth (repro.faults, DESIGN.md §6).
+
+    Detection is ``~guard_valid`` (rows the guard zero-weighted); truth is
+    ``fault_mask`` (rows the FaultPlan actually hit). {} when the trace
+    carries no fault telemetry (no plan or guard off). A Byzantine row the
+    attack overwrote with a finite value is excluded from the truth set —
+    the guard is *specified* not to catch statistical adversaries, so
+    counting it as a miss would score the spec, not the guard.
+    """
+    fm = _field(trace, "fault_mask")
+    gv = _field(trace, "guard_valid")
+    if fm is None or gv is None:
+        return {}
+    truth = np.asarray(fm, bool)
+    det = ~np.asarray(gv, bool)
+    byz = _field(trace, "byz_mask")
+    if byz is not None:
+        truth = truth & ~(np.asarray(byz, bool) & ~det)
+    tp = int((det & truth).sum())
+    fp = int((det & ~truth).sum())
+    fn = int((~det & truth).sum())
+    return {
+        "n_injected": int(truth.sum()),
+        "n_rejected": int(det.sum()),
+        "fault_precision": tp / (tp + fp) if tp + fp else 1.0,
+        "fault_recall": tp / (tp + fn) if tp + fn else 1.0,
+    }
+
+
 def summarize(traces, frac: float = 0.5) -> dict:
     """Mean detection metrics over a run's logged traces (host dicts or
     RoundTrace objects); {} when there is nothing to summarize."""
@@ -66,4 +97,10 @@ def summarize(traces, frac: float = 0.5) -> dict:
            for k in ("precision", "recall", "byz_leakage")}
     out["n_filtered_mean"] = float(np.mean([m["n_filtered"] for m in mets]))
     out["rounds"] = len(mets)
+    fmets = [fm for fm in (fault_metrics(t) for t in traces) if fm]
+    if fmets:
+        for k in ("fault_precision", "fault_recall"):
+            out[k] = float(np.mean([m[k] for m in fmets]))
+        out["n_injected_mean"] = float(
+            np.mean([m["n_injected"] for m in fmets]))
     return out

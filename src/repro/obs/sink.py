@@ -135,19 +135,44 @@ def span(sink, name: str, **fields):
 def verify_jsonl(path: str) -> dict:
     """Fail-closed check of a metrics JSONL stream: the file must exist,
     parse line-by-line, contain at least one event, and no numeric field
-    of any trace/round event may be NaN/Inf. Returns counts per type."""
+    of any trace/round/fault event may be NaN/Inf. Returns counts per type.
+
+    ``{"type": "fault", ...}`` events (the chaos layer's injection /
+    degradation records, DESIGN.md §6) are additionally schema-checked:
+    each must carry a ``kind`` from the ``repro.faults`` registry and a
+    ``site`` from the known injection sites — a schema-less fault event
+    means some emitter is improvising, which would silently corrupt the
+    fault-matrix report downstream.
+
+    One deliberate carve-out: a trace event that declares a chaos context
+    (``fault_mask`` or ``guard_valid`` present) may carry non-finite
+    values in its rule-intermediate diagnostics — a rejected bucket's
+    krum score IS ``+inf`` (the guard's sort-fill), and recording that is
+    honest telemetry, not a blow-up. Training metrics (round events) and
+    every other field stay strictly finite, so a diverged trajectory
+    still fails the gate.
+    """
     counts: dict = {}
     bad: list = []
+    bad_schema: list = []
+    # rule intermediates where the fail-closed guard legitimately leaves
+    # non-finite markers for rejected rows/buckets (chaos traces only)
+    chaos_diag = ("influence", "dist_to_agg", "bucket_weights",
+                  "krum_scores", "rfa_weights", "rfa_residual")
 
-    def scan(prefix, v):
+    def scan(prefix, v, exempt=()):
         if isinstance(v, dict):
             for k, x in v.items():
-                scan(f"{prefix}.{k}", x)
+                scan(f"{prefix}.{k}", x, () if k not in exempt else ("*",))
         elif isinstance(v, list):
             for i, x in enumerate(v):
-                scan(f"{prefix}[{i}]", x)
-        elif isinstance(v, float) and not math.isfinite(v):
+                scan(f"{prefix}[{i}]", x, exempt)
+        elif (isinstance(v, float) and not math.isfinite(v)
+              and "*" not in exempt):
             bad.append(prefix)
+
+    from repro.faults.plan import FAULTS
+    fault_sites = ("tensor", "wire", "process")
 
     with open(path) as f:
         for ln, line in enumerate(f, 1):
@@ -156,14 +181,28 @@ def verify_jsonl(path: str) -> dict:
             ev = json.loads(line)
             counts[ev.get("type", "?")] = counts.get(ev.get("type", "?"),
                                                      0) + 1
-            if ev.get("type") in ("trace", "round"):
-                scan(f"line {ln}", ev)
+            if ev.get("type") in ("trace", "round", "fault"):
+                chaos = (ev.get("type") == "trace"
+                         and ("fault_mask" in ev or "guard_valid" in ev))
+                scan(f"line {ln}", ev, chaos_diag if chaos else ())
+            if ev.get("type") == "fault":
+                if ev.get("kind") not in FAULTS:
+                    bad_schema.append(
+                        f"line {ln}: kind={ev.get('kind')!r}")
+                elif ev.get("site") not in fault_sites:
+                    bad_schema.append(
+                        f"line {ln}: site={ev.get('site')!r}")
     if not counts:
         raise ValueError(f"{path}: empty metrics stream")
     if bad:
         raise ValueError(
             f"{path}: non-finite values in {len(bad)} field(s), first: "
             + ", ".join(bad[:5]))
+    if bad_schema:
+        raise ValueError(
+            f"{path}: {len(bad_schema)} malformed fault event(s) "
+            f"(need kind in {FAULTS} and site in {fault_sites}), first: "
+            + "; ".join(bad_schema[:5]))
     return counts
 
 

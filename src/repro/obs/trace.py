@@ -24,6 +24,16 @@ identical backend calls (``Aggregator.tree_traced`` on gspmd,
                        per-fire buffered mask in repro.serve).
 * ``krum_scores`` / ``krum_selected`` / ``rfa_weights`` / ``rfa_residual``
                      — rule-specific intermediates (None for other rules).
+* ``fault_mask``     — (n,) ground truth of the chaos layer's injected
+                       faults this round (repro.faults, DESIGN.md §6),
+                       recomputed from ``(plan, attack_key)`` — injection
+                       is deterministic, so no side channel is needed.
+                       None when no plan is set.
+* ``guard_valid``    — (n,) the fail-closed guard's final row-validity
+                       verdict (False = rejected / zero weight); the
+                       guard's *detection*, scored against ``fault_mask``
+                       by ``repro.obs.detect.fault_metrics``. None when
+                       ``fault_guard`` is off.
 
 Everything here is diagnostics-only: the aggregate value never flows
 through this module's extra ops, so numerics cannot drift (pinned by
@@ -53,10 +63,13 @@ class RoundTrace:
     krum_selected: Any = None      # ()   i32 | None
     rfa_weights: Any = None        # (m,) f32 | None
     rfa_residual: Any = None       # ()   f32 | None
+    fault_mask: Any = None         # (n,) bool | None (injected ground truth)
+    guard_valid: Any = None        # (n,) bool | None (guard's verdict)
 
 
 _RT_DATA = ("influence", "dist_to_agg", "bucket_weights", "byz_mask",
-            "krum_scores", "krum_selected", "rfa_weights", "rfa_residual")
+            "krum_scores", "krum_selected", "rfa_weights", "rfa_residual",
+            "fault_mask", "guard_valid")
 
 jax.tree_util.register_pytree_node(
     RoundTrace,
@@ -104,6 +117,13 @@ def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
     on. The diagnostics additionally materialize the attacked ``sent``
     stack (the oracle twin of the fused in-kernel injection) to measure
     per-worker distances; that tensor feeds ONLY the trace, never ``g``.
+
+    The chaos layer mirrors ``engine.message_phase`` exactly: the plan's
+    injections are re-applied here (deterministic in the attack key, so
+    the injected tensors are identical) and the guard reroutes to the same
+    masked backend calls ``engine.guarded_message_phase`` makes — plus the
+    trace gains ``fault_mask`` (recomputed ground truth) and
+    ``guard_valid`` (the guard's verdict).
     """
     from repro.core import wire
 
@@ -112,18 +132,48 @@ def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
             "trace is not supported under agg_mode='all_to_all' — the "
             "shard_map backend never holds the stacked candidates in one "
             "place (RunSpec validates this)")
+
+    plan = getattr(cfg, "fault_plan", None)
+    guard = bool(getattr(cfg, "fault_guard", False))
+    fault_mask = None
+
     if isinstance(cand, wire.WireCandidates):
         if byz_mask is not None or weights is not None:
             raise TypeError("wire payloads carry no per-entry mask/weights")
-        agg, info = wire.wire_message_phase(cfg, attack_key, agg_key, cand,
-                                            return_info=True)
+        if plan is not None:
+            # fault_mask is materialized (zeros if no wire kinds fire) so
+            # the trace pytree is branch-stable under lax.cond — MARINA's
+            # sync round takes the dense path below, and both branches
+            # must return the same RoundTrace structure
+            from repro.faults import inject
+            if plan.message_faults:
+                cand = inject.inject_wire(plan, attack_key, cand)
+            fault_mask = inject.injected_mask(plan, attack_key, cand.n,
+                                              inject.MESSAGE_FAULTS)
+        (agg, info), valid = wire.wire_message_phase(
+            cfg, attack_key, agg_key, cand, return_info=True,
+            return_valid=True)
         dense = wire.reconstruct(cand)
-        sent = engine.apply_attack(cfg, attack_key, dense)
+        sent = engine.apply_attack(cfg, attack_key, dense,
+                                   stats_valid=valid)
         return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=None,
-                                 weights=None, info=info)
+                                 weights=None, info=info, valid=valid,
+                                 fault_mask=fault_mask)
+
+    if plan is not None:
+        from repro.faults import inject
+        if plan.tensor_faults:
+            cand = inject.inject_candidates(plan, attack_key, cand)
+        fault_mask = inject.injected_mask(
+            plan, attack_key, jax.tree.leaves(cand)[0].shape[0],
+            inject.TENSOR_FAULTS)
 
     clean = cfg.attack.name in ("NA", "LF") or (byz_mask is None
                                                 and cfg.n_byz == 0)
+    if guard:
+        return _traced_guarded(cfg, attack_key, agg_key, cand, clean,
+                               byz_mask=byz_mask, weights=weights,
+                               fault_mask=fault_mask)
     if cfg.agg_mode == "pallas":
         from repro.core.sharded_agg import tree_aggregate_pallas
         if clean:
@@ -158,7 +208,72 @@ def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
         agg, info = cfg.aggregator.tree_traced(agg_key, scaled)
 
     return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=byz_mask,
-                             weights=weights, info=info)
+                             weights=weights, info=info,
+                             fault_mask=fault_mask)
+
+
+def _traced_guarded(cfg, attack_key, agg_key, cand, clean, *, byz_mask,
+                    weights, fault_mask):
+    """Guarded telemetry twin: the same masked backend calls as
+    ``engine.guarded_message_phase`` (full roster) / the guarded branch of
+    ``engine.ingest_message_phase`` (buffered mask/weights), with
+    ``return_info=True``."""
+    from repro.faults import guard as fguard
+
+    valid_pre = fguard.finite_row_mask(cand)
+    if byz_mask is None and weights is None:
+        if cfg.agg_mode == "pallas":
+            from repro.core.sharded_agg import tree_aggregate_pallas
+            if clean:
+                agg, info = tree_aggregate_pallas(
+                    cfg, agg_key, cand, valid=valid_pre, return_info=True)
+                sent, valid = cand, valid_pre
+            elif cfg.attack.coord_apply is not None:
+                ctx = engine.fusable_attack_ctx(cfg, cand, cfg.byz_mask(),
+                                                stats_valid=valid_pre)
+                agg, info = tree_aggregate_pallas(
+                    cfg, agg_key, cand, attack_ctx=ctx, valid=valid_pre,
+                    return_info=True)
+                sent = engine.apply_attack(cfg, attack_key, cand,
+                                           stats_valid=valid_pre)
+                valid = valid_pre
+            else:
+                sent = engine.apply_attack(cfg, attack_key, cand,
+                                           stats_valid=valid_pre)
+                valid = fguard.finite_row_mask(sent)
+                agg, info = tree_aggregate_pallas(
+                    cfg, agg_key, sent, valid=valid, return_info=True)
+        else:
+            sent = engine.apply_attack(cfg, attack_key, cand,
+                                       stats_valid=valid_pre)
+            valid = fguard.finite_row_mask(sent)
+            agg, info = cfg.aggregator.tree_masked(agg_key, sent, valid,
+                                                   return_info=True)
+        return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=None,
+                                 weights=None, info=info, valid=valid,
+                                 fault_mask=fault_mask)
+
+    sent = engine.apply_attack(cfg, attack_key, cand, mask=byz_mask,
+                               stats_valid=valid_pre)
+    valid = fguard.finite_row_mask(sent)
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        agg, info = tree_aggregate_pallas(cfg, agg_key, sent,
+                                          weights=weights, valid=valid,
+                                          return_info=True)
+    else:
+        scaled = sent
+        if weights is not None:
+            w = weights.astype(jnp.float32)
+            scaled = jax.tree.map(
+                lambda a: (a.astype(jnp.float32)
+                           * w.reshape((-1,) + (1,) * (a.ndim - 1))
+                           ).astype(a.dtype), sent)
+        agg, info = cfg.aggregator.tree_masked(agg_key, scaled, valid,
+                                               return_info=True)
+    return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=byz_mask,
+                             weights=weights, info=info, valid=valid,
+                             fault_mask=fault_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -166,9 +281,17 @@ def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
 # ---------------------------------------------------------------------------
 
 def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
-                 info) -> RoundTrace:
+                 info, valid=None, fault_mask=None) -> RoundTrace:
     """Assemble the RoundTrace from the backend's rule intermediates plus
-    the materialized sent stack. All fp32, diagnostics only."""
+    the materialized sent stack. All fp32, diagnostics only.
+
+    ``valid`` (guarded runs) select-replaces rejected rows with zero before
+    any reduction — a multiplicative zero would propagate their NaN/inf
+    (0·NaN = NaN) into every diagnostic — and swaps in the guard's
+    renormalized bucket operator so influence reflects the masked rule.
+    Rejected rows read zero influence and a finite distance-to-aggregate
+    (measured from the zero row that replaced them).
+    """
     from repro.kernels.norm_agg import bucket_matrix
 
     agg_obj = cfg.aggregator
@@ -176,6 +299,8 @@ def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
     n = leaves[0].shape[0]
     x = jnp.concatenate(
         [a.reshape(n, -1).astype(jnp.float32) for a in leaves], axis=1)
+    if valid is not None:
+        x = jnp.where(valid[:, None], x, 0.0)
     w_row = None if weights is None else weights.astype(jnp.float32)
     xs = x if w_row is None else x * w_row[:, None]
 
@@ -186,7 +311,12 @@ def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
             # pallas holds the operator on-chip; the permutation is a pure
             # function of agg_key (engine key schedule), so recompute it
             perm = jax.random.permutation(agg_key, n)
-        w_b = bucket_matrix(perm, n, agg_obj.bucket_size)
+        if valid is not None:
+            from repro.faults.guard import masked_bucket_matrix
+            w_b, _ = masked_bucket_matrix(perm, n, agg_obj.bucket_size,
+                                          valid)
+        else:
+            w_b = bucket_matrix(perm, n, agg_obj.bucket_size)
         y = w_b @ xs
     else:
         y = xs
@@ -221,6 +351,8 @@ def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
     infl = bw if w_b is None else bw @ w_b
     if w_row is not None:
         infl = infl * w_row
+    if valid is not None:
+        infl = jnp.where(valid, infl, 0.0)
 
     agg_flat = jnp.concatenate(
         [a.reshape(-1).astype(jnp.float32) for a in jax.tree.leaves(agg)])
@@ -233,4 +365,5 @@ def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
     return RoundTrace(rule=rule, influence=infl, dist_to_agg=dist,
                       bucket_weights=bw, byz_mask=mask,
                       krum_scores=krum_scores, krum_selected=krum_selected,
-                      rfa_weights=rfa_weights, rfa_residual=rfa_residual)
+                      rfa_weights=rfa_weights, rfa_residual=rfa_residual,
+                      fault_mask=fault_mask, guard_valid=valid)

@@ -33,6 +33,23 @@ Chaos knobs (all seeded, all off by default):
   * ``duplicate`` / ``replay_lag`` — per-dispatch probability the network
     delivers a second copy ``replay_lag`` after the first
     (``replay=True``); the buffer's sequence-number dedup must reject it.
+  * ``crash`` / ``recovery_lag`` — per-dispatch probability the client
+    process dies mid-flight (repro.faults process-site chaos, DESIGN.md
+    §6): the event appears (``crashed=True``) so the server observes the
+    loss, nothing is ingested, and the client only re-dispatches
+    ``recovery_lag`` after the observation (process restart).
+  * ``hang`` / ``hang_lag`` — per-dispatch probability the client wedges
+    and recovers: the update still arrives (``hung=True``) but
+    ``hang_lag`` late, so it lands stale and the staleness weighting
+    discounts it.
+
+The fault labels are observational: a crash behaves exactly like a drop
+(plus the recovery lag already baked into the timeline) and a hang like a
+straggler's late arrival, so relabeling ``crashed -> dropped`` and
+clearing ``hung`` in a saved trace replays the IDENTICAL parameter
+trajectory — the invariant tests/test_serve.py pins. New chaos draws are
+gated on their knobs, so streams with ``crash = hang = 0`` are
+bit-identical to the pre-fault generator.
 
 Events at the same virtual instant are ordered by ``(seq, replay,
 client)``: one "wave" of simultaneous arrivals is ingested (and any full
@@ -60,16 +77,22 @@ class Arrival:
     seq: int                  # per-client dispatch sequence number
     replay: bool = False      # duplicate delivery of an already-sent update
     dropped: bool = False     # lost in flight: observe + re-dispatch only
+    crashed: bool = False     # client process died mid-flight (no ingest;
+    #                           re-dispatch recovery_lag after observation)
+    hung: bool = False        # client wedged: arrival delayed by hang_lag
 
     def to_dict(self) -> dict:
         return {"t": self.t, "client": self.client, "seq": self.seq,
-                "replay": self.replay, "dropped": self.dropped}
+                "replay": self.replay, "dropped": self.dropped,
+                "crashed": self.crashed, "hung": self.hung}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Arrival":
         return cls(t=float(d["t"]), client=int(d["client"]),
                    seq=int(d["seq"]), replay=bool(d.get("replay", False)),
-                   dropped=bool(d.get("dropped", False)))
+                   dropped=bool(d.get("dropped", False)),
+                   crashed=bool(d.get("crashed", False)),
+                   hung=bool(d.get("hung", False)))
 
 
 class ArrivalProcess:
@@ -85,13 +108,16 @@ class ArrivalProcess:
                  sigma: float = 1.0, straggler_frac: float = 0.0,
                  straggler_factor: float = 10.0, dropout: float = 0.0,
                  duplicate: float = 0.0, replay_lag: float = 0.5,
+                 crash: float = 0.0, recovery_lag: float = 2.0,
+                 hang: float = 0.0, hang_lag: float = 5.0,
                  path: Optional[str] = None, events: Optional[list] = None):
         if mode not in ARRIVAL_MODES:
             raise ValueError(f"mode {mode!r} not in {ARRIVAL_MODES}")
         if n_clients < 1:
             raise ValueError(f"n_clients={n_clients} must be >= 1")
         for nm, v in (("dropout", dropout), ("duplicate", duplicate),
-                      ("straggler_frac", straggler_frac)):
+                      ("straggler_frac", straggler_frac),
+                      ("crash", crash), ("hang", hang)):
             if not 0.0 <= v < 1.0:
                 raise ValueError(f"{nm}={v} must be in [0, 1)")
         self.mode = mode
@@ -105,6 +131,10 @@ class ArrivalProcess:
         self.dropout = float(dropout)
         self.duplicate = float(duplicate)
         self.replay_lag = float(replay_lag)
+        self.crash = float(crash)
+        self.recovery_lag = float(recovery_lag)
+        self.hang = float(hang)
+        self.hang_lag = float(hang_lag)
         self._trace: Optional[list] = None
         if mode == "trace":
             if events is None:
@@ -166,22 +196,36 @@ class ArrivalProcess:
         def dispatch(client: int, seq: int, t0: float) -> None:
             t_arr = t0 + draw(client)
             dropped = bool(rng.random() < self.dropout)
-            heapq.heappush(heap, (t_arr, seq, 0, client, dropped))
-            if not dropped and self.duplicate and \
+            # fault draws are gated on their knobs so a crash=hang=0
+            # process consumes the identical RNG stream as before
+            crashed = hung = False
+            if self.crash:
+                crashed = not dropped and bool(rng.random() < self.crash)
+            if self.hang:
+                hung = not dropped and not crashed and \
+                    bool(rng.random() < self.hang)
+            if hung:
+                t_arr += self.hang_lag
+            heapq.heappush(heap, (t_arr, seq, 0, client, dropped, crashed,
+                                  hung))
+            if not dropped and not crashed and self.duplicate and \
                     rng.random() < self.duplicate:
                 heapq.heappush(
-                    heap, (t_arr + self.replay_lag, seq, 1, client, False))
+                    heap, (t_arr + self.replay_lag, seq, 1, client,
+                           False, False, False))
 
         for c in range(n):
             dispatch(c, 0, 0.0)
         while True:
-            t, seq, rep, client, dropped = heapq.heappop(heap)
+            t, seq, rep, client, dropped, crashed, hung = heapq.heappop(heap)
             yield Arrival(t=t, client=client, seq=seq, replay=bool(rep),
-                          dropped=dropped)
+                          dropped=dropped, crashed=crashed, hung=hung)
             if not rep:
                 # closed loop: the client re-dispatches the moment its
-                # previous update resolves (arrives or times out)
-                dispatch(client, seq + 1, t)
+                # previous update resolves (arrives or times out); a
+                # crashed client first restarts, costing recovery_lag
+                dispatch(client, seq + 1,
+                         t + (self.recovery_lag if crashed else 0.0))
 
 
 def make_arrivals(spec) -> ArrivalProcess:

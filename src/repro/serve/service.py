@@ -226,7 +226,8 @@ class AggregationService:
             "disp_version": svc["disp_version"].copy(),
             "last_accepted": svc["last_accepted"].copy(),
             "counters": np.array(
-                [svc["cursor"], svc["version"], svc["dropped"]], np.int64),
+                [svc["cursor"], svc["version"], svc["dropped"],
+                 svc["crashed"], svc["hung"]], np.int64),
             "buf_stats": np.array(
                 [svc["stats"][k] for k in
                  ("accepted", "rej_replay", "rej_dup_client")], np.int64),
@@ -285,6 +286,7 @@ class AggregationService:
 
         buffer = DoubleBuffer(K, n)
         svc = {"cursor": 0, "version": 0, "dropped": 0,
+               "crashed": 0, "hung": 0,
                "pending": np.ones(n, bool),
                "disp_version": np.zeros(n, np.int64),
                "last_accepted": buffer.last_accepted,
@@ -306,9 +308,10 @@ class AggregationService:
             svc["disp_version"] = np.array(snap["disp_version"],
                                            dtype=np.int64)
             buffer.last_accepted[:] = np.asarray(snap["last_accepted"])
-            cur, ver, dropped = (int(x) for x in np.asarray(
+            cur, ver, dropped, crashed, hung = (int(x) for x in np.asarray(
                 snap["counters"]))
-            svc.update(cursor=cur, version=ver, dropped=dropped)
+            svc.update(cursor=cur, version=ver, dropped=dropped,
+                       crashed=crashed, hung=hung)
             for k, v in zip(("accepted", "rej_replay", "rej_dup_client"),
                             np.asarray(snap["buf_stats"])):
                 buffer.stats[k] = int(v)
@@ -404,9 +407,15 @@ class AggregationService:
                 # the client re-dispatches at the end of this segment (a
                 # fire, so checkpoints capture it, or the wave boundary)
                 redispatch.append(ev.client)
-            if ev.dropped:
-                svc["dropped"] += 1
+            if ev.dropped or ev.crashed:
+                # a crash is observationally a drop: nothing is ingested,
+                # the client re-dispatches (with recovery lag already baked
+                # into the event timeline). Only the counter differs, which
+                # is what keeps the relabeled-trace replay bit-identical.
+                svc["dropped" if ev.dropped else "crashed"] += 1
             else:
+                if ev.hung:
+                    svc["hung"] += 1   # late-but-delivered; ingested normally
                 if svc["pending"][ev.client] and \
                         ev.seq > buffer.last_accepted[ev.client] and \
                         not buffer.in_buffer[ev.client]:
@@ -467,8 +476,10 @@ class AggregationService:
                             sink.emit({"type": "counter", "name": cname,
                                        "round": r,
                                        "value": int(buffer.stats[cname])})
-                        sink.emit({"type": "counter", "name": "dropped",
-                                   "round": r, "value": int(svc["dropped"])})
+                        for cname in ("dropped", "crashed", "hung"):
+                            sink.emit({"type": "counter", "name": cname,
+                                       "round": r,
+                                       "value": int(svc[cname])})
                     occ_sum = 0
                     occ_n = 0
                     svc["version"] = r + 1
@@ -488,6 +499,8 @@ class AggregationService:
                                    rej_dup_client=buffer.stats
                                    ["rej_dup_client"],
                                    dropped=svc["dropped"],
+                                   crashed=svc["crashed"],
+                                   hung=svc["hung"],
                                    wall_s=round(time.time() - t0, 4))
                         if digest:
                             rec["params_sha1"] = params_digest(
@@ -553,6 +566,7 @@ class AggregationService:
                 m["n_filtered"] = det["n_filtered"]
                 traces.append(th)
         stats = {**buffer.stats, "dropped": svc["dropped"],
+                 "crashed": svc["crashed"], "hung": svc["hung"],
                  "events": svc["cursor"], "rounds": svc["version"]}
         return ServeResult(
             spec=self.spec, history=history, state=state, stats=stats,

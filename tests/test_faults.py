@@ -1,0 +1,476 @@
+"""System-fault chaos layer (repro.faults, DESIGN.md §6).
+
+The load-bearing guarantees:
+
+* a ``FaultPlan`` is pure replayable config: JSON round-trip exact, every
+  injection a deterministic function of (plan, round key);
+* masked aggregation IS the drop-workers oracle: ``tree_masked`` with
+  ``valid`` equals the rule run on the physically-dropped subset (exact
+  for the coordinate rules, fp-tolerance for the norm rules), and the
+  pallas masked kernels match the gspmd masked oracle;
+* the guard fails closed end-to-end: NaN/inf rows and undecodable wire
+  payloads get zero aggregation weight and the aggregate stays finite;
+* the OFF path is untouched: with no plan and the guard off,
+  ``engine.message_phase`` traces the identical jaxpr as the raw
+  attack+aggregate composition — zero guard equations on the hot path;
+* a crash-injected subprocess sweep retries to a summary byte-identical
+  to the fault-free run (process-site chaos is absorbed, not recorded).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import get_aggregator
+from repro.core.byz_vr_marina import ByzVRMarinaConfig
+from repro.core import engine
+from repro.faults import guard, inject
+from repro.faults.plan import FaultPlan, FaultSpec, as_plan
+from tests._jaxpr_scan import iter_eqns
+
+KEY = jax.random.PRNGKey(0)
+RULES = ("mean", "cm", "tm", "rfa", "krum")
+
+
+def _cand(key, n=10, dims=((7,), (3, 2))):
+    ks = jax.random.split(key, len(dims))
+    return {f"p{i}": jax.random.normal(k, (n,) + d)
+            for i, (k, d) in enumerate(zip(ks, dims))}
+
+
+def _agg(rule, **kw):
+    kw.setdefault("n_byz", 2)
+    return get_aggregator(rule, **kw)
+
+
+# ---------------------------------------------------------------------------
+# plan: pure, validated, JSON-round-trippable config
+# ---------------------------------------------------------------------------
+
+def test_plan_roundtrip_exact():
+    plan = FaultPlan(seed=7, faults=(
+        FaultSpec("nan_grad", prob=0.5, workers=(1, 3)),
+        FaultSpec("corrupt_wire"), FaultSpec("crash", prob=0.1)))
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    assert FaultPlan.from_dict(json.loads(plan.to_json())) == plan
+    # string shorthand + as_plan coercion
+    assert as_plan({"faults": ["stale_replay"]}).faults[0].kind == \
+        "stale_replay"
+    assert as_plan(None) is None and as_plan({}) is None
+    assert as_plan(plan) is plan
+
+
+def test_plan_validation_fails_closed():
+    with pytest.raises(ValueError, match="did you mean 'nan_grad'"):
+        FaultSpec("nan_gradd")
+    with pytest.raises(ValueError, match="prob"):
+        FaultSpec("crash", prob=1.5)
+    with pytest.raises(ValueError, match="unknown FaultPlan keys"):
+        FaultPlan.from_dict({"seed": 0, "fault": []})
+    with pytest.raises(ValueError, match="unknown FaultSpec keys"):
+        FaultPlan.from_dict({"faults": [{"kind": "crash", "probs": 1}]})
+
+
+def test_worst_case_faulty_counts_message_sites_only():
+    plan = FaultPlan(faults=(FaultSpec("nan_grad", workers=(1, 2)),
+                             FaultSpec("corrupt_wire", workers=(2, 3)),
+                             FaultSpec("crash", workers=(0, 1, 2, 3, 4))))
+    # crash is process-site: absorbed by retry, not a message-budget hit
+    assert plan.worst_case_faulty(10) == 3
+    assert FaultPlan(faults=(FaultSpec("inf_blowup"),)).worst_case_faulty(6) \
+        == 6
+    assert FaultPlan(faults=(FaultSpec("nan_grad", prob=0.0),)
+                     ).worst_case_faulty(6) == 0
+
+
+# ---------------------------------------------------------------------------
+# injection: deterministic, row-exact, honest rows untouched
+# ---------------------------------------------------------------------------
+
+def test_tensor_injection_deterministic_and_row_exact():
+    cand = _cand(KEY)
+    plan = FaultPlan(seed=3, faults=(
+        FaultSpec("nan_grad", workers=(1,)),
+        FaultSpec("inf_blowup", workers=(4,)),
+        FaultSpec("stale_replay", workers=(6,))))
+    out = inject.inject_candidates(plan, KEY, cand)
+    out2 = inject.inject_candidates(plan, KEY, cand)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for leaf, src in zip(jax.tree.leaves(out), jax.tree.leaves(cand)):
+        leaf, src = np.asarray(leaf), np.asarray(src)
+        assert np.isnan(leaf[1]).all()
+        assert np.isposinf(leaf[4]).all()
+        assert (leaf[6] == 0.0).all()
+        keep = [i for i in range(10) if i not in (1, 4, 6)]
+        np.testing.assert_array_equal(leaf[keep], src[keep])
+    mask = np.asarray(inject.injected_mask(plan, KEY, 10,
+                                           inject.TENSOR_FAULTS))
+    np.testing.assert_array_equal(mask, np.isin(np.arange(10), (1, 4, 6)))
+
+
+def test_probabilistic_injection_replayable_and_key_sensitive():
+    plan = FaultPlan(seed=11, faults=(FaultSpec("nan_grad", prob=0.5),))
+    m1 = np.asarray(inject.injected_mask(plan, KEY, 64))
+    m2 = np.asarray(inject.injected_mask(plan, KEY, 64))
+    np.testing.assert_array_equal(m1, m2)
+    m3 = np.asarray(inject.injected_mask(plan, jax.random.PRNGKey(9), 64))
+    assert (m1 != m3).any()          # a fresh round key redraws the hits
+    assert 0 < m1.sum() < 64
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation == drop-workers oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", RULES)
+def test_tree_masked_equals_drop_oracle(rule):
+    """Zero-weighting invalid rows IS dropping them (s=1): identical to the
+    rule on the surviving subset even when the dead rows are NaN/inf."""
+    agg = _agg(rule)
+    cand = _cand(KEY, n=10)
+    valid_np = np.ones(10, bool)
+    valid_np[[2, 7]] = False
+    poisoned = jax.tree.map(
+        lambda a: a.at[2].set(jnp.nan).at[7].set(jnp.inf), cand)
+    got = agg.tree_masked(KEY, poisoned, jnp.asarray(valid_np))
+    want = agg.tree(KEY, jax.tree.map(lambda a: a[valid_np], cand))
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        g, w = np.asarray(g), np.asarray(w)
+        assert np.isfinite(g).all()
+        if rule == "cm":
+            # pure selection, no arithmetic: bit-exact
+            np.testing.assert_array_equal(g, w)
+        else:
+            # the masked twins reduce in a different order over the
+            # select-zeroed full stack; parity is within ~1 fp32 ulp
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bucket", [0, 2, 3])
+@pytest.mark.parametrize("rule", RULES)
+def test_pallas_masked_matches_gspmd_masked(rule, bucket):
+    """The pallas kernels' ``valid`` operand implements the same masked
+    semantics as the gspmd oracle, including renormalized masked bucketing
+    and a non-tile-multiple d."""
+    from repro.core.sharded_agg import tree_aggregate_pallas
+    n = 9 if bucket == 3 else 10
+    cfg = ByzVRMarinaConfig(
+        n_workers=n, n_byz=1, agg_mode="pallas",
+        aggregator=_agg(rule, bucket_size=bucket))
+    cand = _cand(KEY, n=n, dims=((5,), (3, 2)))     # d=11, not tile-sized
+    valid_np = np.ones(n, bool)
+    valid_np[[1, n - 2]] = False
+    poisoned = jax.tree.map(lambda a: a.at[1].set(jnp.nan), cand)
+    valid = jnp.asarray(valid_np)
+    got = tree_aggregate_pallas(cfg, KEY, poisoned, valid=valid)
+    want = cfg.aggregator.tree_masked(KEY, poisoned, valid)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# the guard-OFF hot path is untouched (jaxpr pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["gspmd", "pallas"])
+def test_guard_off_jaxpr_identical_to_raw_composition(mode):
+    """With fault_plan=None and fault_guard=False, message_phase must trace
+    the exact jaxpr of attack+aggregate — the chaos layer's routing is
+    Python-static and adds ZERO equations to the hot path."""
+    cfg = ByzVRMarinaConfig(n_workers=8, n_byz=0, agg_mode=mode,
+                            aggregator=_agg("cm"))
+    cand = _cand(KEY, n=8)
+    k1, k2 = jax.random.split(KEY)
+
+    def routed(c):
+        return engine.message_phase(cfg, k1, k2, c)
+
+    def raw(c):
+        if mode == "pallas":
+            from repro.core.sharded_agg import tree_aggregate_pallas
+            return tree_aggregate_pallas(cfg, k2, c)
+        return engine.aggregate(cfg, k2, engine.apply_attack(cfg, k1, c))
+
+    assert str(jax.make_jaxpr(routed)(cand)) == \
+        str(jax.make_jaxpr(raw)(cand))
+    for eqn in iter_eqns(jax.make_jaxpr(routed)(cand).jaxpr):
+        assert eqn.primitive.name != "is_finite"
+
+
+@pytest.mark.parametrize("mode", ["gspmd", "pallas"])
+def test_guard_on_adds_finiteness_reduction(mode):
+    cfg = ByzVRMarinaConfig(n_workers=8, n_byz=0, agg_mode=mode,
+                            aggregator=_agg("cm"), fault_guard=True)
+    cand = _cand(KEY, n=8)
+    k1, k2 = jax.random.split(KEY)
+    prims = {e.primitive.name for e in iter_eqns(jax.make_jaxpr(
+        lambda c: engine.message_phase(cfg, k1, k2, c))(cand).jaxpr)}
+    assert "is_finite" in prims
+
+
+# ---------------------------------------------------------------------------
+# engine-level graceful degradation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["gspmd", "pallas"])
+def test_guarded_phase_equals_physical_drop(mode):
+    """End to end through the engine: a plan that NaNs workers {8, 9} plus
+    the guard produces the aggregate of the 8-worker run that never had
+    them (bitwise under gspmd, kernel tolerance under pallas)."""
+    plan = FaultPlan(seed=5, faults=(FaultSpec("nan_grad", workers=(8, 9)),))
+    cfg = ByzVRMarinaConfig(n_workers=10, n_byz=0, agg_mode=mode,
+                            aggregator=_agg("cm"), fault_plan=plan,
+                            fault_guard=True)
+    cfg_sub = ByzVRMarinaConfig(n_workers=8, n_byz=0, agg_mode=mode,
+                                aggregator=_agg("cm"))
+    cand = _cand(KEY, n=10)
+    k1, k2 = jax.random.split(KEY)
+    got = engine.message_phase(cfg, k1, k2, cand)
+    want = engine.message_phase(cfg_sub, k1, k2,
+                                jax.tree.map(lambda a: a[:8], cand))
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        g, w = np.asarray(g), np.asarray(w)
+        assert np.isfinite(g).all()
+        if mode == "gspmd":
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-6)
+
+
+def test_guard_never_credits_byzantine_rows_back():
+    """A byz∩faulty row stays rejected even when the fused attack would
+    overwrite it: BF transforms the candidate value, so the attacked row
+    is still NaN and crediting it back would poison the kernel."""
+    from repro.core.attacks import get_attack
+    plan = FaultPlan(seed=1, faults=(FaultSpec("nan_grad", workers=(0, 7)),))
+    cfg = ByzVRMarinaConfig(n_workers=10, n_byz=2, agg_mode="pallas",
+                            aggregator=_agg("cm"), attack=get_attack("BF"),
+                            fault_plan=plan, fault_guard=True)
+    cand = _cand(KEY, n=10)
+    k1, k2 = jax.random.split(KEY)
+    agg = engine.message_phase(cfg, k1, k2, cand)
+    for leaf in jax.tree.leaves(agg):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---------------------------------------------------------------------------
+# wire-site faults: decode guard rejects undecodable payloads
+# ---------------------------------------------------------------------------
+
+def test_corrupt_wire_rejected_pinned_seed():
+    from repro.core import wire
+    from repro.core.compressors import top_k
+    comp = top_k(ratio=0.5)
+    cand = _cand(KEY, n=8, dims=((33,),))
+    qkeys = jax.random.split(jax.random.PRNGKey(2), 8)
+    wc = wire.pack_candidates(comp, qkeys, cand)
+    plan = FaultPlan(seed=4, faults=(
+        FaultSpec("corrupt_wire", workers=(1, 5)),))
+    wc2 = inject.inject_wire(plan, KEY, wc)
+    pv = np.asarray(guard.payload_valid(wc2))
+    # pinned (plan.seed, round key): the bit-flipped sparse indices land
+    # outside [0, d) and/or the values go non-finite -> rejected
+    assert not pv[1] and not pv[5]
+    assert pv[[0, 2, 3, 4, 6, 7]].all()
+    # honest rows' payloads are bit-identical through injection
+    dense, dense2 = wire.reconstruct(wc), wire.reconstruct(wc2)
+    for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(dense2)):
+        keep = [i for i in range(8) if i not in (1, 5)]
+        np.testing.assert_array_equal(np.asarray(a)[keep],
+                                      np.asarray(b)[keep])
+
+
+def test_wire_guarded_phase_masks_corrupted_rows():
+    from repro.core import wire
+    from repro.core.compressors import top_k
+    plan = FaultPlan(seed=4, faults=(
+        FaultSpec("corrupt_wire", workers=(1, 5)),))
+    cfg = ByzVRMarinaConfig(n_workers=8, n_byz=0, agg_mode="pallas",
+                            aggregator=_agg("cm"), compressor=top_k(0.5),
+                            fault_plan=plan, fault_guard=True)
+    cand = _cand(KEY, n=8, dims=((33,),))
+    qkeys = jax.random.split(jax.random.PRNGKey(2), 8)
+    wc = inject.inject_wire(plan, KEY,
+                            wire.pack_candidates(cfg.compressor, qkeys, cand))
+    k1, k2 = jax.random.split(KEY)
+    (agg, _), valid = wire.wire_message_phase(cfg, k1, k2, wc,
+                                              return_info=True,
+                                              return_valid=True)
+    v = np.asarray(valid)
+    assert not v[1] and not v[5] and v.sum() == 6
+    for leaf in jax.tree.leaves(agg):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # and the guarded aggregate equals the masked oracle over the
+    # reconstructed stack
+    want = cfg.aggregator.tree_masked(k2, wire.reconstruct(wc),
+                                      jnp.asarray(v))
+    for g, w in zip(jax.tree.leaves(agg), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing + fault telemetry through a real run
+# ---------------------------------------------------------------------------
+
+def test_runspec_fault_validation():
+    from repro.api import RunSpec
+    with pytest.raises(ValueError, match="did you mean"):
+        RunSpec(faults={"faults": [{"kind": "nan_gradd"}]})
+    with pytest.raises(ValueError, match="all_to_all"):
+        RunSpec(agg_mode="all_to_all", fault_guard=True)
+    with pytest.warns(UserWarning, match="budget"):
+        RunSpec(n_workers=5, n_byz=1,
+                faults={"faults": [{"kind": "nan_grad",
+                                    "workers": [2, 3]}]})
+
+
+def test_run_reports_fault_recall():
+    from repro.api import RunSpec
+    spec = RunSpec(task="logreg", method="sgd", n_workers=10, n_byz=2,
+                   attack="ALIE", aggregator="cm", bucket_size=0,
+                   agg_mode="gspmd", steps=4, seed=0, trace=True,
+                   faults={"seed": 2, "faults": [{"kind": "nan_grad",
+                                                  "workers": [8, 9]}]},
+                   fault_guard=True,
+                   data_kwargs={"dim": 12, "n_samples": 64,
+                                "batch_size": 8})
+    res = spec.run(log_every=1)
+    for m in res.history:
+        assert np.isfinite(m["loss"])
+        assert m["fault_recall"] == 1.0
+        assert m["n_fault_rejected"] == 2
+
+
+def test_verify_jsonl_gates_fault_events(tmp_path):
+    """``python -m repro.obs.sink --verify`` fails closed on schema-less or
+    non-finite fault events (satellite 6)."""
+    from repro.obs.sink import JsonlSink, verify_jsonl
+
+    def stream(name, event):
+        p = tmp_path / name
+        s = JsonlSink(str(p))
+        s.emit(event)
+        s.close()
+        return str(p)
+
+    ok = stream("ok.jsonl", {"type": "fault", "kind": "nan_grad",
+                             "site": "tensor", "rule": "cm"})
+    assert verify_jsonl(ok)["fault"] == 1
+    with pytest.raises(ValueError, match="malformed fault"):
+        verify_jsonl(stream("kind.jsonl",
+                            {"type": "fault", "kind": "meteor_strike",
+                             "site": "tensor"}))
+    with pytest.raises(ValueError, match="malformed fault"):
+        verify_jsonl(stream("site.jsonl",
+                            {"type": "fault", "kind": "crash",
+                             "site": "moon"}))
+    with pytest.raises(ValueError, match="non-finite"):
+        verify_jsonl(stream("inf.jsonl",
+                            {"type": "fault", "kind": "crash",
+                             "site": "process", "lag": float("inf")}))
+
+
+def test_verify_jsonl_chaos_trace_carveout(tmp_path):
+    """A chaos-context trace (fault_mask/guard_valid present) may record
+    +inf in rule intermediates — the guard's sort-fill for a rejected
+    bucket IS inf, and that is honest telemetry. Outside a chaos context
+    (or in any other field/event type) non-finite still fails closed."""
+    from repro.obs.sink import JsonlSink, verify_jsonl
+
+    def stream(name, *events):
+        p = tmp_path / name
+        s = JsonlSink(str(p))
+        for e in events:
+            s.emit(e)
+        s.close()
+        return str(p)
+
+    chaos = stream("chaos.jsonl",
+                   {"type": "trace", "rule": "krum",
+                    "guard_valid": [True, True, False],
+                    "krum_scores": [1.0, float("inf")],
+                    "influence": [0.5, 0.5, float("nan")]})
+    assert verify_jsonl(chaos)["trace"] == 1
+    # same inf score WITHOUT the chaos declaration: still rejected
+    with pytest.raises(ValueError, match="non-finite"):
+        verify_jsonl(stream("plain.jsonl",
+                            {"type": "trace", "rule": "krum",
+                             "krum_scores": [1.0, float("inf")]}))
+    # chaos context does not launder non-diagnostic fields or round events
+    with pytest.raises(ValueError, match="non-finite"):
+        verify_jsonl(stream("field.jsonl",
+                            {"type": "trace", "rule": "cm",
+                             "guard_valid": [True],
+                             "byz_mask": [False],
+                             "custom_metric": float("nan")}))
+    with pytest.raises(ValueError, match="non-finite"):
+        verify_jsonl(stream("round.jsonl",
+                            {"type": "round", "loss": float("inf"),
+                             "step": 0}))
+
+
+def test_train_cli_plumbs_faults_into_spec():
+    """--faults / --fault-guard reach the resolved RunSpec on the lm path
+    (they are auto-generated from RunSpec fields, but spec_from_args builds
+    the spec explicitly — a dropped field here fails silently)."""
+    from repro.launch.train import build_parser, spec_from_args
+    args = build_parser().parse_args(
+        ["--steps", "2",
+         "--faults", '{"seed": 3, "faults": [{"kind": "nan_grad", '
+                     '"workers": [7]}]}',
+         "--fault-guard"])
+    from repro.faults.plan import as_plan
+    spec = spec_from_args(args)
+    assert spec.fault_guard is True
+    plan = as_plan(spec.faults)
+    assert plan is not None and plan.seed == 3
+    assert plan.faults[0].kind == "nan_grad"
+    assert plan.faults[0].workers == (7,)
+
+
+# ---------------------------------------------------------------------------
+# process-site chaos: a crash-injected sweep converges to the same bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_kill_injected_sweep_summary_identical(tmp_path):
+    """Crash-on-first-attempt cells retry on a fresh slot and finish: the
+    sweep summary is byte-identical to the fault-free sweep, and the
+    ledger keeps the forensic trail (exit 137 + attempt history)."""
+    from repro import exec as xc
+    from repro.api import RunSpec, Sweep
+
+    base = RunSpec(task="logreg", method="sgd", n_workers=4, n_byz=1,
+                   attack="ALIE", aggregator="cm", bucket_size=0, steps=4,
+                   data_kwargs={"dim": 8, "n_samples": 32, "batch_size": 8})
+    cells = list(Sweep(base, {"lr": (0.5, 0.1)}).expand())
+    plan = FaultPlan(seed=0, faults=(FaultSpec("crash", workers=(0,)),))
+
+    def sweep_summary(subdir, fault_plan):
+        pool = xc.WorkerPool(max_workers=2, timeout_s=300,
+                             jax_platform="cpu", max_retries=2,
+                             backoff_s=0.05, fault_plan=fault_plan)
+        srun = xc.run_cells(cells, out_dir=str(tmp_path / subdir),
+                            pool=pool, batch=False,
+                            run_kw={"log_every": 2})
+        assert not srun.failures
+        path = tmp_path / subdir / "summary.json"
+        xc.write_summary(str(path), xc.summarize(srun.artifacts))
+        return path
+
+    clean = sweep_summary("clean", None)
+    chaotic = sweep_summary("chaos", plan)
+    assert clean.read_bytes() == chaotic.read_bytes()
+
+    led = xc.Ledger(str(tmp_path / "chaos" / "ledger.jsonl"))
+    recs = [r for r in led.load().values() if r.get("status") == "done"]
+    crashed = [r for r in recs if r.get("injected_fault") == "crash"]
+    assert len(crashed) == 1
+    hist = crashed[0]["attempt_history"]
+    assert hist and hist[0]["returncode"] == 137
+    assert crashed[0]["attempts"] == 2

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core.aggregators import bucketize, coord_median, get_aggregator
 from repro.core.compressors import rand_k
@@ -100,3 +100,36 @@ def test_median_breakdown_resilience(seed):
     bad = 1e6 * jnp.ones((3, 5))
     z = coord_median(jnp.concatenate([good, bad]))
     assert float(jnp.max(jnp.abs(z))) <= 1.0 + 1e-6
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=arrays, rule=st.sampled_from(["mean", "cm", "tm", "rfa", "krum"]),
+       mode=st.sampled_from(["gspmd", "pallas"]),
+       bucket=st.sampled_from([0, 2, 3]),
+       n=st.integers(6, 14), d=st.integers(3, 70),
+       n_byz=st.integers(0, 2), n_faulty=st.integers(1, 3))
+def test_guarded_aggregate_finite_within_budget(seed, rule, mode, bucket, n,
+                                                d, n_byz, n_faulty):
+    """Fault-guard degradation property (DESIGN.md §6): whenever the finite
+    candidates satisfy 2·(n_byz + n_faulty) < n, the masked aggregate is
+    finite on EVERY rule x backend — across bucket sizes and
+    non-tile-multiple d, with the faulty rows NaN/inf and the byzantine
+    rows finite-but-huge (the guard's job vs the aggregator's job)."""
+    assume(2 * (n_byz + n_faulty) < n)
+    from repro.core.byz_vr_marina import ByzVRMarinaConfig
+    from repro.core.sharded_agg import tree_aggregate_pallas
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, d))
+    x = x.at[:n_byz].mul(1e6)                       # statistical adversary
+    fill = jnp.where(jnp.arange(n_faulty)[:, None] % 2 == 0, jnp.nan,
+                     jnp.inf)
+    x = x.at[n - n_faulty:].set(fill)               # structural faults
+    valid = jnp.arange(n) < n - n_faulty
+    agg = get_aggregator(rule, bucket_size=bucket, n_byz=max(n_byz, 1))
+    if mode == "gspmd":
+        z = agg.tree_masked(k, {"g": x}, valid)["g"]
+    else:
+        cfg = ByzVRMarinaConfig(n_workers=n, n_byz=n_byz, agg_mode="pallas",
+                                aggregator=agg)
+        z = tree_aggregate_pallas(cfg, k, {"g": x}, valid=valid)["g"]
+    assert np.isfinite(np.asarray(z)).all()

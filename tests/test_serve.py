@@ -212,6 +212,90 @@ def test_dedup_makes_duplicate_deliveries_invisible(tmp_path):
     _assert_params_equal(r_dup.params, r_clean.params)
 
 
+def _fault_spec(**kw):
+    # _chaos_spec plus the repro.faults process-site knobs (DESIGN.md §6)
+    base = _chaos_spec().to_dict()
+    base["arrival_kwargs"] = {"mean_latency": 1.0, "dropout": 0.05,
+                              "duplicate": 0.15, "crash": 0.12,
+                              "hang": 0.15, "recovery_lag": 2.0,
+                              "hang_lag": 4.0}
+    base.update(kw)
+    return ServeSpec.from_dict(base)
+
+
+def test_fault_knobs_do_not_shift_rng_stream():
+    # crash/hang draws are gated on their knobs: a zero-knob process must
+    # consume the identical RNG stream as one that never heard of faults
+    kw = dict(mean_latency=1.0, straggler_frac=0.25, dropout=0.1,
+              duplicate=0.25)
+    plain = _take(ArrivalProcess("exp", 8, seed=11, **kw), 120)
+    zeroed = _take(ArrivalProcess("exp", 8, seed=11, crash=0.0, hang=0.0,
+                                  **kw), 120)
+    assert plain == zeroed
+    assert not any(e.crashed or e.hung for e in plain)
+
+
+def test_crash_hang_trace_roundtrip(tmp_path):
+    proc = ArrivalProcess("exp", 6, seed=11, mean_latency=1.0,
+                          dropout=0.05, duplicate=0.1, crash=0.12,
+                          hang=0.15, recovery_lag=2.5, hang_lag=4.0)
+    path = os.path.join(tmp_path, "trace.json")
+    saved = proc.save_trace(path, 150)
+    assert sum(e.crashed for e in saved) > 0
+    assert sum(e.hung for e in saved) > 0
+    replayed = _take(ArrivalProcess("trace", 6, path=path), 150)
+    assert saved == replayed
+    for e in saved:
+        # fault labels are mutually exclusive and never on replays
+        assert not (e.dropped and (e.crashed or e.hung))
+        assert not (e.crashed and e.hung)
+        assert not (e.replay and (e.crashed or e.hung or e.dropped))
+
+
+def test_fault_labels_are_trajectory_invisible(tmp_path):
+    # a crash is observationally a drop (recovery lag is already in the
+    # timeline) and a hang a straggler's late arrival: relabeling
+    # crashed->dropped and clearing hung replays identical params, only
+    # the counters move
+    import dataclasses as dc
+    spec = _fault_spec()
+    live = spec.build().run()
+    assert live.stats["crashed"] > 0 and live.stats["hung"] > 0
+
+    path = os.path.join(tmp_path, "chaos.json")
+    evs = spec.build().arrival_process().save_trace(
+        path, live.stats["events"])
+    relabeled = [dc.replace(e, dropped=e.dropped or e.crashed,
+                            crashed=False, hung=False).to_dict()
+                 for e in evs]
+    r_chaos = spec.replace(arrival="trace",
+                           arrival_kwargs={"path": path}).build().run()
+    r_plain = spec.replace(arrival="trace",
+                           arrival_kwargs={"events": relabeled}
+                           ).build().run()
+    _assert_params_equal(live.params, r_chaos.params)
+    _assert_params_equal(r_chaos.params, r_plain.params)
+    assert r_plain.stats["crashed"] == 0 and r_plain.stats["hung"] == 0
+    assert r_plain.stats["dropped"] == \
+        r_chaos.stats["dropped"] + r_chaos.stats["crashed"]
+
+
+def test_kill_mid_buffer_and_resume_covers_faults(tmp_path):
+    # kill-and-resume stays bit-identical with crash/hang chaos active
+    # (the fault counters ride the checkpoint's counters array)
+    spec = _fault_spec(rounds=5)
+    full = spec.build().run()
+    ck = os.path.join(tmp_path, "ck")
+    crash = spec.build().run(checkpoint=ck, checkpoint_every=2,
+                             stop_after_events=20)
+    assert crash.stats["rounds"] < 5
+    resumed = spec.build().run(resume=ck)
+    assert resumed.stats["rounds"] == 5
+    _assert_params_equal(full.params, resumed.params)
+    assert resumed.stats["crashed"] == full.stats["crashed"]
+    assert resumed.stats["hung"] == full.stats["hung"]
+
+
 def test_kill_mid_buffer_and_resume_is_bit_identical(tmp_path):
     spec = _chaos_spec(rounds=6)
     lg_full = os.path.join(tmp_path, "full.jsonl")
