@@ -1,0 +1,73 @@
+"""CI gate: the n=16 aggregation rows did not regress vs the checked-in
+baseline (benchmarks/BENCH_agg_baseline.json).
+
+Two checks per (impl, rule, bucket, d) row:
+
+* ``sweeps`` — the analytic HBM-traversal count — must match EXACTLY.
+  This is deterministic (a pure function of the algorithm), so any drift
+  means the aggregation program itself changed; update the baseline in
+  the same PR, deliberately.
+* ``us`` — interpret-mode wall time — gates only coarsely: the fresh run
+  may be at most ``SLACK``× the recorded baseline. CI hosts are noisy and
+  interpret mode is Python-bound, so this catches order-of-magnitude
+  regressions (an accidental fall off the fused path, a giant-n branch
+  swallowing small n), not percent-level drift.
+
+Run after ``python -m benchmarks.run agg``:
+
+    PYTHONPATH=src python benchmarks/check_agg_baseline.py
+"""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(HERE, "BENCH_agg_baseline.json")
+FRESH = os.path.join(os.path.dirname(HERE), "experiments", "bench",
+                     "BENCH_agg.json")
+SLACK = 4.0        # fresh us may be at most 4x the recorded baseline
+
+
+def _key(r):
+    return (r["impl"], r["rule"], r["bucket"], r["d"])
+
+
+def main(baseline_path=BASELINE, fresh_path=FRESH):
+    with open(baseline_path) as f:
+        base = {_key(r): r for r in json.load(f)["rows"]}
+    with open(fresh_path) as f:
+        fresh = {_key(r): r for r in json.load(f)["rows"]
+                 if r.get("n") == 16 and r["impl"] in ("jnp", "pallas")}
+    failures = []
+    missing = sorted(set(base) - set(fresh))
+    for k in missing:
+        failures.append(f"row {k} in baseline but missing from fresh run")
+    for k, b in sorted(base.items()):
+        if k not in fresh:
+            continue
+        r = fresh[k]
+        if r["sweeps"] != b["sweeps"]:
+            failures.append(
+                f"row {k}: sweeps {r['sweeps']} != baseline {b['sweeps']}"
+                " (algorithm changed — update BENCH_agg_baseline.json"
+                " deliberately)")
+        if b.get("us") and r.get("us") and r["us"] > SLACK * b["us"]:
+            failures.append(
+                f"row {k}: us {r['us']:.0f} > {SLACK:g}x baseline"
+                f" {b['us']:.0f} (fell off the fused path?)")
+    extra = sorted(set(fresh) - set(base))
+    if extra:
+        print(f"note: {len(extra)} n=16 row(s) not in baseline (new axis?):"
+              f" {extra}")
+    if failures:
+        print(f"FAIL: {len(failures)} baseline violation(s)")
+        for msg in failures:
+            print("  " + msg)
+        return 1
+    print(f"OK: {len(base)} n=16 rows match baseline"
+          f" (sweeps exact, us within {SLACK:g}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

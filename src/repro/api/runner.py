@@ -294,6 +294,11 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
     history = []
     traces: list = []
     comm_bits_total = 0.0
+    # partial participation: only the sampled cohort uploads, so the
+    # per-configured-worker average is scaled by n_active/n_workers — the
+    # measured twin of theory.comm_bits_per_round(..., participation=...)
+    # (pinned by the conformance harness)
+    part_frac = spec.resolved_participation() / spec.n_workers
     pending_ck = []          # device arrays; synced only on log steps so the
     t0 = time.time()         # loop keeps JAX's async dispatch pipelined
     for it in range(start, spec.steps):
@@ -314,7 +319,7 @@ def _run_experiment(exp: Experiment, *, log_every: int = 10,
         pending_ck.append(metrics.get("c_k"))
         if do_log or do_cb:
             for ck in pending_ck:
-                comm_bits_total += exp.method.round_bits(
+                comm_bits_total += part_frac * exp.method.round_bits(
                     n_params, True if ck is None else bool(ck))
             pending_ck.clear()
             m = {k: float(v) for k, v in metrics.items()}

@@ -70,6 +70,12 @@ class RunSpec:
     p: float = 0.1                       # full-gradient probability
     lr: float = 0.5
     optimizer: str = "none"              # registry "optimizer"
+    # partial participation: fraction (float in (0,1]) or count (int in
+    # [1, n_workers]) of workers sampled uniformly each round. Sampling is
+    # seeded and bit-replayable from (spec, seed); non-sampled workers keep
+    # their estimator state untouched and upload zero bits. 1.0 = everyone,
+    # byte-identical to a spec without the field.
+    participation: float = 1.0
     # schedule
     steps: int = 100
     seed: int = 0
@@ -113,20 +119,47 @@ class RunSpec:
             raise ValueError(f"n_workers={self.n_workers} must be >= 1")
         if self.n_byz < 0:
             raise ValueError(f"n_byz={self.n_byz} must be >= 0")
-        if 2 * self.n_byz >= self.n_workers:
+        from repro.core.theory import delta_over_active_set
+        # in-expectation check: uniform sampling preserves the byzantine
+        # fraction, so E[delta over the sampled cohort] = delta over the
+        # configured set — this is the hard feasibility bound
+        if delta_over_active_set(self.n_workers, self.n_byz) >= 0.5:
             raise ValueError(
                 f"n_byz={self.n_byz} of n_workers={self.n_workers} gives "
                 f"delta={self.n_byz / self.n_workers:.2f} >= 1/2 — no "
                 "(delta,c)-robust aggregator exists; reduce n_byz or add "
                 "workers")
+        n_active = self.resolved_participation()
+        if n_active < self.n_workers:
+            if self.agg_mode not in ("gspmd", "pallas"):
+                raise ValueError(
+                    f"participation={self.participation} is not supported "
+                    f"under agg_mode={self.agg_mode!r}: per-round client "
+                    "sampling needs the masked aggregation prologue, which "
+                    "lives in the gspmd and pallas backends (DESIGN.md §7)")
+            # worst-case check over the sampled cohort (BROADCAST's
+            # time-varying byzantine sets): every byzantine may land in one
+            # round's sample
+            worst = delta_over_active_set(n_active, self.n_byz)
+            if self.aggregator != "mean" and worst >= 0.5:
+                warnings.warn(
+                    f"worst-case sampled byzantine fraction is "
+                    f"{worst:.2f} >= 1/2 (n_byz={self.n_byz} vs n_active="
+                    f"{n_active}): a round whose sample is majority-"
+                    "byzantine has no (delta,c) guarantee; raise "
+                    "participation or reduce n_byz",
+                    stacklevel=2)
         s = max(self.bucket_size, 1)
         if (self.aggregator != "mean" and s > 1
-                and 2 * self.n_byz * s >= self.n_workers):
+                and delta_over_active_set(
+                    n_active, self.n_byz, bucket_size=s) >= 0.5):
             warnings.warn(
-                f"after bucketing (s={s}) the byzantine fraction is "
-                f"{self.n_byz * s / self.n_workers:.2f} >= 1/2: Def. 2.1's "
-                "guarantee is void and convergence is only to the "
-                "heterogeneity floor; reduce bucket_size or n_byz",
+                f"after bucketing (s={s}) the byzantine fraction over the "
+                f"active set is "
+                f"{delta_over_active_set(n_active, self.n_byz, bucket_size=s):.2f}"
+                " >= 1/2: Def. 2.1's guarantee is void and convergence is "
+                "only to the heterogeneity floor; reduce bucket_size or "
+                "n_byz",
                 stacklevel=2)
         if self.bucket_size < 0:
             raise ValueError(f"bucket_size={self.bucket_size} must be >= 0")
@@ -173,14 +206,16 @@ class RunSpec:
                     "backends (DESIGN.md §6)")
             if plan is not None:
                 f = plan.worst_case_faulty(self.n_workers)
-                if f and 2 * (self.n_byz + f) >= self.n_workers:
+                n_act = self.resolved_participation()
+                if f and delta_over_active_set(
+                        n_act, self.n_byz + f) >= 0.5:
                     warnings.warn(
                         f"fault plan can hit {f} worker(s) on top of "
-                        f"n_byz={self.n_byz}: worst-case 2*(byz+faulty) = "
-                        f"{2 * (self.n_byz + f)} >= n_workers="
-                        f"{self.n_workers}, outside the guard's delta "
-                        "budget — the drop-faulty-workers equivalence is "
-                        "not guaranteed this round",
+                        f"n_byz={self.n_byz}: worst-case byz+faulty "
+                        f"fraction over the active set (n_active={n_act}) "
+                        "is >= 1/2, outside the guard's delta budget — "
+                        "the drop-faulty-workers equivalence is not "
+                        "guaranteed this round",
                         stacklevel=2)
         if self.method == "marina" and self.agg_mode == "sparse_support":
             if (self.compressor != "randk"
@@ -204,6 +239,32 @@ class RunSpec:
                     f"{fname}={val!r} must round-trip through JSON exactly "
                     "(plain str/int/float/bool/None scalars, lists, dicts) "
                     "so the spec stays a serializable artifact")
+
+    # -- participation ------------------------------------------------------
+    def resolved_participation(self) -> int:
+        """Number of workers sampled each round (n_active).
+
+        ``participation`` is either a fraction (float in (0, 1], rounded
+        to the nearest count, never below 1) or an absolute count (int in
+        [1, n_workers]). ``n_active == n_workers`` means full
+        participation — the engine then compiles the exact same program
+        as a spec without the field.
+        """
+        part = self.participation
+        if isinstance(part, bool) or not isinstance(part, (int, float)):
+            raise ValueError(
+                f"participation={part!r} must be a fraction in (0, 1] or "
+                "an integer count in [1, n_workers]")
+        if isinstance(part, int):
+            if not 1 <= part <= self.n_workers:
+                raise ValueError(
+                    f"participation={part} (count) must be in [1, "
+                    f"n_workers={self.n_workers}]")
+            return part
+        if not 0.0 < part <= 1.0:
+            raise ValueError(
+                f"participation={part} (fraction) must be in (0, 1]")
+        return max(1, min(self.n_workers, round(part * self.n_workers)))
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -271,11 +332,13 @@ class RunSpec:
         if self.aggregator == "mean":
             agg_kw.pop("n_byz")          # mean ignores it; keep cfg minimal
         opt_kw = {"lr": self.lr, **self.optimizer_kwargs}
+        n_active = self.resolved_participation()
         return ByzVRMarinaConfig(
             fault_plan=as_plan(self.faults),
             fault_guard=self.fault_guard,
             n_workers=self.n_workers,
             n_byz=self.n_byz,
+            n_active=None if n_active == self.n_workers else n_active,
             p=self.p,
             lr=self.lr,
             aggregator=registry.resolve("aggregator", self.aggregator,
@@ -397,7 +460,8 @@ class ServeSpec:
             raise ValueError(f"n_clients={self.n_clients} must be >= 1")
         if self.n_byz < 0:
             raise ValueError(f"n_byz={self.n_byz} must be >= 0")
-        if 2 * self.n_byz >= self.n_clients:
+        from repro.core.theory import delta_over_active_set
+        if delta_over_active_set(self.n_clients, self.n_byz) >= 0.5:
             raise ValueError(
                 f"n_byz={self.n_byz} of n_clients={self.n_clients} gives "
                 f"delta={self.n_byz / self.n_clients:.2f} >= 1/2 over the "
@@ -415,13 +479,15 @@ class ServeSpec:
             raise ValueError(
                 "task='lm' needs arch=<name>; registered: "
                 + ", ".join(registry.components("arch")))
-        # the byzantine fraction the aggregator sees is over the BUFFER: in
-        # the worst case every byz client lands in one buffer of size K.
-        worst = min(self.n_byz, self.buffer_size)
-        if self.aggregator != "mean" and 2 * worst >= self.buffer_size:
+        # the byzantine fraction the aggregator sees is over the BUFFER
+        # (the service's active set): in the worst case every byz client
+        # lands in one buffer of size K — same delta-over-active-set rule
+        # as RunSpec's sampled cohort (DESIGN.md §7).
+        worst = delta_over_active_set(self.buffer_size, self.n_byz)
+        if self.aggregator != "mean" and worst >= 0.5:
             warnings.warn(
                 f"worst-case buffered byzantine fraction is "
-                f"{worst / self.buffer_size:.2f} >= 1/2 (n_byz={self.n_byz} "
+                f"{worst:.2f} >= 1/2 (n_byz={self.n_byz} "
                 f"vs buffer_size={self.buffer_size}): no (delta,c)-robust "
                 "aggregator can cover a buffer where byzantines are the "
                 "majority; raise buffer_size or reduce n_byz",

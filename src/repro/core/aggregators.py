@@ -116,16 +116,48 @@ def masked_coord_trimmed_mean(x, valid, trim: int):
 # tree helpers
 # ---------------------------------------------------------------------------
 
+# worker counts above this take the blocked-Gram path: the pairwise distance
+# matrix is accumulated row-tile by row-tile (lax.map over worker tiles), so
+# the largest live intermediate on the giant-n path is (tile, d) + (tile, n)
+# — never anything that scales like n^2 * d. The <=64 path is untouched and
+# its jaxpr stays byte-identical (tests pin this).
+MAX_FUSED_WORKERS = 64
+
+
+def _tree_pair_sqdists_blocked(leaves, n, tile: int = MAX_FUSED_WORKERS):
+    """Blocked (n, n) Gram for giant n: lax.map over row tiles of size
+    ``tile`` keeps every step's working set to a (tile, d) slice times the
+    resident (n, d) stack, with a (tile, n) partial result per step."""
+    flats = [a.reshape(n, -1).astype(jnp.float32) for a in leaves]
+    sq = sum(jnp.sum(f * f, axis=-1) for f in flats)
+    nt = -(-n // tile)
+    pad = nt * tile - n
+    padded = [jnp.pad(f, ((0, pad), (0, 0))) if pad else f for f in flats]
+
+    def row_tile(i):
+        return sum(
+            lax.dynamic_slice_in_dim(p, i * tile, tile, 0) @ f.T
+            for p, f in zip(padded, flats))
+
+    gram = lax.map(row_tile, jnp.arange(nt)).reshape(nt * tile, n)[:n]
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    return jnp.maximum(d2, 0.0)
+
+
 def _tree_pair_sqdists(xs, axis_name=None):
     """(n, n) global pairwise squared distances from a stacked pytree."""
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    if axis_name is None and n > MAX_FUSED_WORKERS:
+        return _tree_pair_sqdists_blocked(leaves, n)
+
     def leaf(a):
-        n = a.shape[0]
         af = a.reshape(n, -1).astype(jnp.float32)
         sq = jnp.sum(af * af, axis=-1)
         gram = af @ af.T
         return sq, gram
 
-    parts = [leaf(a) for a in jax.tree.leaves(xs)]
+    parts = [leaf(a) for a in leaves]
     sq = sum(p[0] for p in parts)
     gram = sum(p[1] for p in parts)
     if axis_name is not None:

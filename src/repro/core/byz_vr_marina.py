@@ -46,6 +46,11 @@ from repro.core.engine import (AGG_BACKENDS, apply_attack,     # noqa: F401
 class ByzVRMarinaConfig:
     n_workers: int
     n_byz: int = 0
+    # partial participation: number of workers sampled each round (uniform
+    # without replacement, seeded stream disjoint from attack/fault RNG).
+    # None = all n_workers participate — compiles the identical program as
+    # before the field existed.
+    n_active: Optional[int] = None
     p: float = 0.1                       # full-gradient probability
     lr: float = 0.05
     aggregator: Aggregator = Aggregator("mean")
@@ -74,28 +79,51 @@ class ByzVRMarinaConfig:
             raise ValueError(f"p={self.p} must be a probability in [0, 1]")
         if self.n_workers < 1:
             raise ValueError(f"n_workers={self.n_workers} must be >= 1")
-        if not 0 <= self.n_byz or 2 * self.n_byz >= self.n_workers:
+        from repro.core.theory import delta_over_active_set
+        if (not 0 <= self.n_byz
+                or delta_over_active_set(self.n_workers, self.n_byz) >= 0.5):
             raise ValueError(
                 f"n_byz={self.n_byz} must satisfy 0 <= n_byz < n_workers/2 "
                 f"(= {self.n_workers / 2:g}): no (delta,c)-robust aggregator "
                 "exists for a byzantine majority (Def. 2.1)")
+        if self.n_active is not None:
+            if not 1 <= self.n_active <= self.n_workers:
+                raise ValueError(
+                    f"n_active={self.n_active} must be in [1, n_workers="
+                    f"{self.n_workers}]")
+            if self.n_active < self.n_workers \
+                    and self.agg_mode not in ("gspmd", "pallas"):
+                raise ValueError(
+                    f"partial participation (n_active={self.n_active}) is "
+                    f"not supported under agg_mode={self.agg_mode!r}: the "
+                    "masked aggregation prologue lives in the gspmd and "
+                    "pallas backends (DESIGN.md §7)")
+        n_act = self.active_count()
         s = max(self.aggregator.bucket_size, 1)
         if (self.aggregator.robust and s > 1
-                and 2 * self.n_byz * s >= self.n_workers):
+                and delta_over_active_set(
+                    n_act, self.n_byz, bucket_size=s) >= 0.5):
             warnings.warn(
-                f"after bucketing (s={s}) the byzantine fraction is "
-                f"{self.n_byz * s / self.n_workers:.2f} >= 1/2; Def. 2.1's "
-                "robustness guarantee is void — reduce bucket_size or n_byz",
+                f"after bucketing (s={s}) the byzantine fraction over the "
+                f"active set is "
+                f"{delta_over_active_set(n_act, self.n_byz, bucket_size=s):.2f}"
+                " >= 1/2; Def. 2.1's robustness guarantee is void — reduce "
+                "bucket_size or n_byz",
                 stacklevel=2)
         if self.fault_plan is not None:
             f = self.fault_plan.worst_case_faulty(self.n_workers)
-            if f and 2 * (self.n_byz + f) >= self.n_workers:
+            if f and delta_over_active_set(n_act, self.n_byz + f) >= 0.5:
                 warnings.warn(
                     f"fault plan can corrupt up to f={f} workers on top of "
-                    f"n_byz={self.n_byz}: 2·(n_byz+f) >= n_workers, so the "
-                    "guarded δ budget is exceeded in the worst round — the "
-                    "masked aggregate may be unprotected (DESIGN.md §6)",
+                    f"n_byz={self.n_byz}: byz+faulty over the active set "
+                    f"(n_active={n_act}) reaches >= 1/2, so the guarded δ "
+                    "budget is exceeded in the worst round — the masked "
+                    "aggregate may be unprotected (DESIGN.md §6)",
                     stacklevel=2)
+
+    def active_count(self) -> int:
+        """Workers sampled per round; n_workers when participation is off."""
+        return self.n_workers if self.n_active is None else self.n_active
 
     def byz_mask(self):
         return jnp.arange(self.n_workers) < self.n_byz

@@ -141,6 +141,91 @@ def fusable_attack_ctx(cfg, cand, mask, stats_valid=None):
                      means=means, stds=stds)
 
 
+# Round-scoped participation routing (DESIGN.md §7). Like ``_PHASE_TRACE``
+# below, this is a module-level cell read at trace time only: the engine
+# step sets it to the (n,) sampled-worker mask for the duration of the
+# round when ``cfg.n_active`` requests partial participation, so message
+# phases owned by estimators (MARINA's lax.cond branches) route through
+# ``participating_message_phase`` without any signature change. With the
+# cell at None (full participation) every phase traces the byte-identical
+# jaxpr it did before the participation axis existed.
+_PHASE_SAMPLED = [None]
+
+# fold_in salt for the participation sampling stream — distinct from the
+# fault layer's 0xFA17 so the three per-round streams (attack, fault,
+# participation) are pairwise independent of each other's knobs (pinned in
+# tests/test_participation.py).
+_PART_SALT = 0x5A3B1E
+
+
+def sampled_worker_mask(cfg, step_key):
+    """(n,) bool — the uniformly-sampled participation cohort this round,
+    or None under full participation.
+
+    The draw folds ``_PART_SALT`` into the per-round step key (the key the
+    engine splits into the estimator's named streams), so the sampling
+    stream is disjoint from every named stream by construction and the
+    sampled set is bit-replayable from (spec, seed) alone. A uniform
+    m-subset without replacement: rank the n workers by a seeded
+    permutation and take the first ``n_active``.
+    """
+    n_active = getattr(cfg, "n_active", None)
+    if n_active is None or n_active >= cfg.n_workers:
+        return None
+    part_key = jax.random.fold_in(step_key, _PART_SALT)
+    rank = jax.random.permutation(part_key, cfg.n_workers)
+    return rank < n_active
+
+
+def participating_message_phase(cfg, attack_key, agg_key, cand, sampled):
+    """``message_phase`` over the sampled cohort: non-sampled rows get zero
+    aggregation weight (select-zero via the masked rule twins — the same
+    machinery the fault guard uses), the omniscient attack's mean/std
+    statistics see only the sampled good workers (a non-participant is
+    invisible to an in-round adversary), and under the guard the validity
+    mask is ``sampled & finite`` so the two maskings compose.
+
+    ``WireCandidates`` are densified first (``wire.reconstruct``): the
+    fused wire kernels have no masked twin, and partial participation
+    already pays the dense roster in simulation. Bucket renormalization
+    over the survivors is ``faults.guard.masked_bucket_matrix`` — exactly
+    the δ-over-active-set semantics the spec validates against.
+    """
+    from repro.core import wire
+    plan = getattr(cfg, "fault_plan", None)
+    if isinstance(cand, wire.WireCandidates):
+        if plan is not None and plan.message_faults:
+            from repro.faults import inject
+            cand = inject.inject_wire(plan, attack_key, cand)
+        cand = wire.reconstruct(cand)
+    elif plan is not None and plan.tensor_faults:
+        from repro.faults import inject
+        cand = inject.inject_candidates(plan, attack_key, cand)
+    if getattr(cfg, "fault_guard", False):
+        from repro.faults import guard as fguard
+        valid_pre = fguard.finite_row_mask(cand) & sampled
+        sent = apply_attack(cfg, attack_key, cand, stats_valid=valid_pre)
+        valid = fguard.finite_row_mask(sent) & sampled
+        if cfg.agg_mode == "pallas":
+            from repro.core.sharded_agg import tree_aggregate_pallas
+            return tree_aggregate_pallas(cfg, agg_key, sent, valid=valid)
+        return aggregate(cfg, agg_key, sent, valid=valid)
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
+        if clean:
+            return tree_aggregate_pallas(cfg, agg_key, cand, valid=sampled)
+        if cfg.attack.coord_apply is not None:
+            ctx = fusable_attack_ctx(cfg, cand, cfg.byz_mask(),
+                                     stats_valid=sampled)
+            return tree_aggregate_pallas(cfg, agg_key, cand, attack_ctx=ctx,
+                                         valid=sampled)
+        sent = apply_attack(cfg, attack_key, cand, stats_valid=sampled)
+        return tree_aggregate_pallas(cfg, agg_key, sent, valid=sampled)
+    sent = apply_attack(cfg, attack_key, cand, stats_valid=sampled)
+    return aggregate(cfg, agg_key, sent, valid=sampled)
+
+
 def message_phase(cfg, attack_key, agg_key, cand):
     """Lines 9-10 of the round: omniscient attack, then robust aggregation.
 
@@ -162,7 +247,15 @@ def message_phase(cfg, attack_key, agg_key, cand):
     ``guarded_message_phase``. Both are static Python branches — with the
     plan unset and the guard off this function traces the identical jaxpr
     it did before the faults layer existed (pinned in tests/test_faults).
+
+    Partial participation (DESIGN.md §7) routes here too: when the engine
+    step has published a sampled-worker mask (``_PHASE_SAMPLED``), the
+    round aggregates over the sampled cohort only. Full participation
+    leaves the cell at None and this body is untouched.
     """
+    if _PHASE_SAMPLED[0] is not None:
+        return participating_message_phase(cfg, attack_key, agg_key, cand,
+                                           _PHASE_SAMPLED[0])
     from repro.core import wire
     plan = getattr(cfg, "fault_plan", None)
     if isinstance(cand, wire.WireCandidates):
@@ -418,6 +511,35 @@ class GradientEstimator:
         return float(self.round_bits(cfg, d))
 
 
+def carry_unsampled_state(state, updates, sampled, n_workers):
+    """Freeze the per-worker state of non-participants (DESIGN.md §7).
+
+    A worker that was not sampled this round neither computed nor uploaded
+    anything, so its estimator state — SAGA gradient tables, EF21
+    ``worker_g``, cmfilter ``worker_m``/``worker_u``, SVRG snapshots — must
+    carry forward bit-identically. Estimators mark per-worker stacked state
+    with the ``worker_*`` key prefix (every leaf leading axis = n_workers);
+    for those keys the round's update is select-merged row-wise against
+    the previous state. Server-side updates (``snapshot``, ``prev_params``,
+    DIANA's shift mean) pass through untouched: the server did run this
+    round, over the sampled cohort.
+    """
+    out = {}
+    for k, new in updates.items():
+        old = state.get(k)
+        if old is None or not k.startswith("worker_"):
+            out[k] = new
+            continue
+
+        def merge(nl, ol):
+            assert nl.shape[0] == n_workers, (k, nl.shape)
+            keep = sampled.reshape((-1,) + (1,) * (nl.ndim - 1))
+            return jnp.where(keep, nl, ol)
+
+        out[k] = jax.tree.map(merge, new, old)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # engine step / init factories
 # ---------------------------------------------------------------------------
@@ -453,6 +575,7 @@ def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
     def step(state, batch, anchor, key):
         keys = dict(zip(est.rng, jax.random.split(key, len(est.rng))))
         old_params = state["params"]
+        sampled = sampled_worker_mask(cfg, key)
 
         if est.update_params_first:
             new_params, new_opt = param_update(cfg, old_params, state["g"],
@@ -463,32 +586,38 @@ def make_engine_step(cfg, loss_fn, estimator: GradientEstimator,
         batch = maybe_corrupt(cfg, corrupt_fn, batch)
         anchor = maybe_corrupt(cfg, corrupt_fn, anchor)
 
-        prev_flag = _PHASE_TRACE[0]
+        prev_flag, prev_sampled = _PHASE_TRACE[0], _PHASE_SAMPLED[0]
         _PHASE_TRACE[0] = trace
+        _PHASE_SAMPLED[0] = sampled
         try:
             ro = est.round(cfg, loss_fn, state, new_params, old_params,
                            batch, anchor, keys)
+            updates = dict(ro.updates or {})
+
+            rt = None
+            if ro.g_new is not None:
+                g = ro.g_new
+                rt = ro.trace
+            else:
+                if trace:
+                    from repro.obs import trace as obs_trace
+                    agg, rt = obs_trace.traced_message_phase(
+                        cfg, keys["attack"], keys["agg"], ro.cand)
+                else:
+                    agg = message_phase(cfg, keys["attack"], keys["agg"],
+                                        ro.cand)
+                if ro.finalize is not None:
+                    g, fin_updates = ro.finalize(agg)
+                    updates.update(fin_updates)
+                else:
+                    g = agg
         finally:
             _PHASE_TRACE[0] = prev_flag
-        updates = dict(ro.updates or {})
+            _PHASE_SAMPLED[0] = prev_sampled
 
-        rt = None
-        if ro.g_new is not None:
-            g = ro.g_new
-            rt = ro.trace
-        else:
-            if trace:
-                from repro.obs import trace as obs_trace
-                agg, rt = obs_trace.traced_message_phase(
-                    cfg, keys["attack"], keys["agg"], ro.cand)
-            else:
-                agg = message_phase(cfg, keys["attack"], keys["agg"],
-                                    ro.cand)
-            if ro.finalize is not None:
-                g, fin_updates = ro.finalize(agg)
-                updates.update(fin_updates)
-            else:
-                g = agg
+        if sampled is not None:
+            updates = carry_unsampled_state(state, updates, sampled,
+                                            cfg.n_workers)
 
         if not est.update_params_first:
             new_params, new_opt = param_update(cfg, old_params, g,

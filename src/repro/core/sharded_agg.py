@@ -212,6 +212,131 @@ def _pack_rows(flats, tag):
     return packed
 
 
+# ---------------------------------------------------------------------------
+# giant-n tier (n > MAX_FUSED_WORKERS): hierarchical bucket-then-aggregate
+# ---------------------------------------------------------------------------
+
+def _materialize_attack_flat(flats, dtypes, attack_ctx):
+    """jnp twin of the kernel prologue (norm_agg._prologue) for the blocked
+    tier: attack → candidate-dtype round-trip → mask select, on flat
+    (n, d_j) fp32 views. Bitwise the same malicious values the fused kernels
+    would inject (coord_apply is coordinate-wise, so flat vs tiled blocks
+    see identical inputs)."""
+    if attack_ctx is None or attack_ctx.fn is None or attack_ctx.mask is None:
+        return flats
+    n = flats[0].shape[0]
+    m_l = (jax.tree.leaves(attack_ctx.means)
+           if attack_ctx.means is not None else [None] * len(flats))
+    s_l = (jax.tree.leaves(attack_ctx.stds)
+           if attack_ctx.stds is not None else [None] * len(flats))
+    keep = attack_ctx.mask.reshape(n, 1)
+    out = []
+    for xf, mu, sd, dt in zip(flats, m_l, s_l, dtypes):
+        muf = None if mu is None else mu.reshape(1, -1).astype(jnp.float32)
+        sdf = None if sd is None else sd.reshape(1, -1).astype(jnp.float32)
+        v = attack_ctx.fn(xf, muf, sdf).astype(dt).astype(jnp.float32)
+        out.append(jnp.where(keep, v, xf))
+    return out
+
+
+def _tree_aggregate_large_n(cfg, key, sent, attack_ctx, weights,
+                            return_info, valid):
+    """Giant-n tier of ``tree_aggregate_pallas`` (DESIGN.md §7): above
+    ``norm_agg.MAX_FUSED_WORKERS`` the fused kernels' n-in-sublanes layout
+    no longer holds, so the hierarchy inverts — bucket FIRST (the Alg. 2
+    reduction shrinks the stack leaf-wise before any rule kernel runs, so
+    no kernel ever holds the full worker axis), then run the rule:
+
+    * coordinate rules aggregate the bucketed stack in jnp (a sort over the
+      worker axis is XLA's job at this scale; the ≤64-sublane coord kernel
+      does not apply);
+    * RFA / Krum route back to the FUSED norm_agg drivers when the bucketed
+      row count fits under MAX_FUSED_WORKERS, else to the BLOCKED drivers
+      (worker-tiled Gram / distance / weighted-sum kernels) — Krum at
+      n = 4096 never materializes anything that scales like n²·d.
+
+    The kernel prologue (attack injection, guard select-zero, staleness
+    weighting) is materialized in jnp first: the zero-copy fusion is a
+    ≤64-worker luxury, traded here for unbounded n. Semantics are unchanged
+    — ``Aggregator.tree`` / ``tree_masked`` over ``apply_attack``-style
+    materialized candidates remain the parity oracle."""
+    agg = cfg.aggregator
+    from repro.core import aggregators as A
+    from repro.kernels import norm_agg
+
+    leaves, treedef = jax.tree.flatten(sent)
+    n = leaves[0].shape[0]
+    flats = [a.reshape(n, -1).astype(jnp.float32) for a in leaves]
+    flats = _materialize_attack_flat(flats, [a.dtype for a in leaves],
+                                     attack_ctx)
+    if valid is not None:
+        keep = valid.reshape(n, 1)
+        # select-zero, never multiply (0·NaN = NaN) — guard contract
+        flats = [jnp.where(keep, xf, 0.0) for xf in flats]
+    if weights is not None:
+        flats = [xf * weights.reshape(n, 1).astype(jnp.float32)
+                 for xf in flats]
+
+    bvalid = valid
+    if agg.bucket_size > 1 and agg.rule != "mean":
+        perm = jax.random.permutation(key, n)
+        if valid is not None:
+            from repro.faults.guard import masked_bucket_matrix
+            w_mat, bvalid = masked_bucket_matrix(perm, n, agg.bucket_size,
+                                                 valid)
+            flats = [w_mat @ xf for xf in flats]
+        else:
+            flats = [A._bucketize_perm(xf, perm, agg.bucket_size)
+                     for xf in flats]
+    m = flats[0].shape[0]
+
+    info: dict = {}
+    if agg.rule in COORD_KERNEL_RULE:
+        if bvalid is not None:
+            fns = {"mean": lambda y: A.masked_mean(y, bvalid),
+                   "cm": lambda y: A.masked_coord_median(y, bvalid),
+                   "tm": lambda y: A.masked_coord_trimmed_mean(
+                       y, bvalid, agg.trim)}
+            outs = [fns[agg.rule](xf) for xf in flats]
+        elif agg.rule == "mean":
+            outs = [jnp.mean(xf, axis=0) for xf in flats]
+        elif agg.rule == "cm":
+            outs = [coord_median(xf) for xf in flats]
+        else:
+            outs = [coord_trimmed_mean(xf, agg.trim) for xf in flats]
+    elif agg.rule == "rfa":
+        if m <= norm_agg.MAX_FUSED_WORKERS:
+            res = norm_agg.rfa_segments(flats, iters=agg.iters, eps=agg.eps,
+                                        return_info=return_info,
+                                        bvalid=bvalid)
+        else:
+            res = norm_agg.rfa_segments_blocked(
+                flats, iters=agg.iters, eps=agg.eps, bvalid=bvalid,
+                return_info=return_info)
+        outs = res[0] if return_info else res
+        if return_info:
+            info = res[1]
+    elif agg.rule == "krum":
+        if m <= norm_agg.MAX_FUSED_WORKERS:
+            res = norm_agg.krum_segments(flats, n_byz=agg.n_byz,
+                                         return_info=return_info,
+                                         bvalid=bvalid)
+        else:
+            res = norm_agg.krum_segments_blocked(
+                flats, n_byz=agg.n_byz, bvalid=bvalid,
+                return_info=return_info)
+        outs = res[0] if return_info else res
+        if return_info:
+            info = res[1]
+    else:  # pragma: no cover — RULES is closed
+        raise ValueError(agg.rule)
+
+    tree_out = [o.reshape(a.shape[1:]).astype(a.dtype)
+                for o, a in zip(outs, leaves)]
+    tree = jax.tree.unflatten(treedef, tree_out)
+    return (tree, info) if return_info else tree
+
+
 @dataclasses.dataclass(frozen=True)
 class AttackCtx:
     """Omniscient-attack context for in-kernel injection (engine.message_phase):
@@ -308,6 +433,11 @@ def tree_aggregate_pallas(cfg, key, sent, attack_ctx=None, weights=None,
 
     leaves, treedef = jax.tree.flatten(sent)
     n = leaves[0].shape[0]
+    if n > norm_agg.MAX_FUSED_WORKERS:
+        # giant n: the fused kernels keep the whole worker axis in sublanes
+        # (n ≤ 64); route to the hierarchical bucket-then-aggregate tier.
+        return _tree_aggregate_large_n(cfg, key, sent, attack_ctx, weights,
+                                       return_info, valid)
     w_mat = bvalid = None
     if valid is not None:
         if agg.bucket_size > 1 and agg.rule != "mean":
@@ -386,6 +516,24 @@ def tree_aggregate_pallas_wire(cfg, key, wc, attack_ctx=None,
     from repro.kernels.robust_agg import robust_agg as coord_kernel
 
     n = wc.n
+    if n > norm_agg.MAX_FUSED_WORKERS:
+        # giant n: the wire kernels' n-in-sublanes layout no longer holds —
+        # reconstruct (densify) once and take the dense giant-n tier. The
+        # wire path's per-leaf FLAT stats reshape back to the aggregate
+        # shapes so the dense tier's tree-shaped AttackCtx contract holds.
+        cand = W.reconstruct(wc)
+        ctx = attack_ctx
+        if ctx is not None and (ctx.means is not None
+                                or ctx.stds is not None):
+            def unflat(stats):
+                return jax.tree.unflatten(wc.treedef, [
+                    s.reshape(sh) for s, sh in zip(stats, wc.shapes)])
+            ctx = AttackCtx(
+                fn=ctx.fn, mask=ctx.mask,
+                means=None if ctx.means is None else unflat(ctx.means),
+                stds=None if ctx.stds is None else unflat(ctx.stds))
+        return tree_aggregate_pallas(cfg, key, cand, ctx,
+                                     return_info=return_info, valid=valid)
     w_mat = bvalid = None
     if valid is not None:
         if agg.bucket_size > 1 and agg.rule != "mean":

@@ -24,6 +24,32 @@ AGG_CONSTANTS = {
 }
 
 
+def delta_over_active_set(n_active: int, n_byz_active: int, *,
+                          bucket_size: int = 1) -> float:
+    """Effective Byzantine fraction δ over the ACTIVE cohort.
+
+    The (δ,c)-robustness guarantees are stated over whatever set the
+    aggregator actually sees — the sampled participants of a partial-
+    participation round, serve's buffered subset, or the guard's valid
+    subset — NOT the configured worker set (BROADCAST, Zhu & Ling 2021,
+    analyzes exactly this: δ over the per-round active set with possibly
+    time-varying Byzantine membership). Every δ-budget check in spec,
+    serve, and the fault layer goes through this single helper so the
+    three bookkeepings cannot drift.
+
+    Bucketing with size s multiplies the adversarial fraction by s (one
+    Byzantine member poisons its whole bucket, Karimireddy et al. 2022),
+    so the bucketed budget is δ·s. ``n_byz_active`` is clamped to
+    ``n_active`` (a cohort cannot contain more Byzantines than members);
+    an empty cohort is fully adversarial by convention.
+    """
+    n_active = int(n_active)
+    if n_active <= 0:
+        return 1.0
+    b = min(int(n_byz_active), n_active)
+    return b * max(int(bucket_size), 1) / n_active
+
+
 @dataclasses.dataclass(frozen=True)
 class ProblemConstants:
     """Smoothness / heterogeneity constants of problem (1)."""
@@ -189,7 +215,8 @@ BITS_FAMILY = {
 
 
 def comm_bits_per_round(method: str, compressor, d: int, *,
-                        p: float = 1.0, dims=None) -> float:
+                        p: float = 1.0, dims=None,
+                        participation: float = 1.0) -> float:
     """Expected uploaded bits per worker per round, the theory-side twin of
     ``GradientEstimator.expected_bits`` (pinned to it by the conformance
     harness, tests/test_estimator_contract.py).
@@ -206,6 +233,13 @@ def comm_bits_per_round(method: str, compressor, d: int, *,
     the biased/contractive branch differs in kind: an EF21-family method
     never pays a full-gradient round, because the per-worker error-feedback
     state absorbs the bias instead of a p-coin correcting it.
+
+    ``participation`` (fraction of the configured workers sampled each
+    round) scales the per-configured-worker expectation: a non-sampled
+    worker uploads ZERO bits that round, so the average upload per worker
+    per round is participation × (per-participant bits). The runner bills
+    the measured side identically (n_active/n_workers × round_bits), which
+    is what the conformance harness pins.
     """
     if method not in BITS_FAMILY:
         raise KeyError(
@@ -215,12 +249,12 @@ def comm_bits_per_round(method: str, compressor, d: int, *,
         d = int(sum(int(x) for x in dims))
     dense = 32.0 * d
     if family == "dense":
-        return dense
+        return participation * dense
     bits_q = (float(compressor.tree_bits(dims)) if dims is not None
               else float(compressor.bits_per_vector(d)))
     if family == "vr_switch":
-        return p * dense + (1.0 - p) * bits_q
-    return bits_q                      # compressed | contractive_ef
+        return participation * (p * dense + (1.0 - p) * bits_q)
+    return participation * bits_q      # compressed | contractive_ef
 
 
 # ---------------------------------------------------------------------------

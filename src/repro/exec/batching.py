@@ -126,6 +126,9 @@ def run_group(cells: Sequence[Tuple[str, object]], *, log_every: int = 10,
 
     histories = [[] for _ in range(k)]
     comm_bits = [0.0] * k
+    # participation is part of the group key (to_dict minus seed), so one
+    # scale factor covers every member of the batch
+    part_frac = spec0.resolved_participation() / spec0.n_workers
     pending_ck = []                      # per-step (k,) arrays; synced lazily
     t0 = time.time()
     metrics = {}
@@ -137,7 +140,7 @@ def run_group(cells: Sequence[Tuple[str, object]], *, log_every: int = 10,
             for ck in pending_ck:
                 cks = None if ck is None else np.asarray(ck)
                 for i in range(k):
-                    comm_bits[i] += exp.method.round_bits(
+                    comm_bits[i] += part_frac * exp.method.round_bits(
                         n_params, True if cks is None else bool(cks[i]))
             pending_ck.clear()
             mats = {name: np.asarray(v) for name, v in metrics.items()}

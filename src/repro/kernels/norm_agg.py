@@ -51,6 +51,15 @@ from repro.kernels import quantize
 
 DEFAULT_TILE_D = 2048     # (64 workers x 2048 lanes x 4B = 512 KiB in VMEM)
 
+# the fused kernels keep the WHOLE worker axis resident in sublanes, which
+# caps them at MAX_FUSED_WORKERS; callers route larger stacks to the blocked
+# kernels below (worker axis tiled too — DESIGN.md §7). One threshold shared
+# with the jnp oracle's blocked-Gram dispatch (core/aggregators.py, which
+# imports nothing from repro — no cycle).
+from repro.core.aggregators import MAX_FUSED_WORKERS  # noqa: E402
+
+DEFAULT_TILE_N = 64       # worker tile of the blocked kernels
+
 
 # ---------------------------------------------------------------------------
 # bucketing as a linear operator (the in-kernel permutation)
@@ -357,6 +366,36 @@ def rfa_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     return outs, {"bucket_weights": w, "rfa_sq": sq_t}
 
 
+def krum_select(g, n_byz: int, bvalid=None):
+    """Krum scoring (Eq. 15) from an (m, m) Gram matrix — the tiny O(m²)
+    jnp step between the two kernel sweeps, shared by the fused and blocked
+    drivers. Returns ``(onehot, scores, best)``: the winner's selection
+    one-hot over the (bucketed) rows, the per-row scores, and the argmin.
+
+    ``bvalid`` (fault guard): invalid rows/cols leave the distance pool, the
+    neighbour count tracks the valid count, and an invalid row can never be
+    selected — ``Aggregator._krum_masked``'s twin."""
+    m = g.shape[0]
+    sq = jnp.diag(g)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
+    if bvalid is not None:
+        pair_ok = bvalid[:, None] & bvalid[None, :]
+        d2 = jnp.where(pair_ok, d2, jnp.inf)
+        c = jnp.sum(bvalid.astype(jnp.int32))
+        kv = jnp.maximum(c - n_byz - 2, 1)
+        near = jnp.arange(m)[None, :] < kv
+        srt = jnp.sort(d2, axis=1)
+        scores = jnp.sum(jnp.where(near, srt, 0.0), axis=1)
+        scores = jnp.where(bvalid, scores, jnp.inf)
+    else:
+        k = max(m - n_byz - 2, 1)
+        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    best = jnp.argmin(scores)
+    onehot = jax.nn.one_hot(best, m, dtype=jnp.float32)
+    return onehot, scores, best
+
+
 def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
                   attack_fn=None, n_byz: int = 1,
                   tile_d: int = DEFAULT_TILE_D, interpret=None,
@@ -374,32 +413,201 @@ def krum_segments(segs, *, w_mat=None, mask=None, means=None, stds=None,
     g = sum(pair_gram(xs, w_mat, mask, mu, sd, valid, attack_fn=attack_fn,
                       tile_d=tile_d, interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds))
-    m = g.shape[0]
-    sq = jnp.diag(g)
-    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
-    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, d2.dtype))
-    if bvalid is not None:
-        # fault guard: invalid rows/cols leave the distance pool, the
-        # neighbour count tracks the valid count, and an invalid row can
-        # never be selected — Aggregator._krum_masked's twin.
-        pair_ok = bvalid[:, None] & bvalid[None, :]
-        d2 = jnp.where(pair_ok, d2, jnp.inf)
-        c = jnp.sum(bvalid.astype(jnp.int32))
-        kv = jnp.maximum(c - n_byz - 2, 1)
-        near = jnp.arange(m)[None, :] < kv
-        srt = jnp.sort(d2, axis=1)
-        scores = jnp.sum(jnp.where(near, srt, 0.0), axis=1)
-        scores = jnp.where(bvalid, scores, jnp.inf)
-    else:
-        k = max(m - n_byz - 2, 1)
-        scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
-    best = jnp.argmin(scores)
-    onehot = jax.nn.one_hot(best, m, dtype=jnp.float32)
+    onehot, scores, best = krum_select(g, n_byz, bvalid)
     w_eff = onehot if w_mat is None else onehot @ w_mat
     outs = [weighted_sum(xs, w_eff, mask, mu, sd, valid,
                          attack_fn=attack_fn, tile_d=tile_d,
                          interpret=interpret)
             for xs, mu, sd in zip(segs, means, stds)]
+    if not return_info:
+        return outs
+    return outs, {"bucket_weights": onehot, "krum_scores": scores,
+                  "krum_selected": best}
+
+
+# ---------------------------------------------------------------------------
+# blocked kernels (giant n — worker axis tiled too; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# Above MAX_FUSED_WORKERS the fused layout (whole worker axis in sublanes)
+# no longer holds. The blocked twins tile the worker axis as well: no VMEM
+# block ever holds more than (TILE_N, TILE_D) of the stack, and no kernel
+# materializes anything that scales like n² · d — the Gram matrix
+# accumulates (TILE_N, TILE_N) output blocks over a d-fastest grid.
+#
+# Inputs here are DENSE fp32 stacks with attack / guard select-zero /
+# bucketing already materialized (core/sharded_agg.py runs the jnp prologue
+# for this tier — the zero-copy fusion is a ≤64-worker luxury, traded for
+# unbounded n). Zero-padded worker rows carry zero weight (weighted sums),
+# are sliced away (Gram / distances), or both — always neutral.
+
+def _pad_rows(a, mp):
+    """Zero-pad the leading (worker) axis to ``mp`` rows."""
+    pad = mp - a.shape[0]
+    if pad:
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+def _tile_n_for(m: int, tile_n: int) -> int:
+    """Sublane-aligned worker tile; shrink for small m (one block)."""
+    return min(tile_n, max(8, -(-m // 8) * 8))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_n", "tile_d", "interpret"))
+def pair_gram_blocked(x, *, tile_n: int = DEFAULT_TILE_N,
+                      tile_d: int = DEFAULT_TILE_D, interpret=None):
+    """(m, m) Gram of a dense (m, d) stack with BOTH axes tiled: grid
+    (mi, mj, dk), d fastest, so each (tile_n, tile_n) output block
+    accumulates its d-sweep in VMEM. Peak VMEM is 2·(tile_n, tile_d) input
+    blocks + one (tile_n, tile_n) accumulator, independent of m and d."""
+    m, d = x.shape
+    tile = _tile_for(d, tile_d)
+    dp = -(-d // tile) * tile
+    tn = _tile_n_for(m, tile_n)
+    mp = -(-m // tn) * tn
+    xp = _pad_rows(_pad_cols(x.astype(jnp.float32), dp), mp)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(a_ref[...], b_ref[...].T,
+                              preferred_element_type=jnp.float32)
+
+    g = pl.pallas_call(
+        kernel,
+        grid=(mp // tn, mp // tn, dp // tile),
+        in_specs=[pl.BlockSpec((tn, tile), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((tn, tile), lambda i, j, k: (j, k))],
+        out_specs=pl.BlockSpec((tn, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, mp), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(xp, xp)
+    return g[:m, :m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_n", "tile_d", "interpret"))
+def sqdist_to_blocked(x, z, *, tile_n: int = DEFAULT_TILE_N,
+                      tile_d: int = DEFAULT_TILE_D, interpret=None):
+    """(m,) squared distances ||x_i − z||² of a dense (m, d) stack to z
+    (d,), worker axis tiled: grid (mi, dk), d fastest, each (tile_n, 1)
+    output block accumulating its d-sweep in VMEM."""
+    m, d = x.shape
+    tile = _tile_for(d, tile_d)
+    dp = -(-d // tile) * tile
+    tn = _tile_n_for(m, tile_n)
+    mp = -(-m // tn) * tn
+    xp = _pad_rows(_pad_cols(x.astype(jnp.float32), dp), mp)
+    zp = _pad_cols(z.reshape(1, d).astype(jnp.float32), dp)
+
+    def kernel(x_ref, z_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        diff = x_ref[...] - z_ref[...]
+        o_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    sq = pl.pallas_call(
+        kernel,
+        grid=(mp // tn, dp // tile),
+        in_specs=[pl.BlockSpec((tn, tile), lambda i, k: (i, k)),
+                  pl.BlockSpec((1, tile), lambda i, k: (0, k))],
+        out_specs=pl.BlockSpec((tn, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(xp, zp)
+    return sq[:m, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_n", "tile_d", "interpret"))
+def weighted_sum_blocked(x, w, *, tile_n: int = DEFAULT_TILE_N,
+                         tile_d: int = DEFAULT_TILE_D, interpret=None):
+    """z = Σ_i w_i · x_i over a dense (m, d) stack, worker axis tiled:
+    grid (dk, mi), WORKER tiles fastest, so each (1, tile_d) output block
+    accumulates its worker sweep in VMEM. Padded rows get weight 0."""
+    m, d = x.shape
+    tile = _tile_for(d, tile_d)
+    dp = -(-d // tile) * tile
+    tn = _tile_n_for(m, tile_n)
+    mp = -(-m // tn) * tn
+    xp = _pad_rows(_pad_cols(x.astype(jnp.float32), dp), mp)
+    wp = _pad_rows(w.reshape(m, 1).astype(jnp.float32), mp)
+
+    def kernel(x_ref, w_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(x_ref[...] * w_ref[...], axis=0, keepdims=True)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(dp // tile, mp // tn),
+        in_specs=[pl.BlockSpec((tn, tile), lambda k, i: (i, k)),
+                  pl.BlockSpec((tn, 1), lambda k, i: (i, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda k, i: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(xp, wp)
+    return out[0, :d]
+
+
+# ---------------------------------------------------------------------------
+# blocked rule drivers (dense segments; prologue pre-materialized)
+# ---------------------------------------------------------------------------
+
+def rfa_segments_blocked(segs, *, iters: int = 8, eps: float = 1e-8,
+                         bvalid=None, tile_n: int = DEFAULT_TILE_N,
+                         tile_d: int = DEFAULT_TILE_D, interpret=None,
+                         return_info: bool = False):
+    """Giant-n smoothed Weiszfeld over dense (m, d_j) segments with global
+    distances — semantics of ``Aggregator._rfa_tree`` / ``_rfa_masked``
+    (via ``bvalid``). Costs 2 blocked sweeps per iteration (weighted sum +
+    distances) + 1 final, vs the fused driver's 1 + 1 — the price of a
+    worker axis of unbounded size. Returns per-segment (d_j,) aggregates;
+    ``return_info`` mirrors ``rfa_segments``."""
+    m = segs[0].shape[0]
+    kw = dict(tile_n=tile_n, tile_d=tile_d, interpret=interpret)
+    if bvalid is not None:
+        bv = bvalid.astype(jnp.float32)
+        w = bv / jnp.maximum(jnp.sum(bv), 1.0)
+    else:
+        w = jnp.full((m,), 1.0 / m, jnp.float32)
+    for _ in range(iters):
+        zs = [weighted_sum_blocked(xs, w, **kw) for xs in segs]
+        sq = sum(sqdist_to_blocked(xs, z, **kw)
+                 for xs, z in zip(segs, zs))
+        w = 1.0 / jnp.sqrt(sq + eps)
+        if bvalid is not None:
+            w = jnp.where(bvalid, w, 0.0)
+        w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    outs = [weighted_sum_blocked(xs, w, **kw) for xs in segs]
+    if not return_info:
+        return outs
+    sq_t = sum(sqdist_to_blocked(xs, z, **kw)
+               for xs, z in zip(segs, outs))
+    return outs, {"bucket_weights": w, "rfa_sq": sq_t}
+
+
+def krum_segments_blocked(segs, *, n_byz: int = 1, bvalid=None,
+                          tile_n: int = DEFAULT_TILE_N,
+                          tile_d: int = DEFAULT_TILE_D, interpret=None,
+                          return_info: bool = False):
+    """Giant-n Krum over dense (m, d_j) segments: blocked Gram (global
+    pairwise distances, (tile_n, tile_n) accumulation — nothing n²·d-sized
+    ever exists), tiny O(m²) scoring in jnp (``krum_select``), one blocked
+    weighted-sum sweep extracting the winner. Semantics of
+    ``Aggregator._krum_tree`` / ``_krum_masked`` (via ``bvalid``)."""
+    kw = dict(tile_n=tile_n, tile_d=tile_d, interpret=interpret)
+    g = sum(pair_gram_blocked(xs, **kw) for xs in segs)
+    onehot, scores, best = krum_select(g, n_byz, bvalid)
+    outs = [weighted_sum_blocked(xs, onehot, **kw) for xs in segs]
     if not return_info:
         return outs
     return outs, {"bucket_weights": onehot, "krum_scores": scores,

@@ -13,6 +13,7 @@ norm-based rules (RFA/Krum) alike.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.backend import resolve_interpret  # noqa: F401 (re-export)
 from repro.kernels.robust_agg import robust_agg as _robust_agg
@@ -26,11 +27,36 @@ def _perm_bucket_matrix(key, n, bucket_size):
     return norm_agg.bucket_matrix(perm, n, bucket_size)
 
 
+def _bucket_first(x, key, bucket_size):
+    """Giant-n prologue (DESIGN.md §7): materialize the Alg. 2 bucket
+    reduction in jnp so the rule only ever sees the (nb, d) bucketed stack."""
+    from repro.core.aggregators import _bucketize_perm
+    y = x.astype(jnp.float32)
+    if bucket_size > 1:
+        n = y.shape[0]
+        perm = (jax.random.permutation(key, n) if key is not None
+                else jnp.arange(n))       # key=None: legacy contiguous rows
+        y = _bucketize_perm(y, perm, bucket_size)
+    return y
+
+
 def robust_agg(x, key=None, *, bucket_size: int = 1, rule: str = "median",
                trim: int = 1, tile_d: int = norm_agg.DEFAULT_TILE_D,
                interpret=None):
     """Full (δ,c)-ARAgg for (n, d) stacked workers: fused permutation +
-    bucket-mean + coordinate rule, one HBM sweep of x."""
+    bucket-mean + coordinate rule, one HBM sweep of x. Above
+    ``MAX_FUSED_WORKERS`` (the kernel's n-in-sublanes cap) the rule runs
+    bucket-first in jnp — coordinate sorts at giant n are XLA's job."""
+    if x.shape[0] > norm_agg.MAX_FUSED_WORKERS:
+        from repro.core.aggregators import coord_median, coord_trimmed_mean
+        y = _bucket_first(x, key, bucket_size)
+        if rule == "mean":
+            return jnp.mean(y, axis=0)
+        if rule == "median":
+            return coord_median(y)
+        if rule == "trimmed":
+            return coord_trimmed_mean(y, trim)
+        raise ValueError(rule)
     if key is not None and bucket_size > 1:
         w = _perm_bucket_matrix(key, x.shape[0], bucket_size)
         return _robust_agg(x, w, rule=rule, trim=trim, tile_d=tile_d,
@@ -43,7 +69,19 @@ def rfa_agg(x, key=None, *, bucket_size: int = 1, iters: int = 8,
             eps: float = 1e-8, tile_d: int = norm_agg.DEFAULT_TILE_D,
             interpret=None):
     """Geometric median (smoothed Weiszfeld) of (n, d) stacked workers via
-    the fused norm_agg kernels: T+1 HBM sweeps for T iterations."""
+    the fused norm_agg kernels: T+1 HBM sweeps for T iterations. Above
+    ``MAX_FUSED_WORKERS`` the stack is bucket-reduced first; if the bucketed
+    rows fit back under the cap the fused kernels run on them, else the
+    BLOCKED drivers (worker-tiled) take over."""
+    if x.shape[0] > norm_agg.MAX_FUSED_WORKERS:
+        y = _bucket_first(x, key, bucket_size)
+        if y.shape[0] <= norm_agg.MAX_FUSED_WORKERS:
+            return norm_agg.rfa_segments([y], iters=iters, eps=eps,
+                                         tile_d=tile_d,
+                                         interpret=interpret)[0]
+        return norm_agg.rfa_segments_blocked([y], iters=iters, eps=eps,
+                                             tile_d=tile_d,
+                                             interpret=interpret)[0]
     w = None
     if key is not None and bucket_size > 1:
         w = _perm_bucket_matrix(key, x.shape[0], bucket_size)
@@ -54,7 +92,18 @@ def rfa_agg(x, key=None, *, bucket_size: int = 1, iters: int = 8,
 def krum_agg(x, key=None, *, bucket_size: int = 1, n_byz: int = 1,
              tile_d: int = norm_agg.DEFAULT_TILE_D, interpret=None):
     """Krum (Eq. 15) of (n, d) stacked workers via the fused norm_agg
-    kernels: 2 HBM sweeps (Gram + winner extraction)."""
+    kernels: 2 HBM sweeps (Gram + winner extraction). Above
+    ``MAX_FUSED_WORKERS`` the stack is bucket-reduced first; the blocked
+    Gram driver handles whatever still exceeds the cap — nothing n²·d-sized
+    is ever materialized."""
+    if x.shape[0] > norm_agg.MAX_FUSED_WORKERS:
+        y = _bucket_first(x, key, bucket_size)
+        if y.shape[0] <= norm_agg.MAX_FUSED_WORKERS:
+            return norm_agg.krum_segments([y], n_byz=n_byz, tile_d=tile_d,
+                                          interpret=interpret)[0]
+        return norm_agg.krum_segments_blocked([y], n_byz=n_byz,
+                                              tile_d=tile_d,
+                                              interpret=interpret)[0]
     w = None
     if key is not None and bucket_size > 1:
         w = _perm_bucket_matrix(key, x.shape[0], bucket_size)

@@ -16,9 +16,12 @@ omniscient attack can be injected in the same load via
 tensor never hits HBM. The legacy contiguous path (pre-permuted rows +
 ``bucket_size``) is kept for callers that already hold a permuted stack.
 
-TPU adaptation: the worker axis (n ≤ 64) lives in the sublane dimension;
-TILE_D is lane-aligned (multiple of 128). ``jnp.sort`` along axis 0 inside
-the kernel lowers to a fixed-size bitonic network over sublanes.
+TPU adaptation: the worker axis (n ≤ norm_agg.MAX_FUSED_WORKERS = 64) lives
+in the sublane dimension; TILE_D is lane-aligned (multiple of 128).
+``jnp.sort`` along axis 0 inside the kernel lowers to a fixed-size bitonic
+network over sublanes. Giant-n stacks never reach this kernel: callers
+(kernels/ops.py, core/sharded_agg.py) bucket-reduce first and run the
+coordinate rule in jnp — DESIGN.md §7.
 """
 from __future__ import annotations
 

@@ -34,6 +34,11 @@ identical backend calls (``Aggregator.tree_traced`` on gspmd,
                        guard's *detection*, scored against ``fault_mask``
                        by ``repro.obs.detect.fault_metrics``. None when
                        ``fault_guard`` is off.
+* ``sampled_mask``   — (n,) this round's participation cohort (DESIGN.md
+                       §7): True = the worker spoke. Bit-replayable from
+                       ``(spec, seed)`` — the mask is drawn from its own
+                       fold_in stream, independent of the attack and
+                       fault streams. None at full participation.
 
 Everything here is diagnostics-only: the aggregate value never flows
 through this module's extra ops, so numerics cannot drift (pinned by
@@ -65,11 +70,12 @@ class RoundTrace:
     rfa_residual: Any = None       # ()   f32 | None
     fault_mask: Any = None         # (n,) bool | None (injected ground truth)
     guard_valid: Any = None        # (n,) bool | None (guard's verdict)
+    sampled_mask: Any = None       # (n,) bool | None (participation cohort)
 
 
 _RT_DATA = ("influence", "dist_to_agg", "bucket_weights", "byz_mask",
             "krum_scores", "krum_selected", "rfa_weights", "rfa_residual",
-            "fault_mask", "guard_valid")
+            "fault_mask", "guard_valid", "sampled_mask")
 
 jax.tree_util.register_pytree_node(
     RoundTrace,
@@ -102,8 +108,87 @@ def to_host(rt: RoundTrace) -> dict:
 
 def traced_message_phase(cfg, attack_key, agg_key, cand):
     """Telemetry twin of ``engine.message_phase``: (agg, RoundTrace) with
-    ``agg`` bit-identical to the untraced phase."""
+    ``agg`` bit-identical to the untraced phase. Under partial
+    participation (the engine step published a sampled mask) the twin
+    mirrors ``engine.participating_message_phase`` instead and the trace
+    carries ``sampled_mask``."""
+    if engine._PHASE_SAMPLED[0] is not None:
+        return _traced_participating(cfg, attack_key, agg_key, cand,
+                                     engine._PHASE_SAMPLED[0])
     return traced_ingest_message_phase(cfg, attack_key, agg_key, cand)
+
+
+def _traced_participating(cfg, attack_key, agg_key, cand, sampled):
+    """Telemetry twin of ``engine.participating_message_phase``: the same
+    masked backend calls (non-sampled rows at zero weight, attack
+    statistics over the sampled cohort) with ``return_info=True``, plus
+    the sampled mask recorded in the trace. Aggregates stay bit-identical
+    to the untraced participating phase."""
+    from repro.core import wire
+    plan = getattr(cfg, "fault_plan", None)
+    fault_mask = None
+    if isinstance(cand, wire.WireCandidates):
+        from repro.faults import inject
+        if plan is not None and plan.message_faults:
+            cand = inject.inject_wire(plan, attack_key, cand)
+        if plan is not None:
+            fault_mask = inject.injected_mask(plan, attack_key, cand.n,
+                                              inject.MESSAGE_FAULTS)
+        cand = wire.reconstruct(cand)
+    elif plan is not None:
+        from repro.faults import inject
+        if plan.tensor_faults:
+            cand = inject.inject_candidates(plan, attack_key, cand)
+        fault_mask = inject.injected_mask(
+            plan, attack_key, jax.tree.leaves(cand)[0].shape[0],
+            inject.TENSOR_FAULTS)
+    if getattr(cfg, "fault_guard", False):
+        from repro.faults import guard as fguard
+        valid_pre = fguard.finite_row_mask(cand) & sampled
+        sent = engine.apply_attack(cfg, attack_key, cand,
+                                   stats_valid=valid_pre)
+        valid = fguard.finite_row_mask(sent) & sampled
+        if cfg.agg_mode == "pallas":
+            from repro.core.sharded_agg import tree_aggregate_pallas
+            agg, info = tree_aggregate_pallas(cfg, agg_key, sent,
+                                              valid=valid, return_info=True)
+        else:
+            agg, info = cfg.aggregator.tree_masked(agg_key, sent, valid,
+                                                   return_info=True)
+        return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=None,
+                                 weights=None, info=info, valid=valid,
+                                 fault_mask=fault_mask, sampled=sampled)
+    clean = cfg.n_byz == 0 or cfg.attack.name in ("NA", "LF")
+    if cfg.agg_mode == "pallas":
+        from repro.core.sharded_agg import tree_aggregate_pallas
+        if clean:
+            agg, info = tree_aggregate_pallas(cfg, agg_key, cand,
+                                              valid=sampled,
+                                              return_info=True)
+            sent = cand
+        elif cfg.attack.coord_apply is not None:
+            ctx = engine.fusable_attack_ctx(cfg, cand, cfg.byz_mask(),
+                                            stats_valid=sampled)
+            agg, info = tree_aggregate_pallas(cfg, agg_key, cand,
+                                              attack_ctx=ctx, valid=sampled,
+                                              return_info=True)
+            sent = engine.apply_attack(cfg, attack_key, cand,
+                                       stats_valid=sampled)
+        else:
+            sent = engine.apply_attack(cfg, attack_key, cand,
+                                       stats_valid=sampled)
+            agg, info = tree_aggregate_pallas(cfg, agg_key, sent,
+                                              valid=sampled,
+                                              return_info=True)
+    else:
+        sent = engine.apply_attack(cfg, attack_key, cand,
+                                   stats_valid=sampled)
+        agg, info = cfg.aggregator.tree_masked(agg_key, sent, sampled,
+                                               return_info=True)
+    return agg, _build_trace(cfg, agg_key, sent, agg, byz_mask=None,
+                             weights=None, info=info, valid=sampled,
+                             fault_mask=fault_mask, sampled=sampled,
+                             record_guard=False)
 
 
 def traced_ingest_message_phase(cfg, attack_key, agg_key, cand, *,
@@ -281,7 +366,8 @@ def _traced_guarded(cfg, attack_key, agg_key, cand, clean, *, byz_mask,
 # ---------------------------------------------------------------------------
 
 def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
-                 info, valid=None, fault_mask=None) -> RoundTrace:
+                 info, valid=None, fault_mask=None, sampled=None,
+                 record_guard=True) -> RoundTrace:
     """Assemble the RoundTrace from the backend's rule intermediates plus
     the materialized sent stack. All fp32, diagnostics only.
 
@@ -366,4 +452,6 @@ def _build_trace(cfg, agg_key, sent, agg, *, byz_mask, weights,
                       bucket_weights=bw, byz_mask=mask,
                       krum_scores=krum_scores, krum_selected=krum_selected,
                       rfa_weights=rfa_weights, rfa_residual=rfa_residual,
-                      fault_mask=fault_mask, guard_valid=valid)
+                      fault_mask=fault_mask,
+                      guard_valid=valid if record_guard else None,
+                      sampled_mask=sampled)

@@ -484,11 +484,18 @@ class AggregationService:
                     occ_n = 0
                     svc["version"] = r + 1
                     end_segment()                  # contributors redispatch
+                    byz_in_buffer = int((clients < spec.n_byz).sum())
+                    # per-fire byzantine fraction over the ACTIVE set (the
+                    # buffer), same rule the spec validates against — the
+                    # streaming twin of RunSpec's sampled-cohort accounting
+                    from repro.core.theory import delta_over_active_set
                     m = {"round": r, "t_virtual": float(ev.t),
                          "loss": last_loss, "g_norm": g_norm,
                          "staleness_mean": float(tau.mean()),
                          "staleness_max": int(tau.max()),
-                         "byz_in_buffer": int((clients < spec.n_byz).sum()),
+                         "byz_in_buffer": byz_in_buffer,
+                         "delta_active": delta_over_active_set(
+                             K, byz_in_buffer),
                          "cursor": svc["cursor"]}
                     history.append(m)
                     if ledger is not None:

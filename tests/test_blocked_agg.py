@@ -1,0 +1,198 @@
+"""Giant-n hierarchical aggregation (DESIGN.md §7): blocked-Gram parity and
+the no-O(n²·d) memory pin.
+
+Above ``MAX_FUSED_WORKERS`` both backends switch representation: the jnp
+oracle accumulates the pairwise-distance Gram row-tile by row-tile
+(``_tree_pair_sqdists_blocked``), and the pallas backend routes through the
+bucket-then-aggregate tier (``sharded_agg._tree_aggregate_large_n``) whose
+kernels tile the worker axis too. These tests pin:
+
+* parity of Krum/RFA across the fused/blocked seam at n ∈ {16, 256, 1024}
+  plus non-tile-multiple n, on both backends, masked and unmasked;
+* the ≤64-worker path structurally untouched (no scan in its jaxpr);
+* the acceptance bar: Krum at n = 4096 traces with NO intermediate that
+  scales like n²·d — the largest live aval is O(n²), on the jnp path and
+  on the host-side trace of the blocked-kernel path alike.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators as A
+from repro.core import sharded_agg as SA
+from repro.core.byz_vr_marina import ByzVRMarinaConfig
+from repro.kernels import norm_agg as NA
+
+from _jaxpr_scan import iter_eqns
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _stack(n, d=24, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (n, d), jnp.float32),
+            "b": jax.random.normal(k2, (n, 3), jnp.float32)}
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# blocked jnp Gram == the fused formula
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [16, 130, 256, 1000, 1024])
+def test_blocked_pair_sqdists_matches_fused_formula(n):
+    xs = _stack(n)
+    got = A._tree_pair_sqdists(xs)
+    flat = jnp.concatenate(
+        [a.reshape(n, -1) for a in jax.tree.leaves(xs)], axis=1)
+    sq = jnp.sum(flat * flat, axis=1)
+    want = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+
+
+def test_small_n_path_structurally_untouched():
+    """n ≤ MAX_FUSED_WORKERS must NOT take the blocked branch: its jaxpr
+    stays scan-free, so the pre-existing fused program is byte-stable."""
+    prims = {e.primitive.name for e in iter_eqns(jax.make_jaxpr(
+        lambda x: A._tree_pair_sqdists({"x": x}))(
+            jnp.zeros((A.MAX_FUSED_WORKERS, 8))).jaxpr)}
+    assert "scan" not in prims and "while" not in prims
+    prims_big = {e.primitive.name for e in iter_eqns(jax.make_jaxpr(
+        lambda x: A._tree_pair_sqdists({"x": x}))(
+            jnp.zeros((A.MAX_FUSED_WORKERS + 1, 8))).jaxpr)}
+    assert "scan" in prims_big            # the blocked branch engaged
+
+
+# ---------------------------------------------------------------------------
+# Krum / RFA parity across the fused/blocked seam, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["krum", "rfa"])
+@pytest.mark.parametrize("n", [16, 130, 256, 1024])
+def test_rule_parity_across_backends(rule, n):
+    agg = A.get_aggregator(rule, bucket_size=2, n_byz=max(1, n // 16))
+    cfg = ByzVRMarinaConfig(n_workers=n, n_byz=max(1, n // 16),
+                            aggregator=agg)
+    xs = _stack(n, d=24 if n <= 256 else 8)
+    key = jax.random.PRNGKey(1)
+    oracle = agg.tree(key, xs)            # gspmd backend (jnp, blocked >64)
+    got = SA.tree_aggregate_pallas(cfg, key, xs)
+    assert _max_err(got, oracle) < 2e-5
+
+
+@pytest.mark.parametrize("rule", ["krum", "rfa"])
+@pytest.mark.parametrize("n", [130, 256])
+def test_masked_rule_parity_across_backends(rule, n):
+    """Fault-guard / participation masking through the giant-n tier."""
+    agg = A.get_aggregator(rule, bucket_size=2, n_byz=4)
+    cfg = ByzVRMarinaConfig(n_workers=n, n_byz=4, aggregator=agg)
+    xs = _stack(n)
+    valid = jax.random.bernoulli(jax.random.PRNGKey(9), 0.8, (n,))
+    key = jax.random.PRNGKey(1)
+    oracle = agg.tree_masked(key, xs, valid)
+    got = SA.tree_aggregate_pallas(cfg, key, xs, valid=valid)
+    assert _max_err(got, oracle) < 2e-5
+
+
+@pytest.mark.parametrize("n", [96, 130])
+def test_unbucketed_giant_n_uses_blocked_drivers(n):
+    """bucket_size=0 at giant n: the full stack reaches the blocked
+    drivers directly (no bucket reduction shrinks it under the cap)."""
+    for rule in ("krum", "rfa"):
+        agg = A.get_aggregator(rule, n_byz=3)
+        cfg = ByzVRMarinaConfig(n_workers=n, n_byz=3, aggregator=agg)
+        xs = _stack(n)
+        key = jax.random.PRNGKey(2)
+        assert _max_err(SA.tree_aggregate_pallas(cfg, key, xs),
+                        agg.tree(key, xs)) < 2e-5
+
+
+@pytest.mark.parametrize("rule,kw", [("krum", {"n_byz": 5}),
+                                     ("rfa", {"iters": 4})])
+def test_blocked_drivers_match_flat_oracle(rule, kw):
+    """The blocked drivers alone (dense prologue pre-applied) against the
+    flat Aggregator call, at a non-tile-multiple n."""
+    n = 150
+    x = jax.random.normal(KEY, (n, 70), jnp.float32)
+    agg = A.get_aggregator(rule, **kw)
+    want = agg(jax.random.PRNGKey(0), x)
+    if rule == "krum":
+        got = NA.krum_segments_blocked([x], n_byz=5)[0]
+    else:
+        got = NA.rfa_segments_blocked([x], iters=4)[0]
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+def test_blocked_info_matches_oracle_info():
+    n = 100
+    xs = _stack(n)
+    agg = A.get_aggregator("krum", n_byz=4)
+    cfg = ByzVRMarinaConfig(n_workers=n, n_byz=4, aggregator=agg)
+    _, want = agg.tree_traced(jax.random.PRNGKey(0), xs)
+    _, info = SA.tree_aggregate_pallas(cfg, jax.random.PRNGKey(0), xs,
+                                       return_info=True)
+    assert int(info["krum_selected"]) == int(want["krum_selected"])
+    np.testing.assert_allclose(np.asarray(info["krum_scores"]),
+                               np.asarray(want["krum_scores"]), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: Krum at n = 4096 with no n²·d-sized intermediate
+# ---------------------------------------------------------------------------
+
+def _max_aval_size(jaxpr):
+    sizes = [0]
+    for eqn in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                sizes.append(int(np.prod(aval.shape or (1,))))
+    return max(sizes)
+
+
+@pytest.mark.parametrize("d", [32])
+def test_krum_4096_jnp_no_n2d_intermediate(d):
+    n = 4096
+    agg = A.get_aggregator("krum", n_byz=128)
+
+    def f(x):
+        return agg.tree(jax.random.PRNGKey(0), {"x": x})
+
+    closed = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((n, d), jnp.float32))
+    # O(n²) (the distance matrix itself) is allowed; anything that scales
+    # like n²·d is not. 4·n² sits far below n²·d for every real d.
+    assert _max_aval_size(closed.jaxpr) <= 4 * n * n
+
+
+@pytest.mark.parametrize("d", [256])
+def test_krum_4096_blocked_kernels_no_n2d_intermediate(d):
+    n = 4096
+
+    def f(x):
+        return NA.krum_segments_blocked([x], n_byz=128)[0]
+
+    closed = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((n, d), jnp.float32))
+    # host-side trace only (iter_eqns skips pallas_call bodies — in-kernel
+    # blocks are (TILE_N, TILE_D) by construction of the BlockSpecs)
+    assert _max_aval_size(closed.jaxpr) <= 4 * n * n
+
+
+def test_giant_n_tree_path_no_n2d_intermediate():
+    n, d = 4096, 64
+    agg = A.get_aggregator("krum", bucket_size=2, n_byz=128)
+    cfg = ByzVRMarinaConfig(n_workers=n, n_byz=128, aggregator=agg)
+
+    def f(x):
+        return SA.tree_aggregate_pallas(cfg, jax.random.PRNGKey(0),
+                                        {"x": x})
+
+    closed = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((n, d), jnp.float32))
+    assert _max_aval_size(closed.jaxpr) <= 4 * n * n

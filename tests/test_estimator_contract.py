@@ -166,6 +166,28 @@ def test_comm_accounting_matches_theory(method):
         assert est.round_bits(cfg, d, True) > 0
 
 
+@pytest.mark.parametrize("method", ["marina", "sgd", "byz_ef21"])
+def test_comm_accounting_under_partial_participation(method):
+    """Partial participation bills the wire for the SAMPLED cohort only:
+    measured bits are exactly participation-scaled — the c_k coin stream is
+    participation-independent (its own fold_in tag), so the full- and
+    partial-participation runs share a coin trajectory and the ratio is
+    exact, matching ``theory.comm_bits_per_round(..., participation=)``."""
+    part = 3
+    full = run(_spec(method), log_every=1)
+    sampled = run(_spec(method, participation=part), log_every=1)
+    assert sampled.comm_bits == pytest.approx(full.comm_bits * part / N,
+                                              rel=1e-12)
+    # theory twin scales identically
+    spec = _spec(method, participation=part)
+    cfg = spec.build_config()
+    d = full.n_params
+    assert theory.comm_bits_per_round(
+        method, cfg.compressor, d, p=cfg.p, participation=part / N) == \
+        pytest.approx(part / N * theory.comm_bits_per_round(
+            method, cfg.compressor, d, p=cfg.p))
+
+
 # ---------------------------------------------------------------------------
 # descent on the deterministic quadratic
 # ---------------------------------------------------------------------------

@@ -1,0 +1,205 @@
+"""Per-round client sampling (partial participation) — DESIGN.md §7.
+
+Pins the four contracts of the participation axis:
+
+* δ-accounting is over the ACTIVE set (``theory.delta_over_active_set``):
+  spec validation errors/warns on the sampled cohort, not the full fleet;
+* the sampling stream folds its own tag off the per-round step key —
+  pairwise independent of the attack and fault streams, and the zero-knob
+  (participation=1) step compiles to a jaxpr canonically identical to a
+  spec that never mentions participation;
+* bit-replayability: (spec, seed) fully determines which workers speak in
+  every round — pinned at n=1024 / participation=0.1 per the acceptance
+  bar, including the blocked-Gram Krum path;
+* estimator state of NON-sampled workers carries forward bitwise untouched
+  (checkpoint-identical rows), while sampled rows move.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, run
+from repro.api.runner import build
+from repro.core import engine
+from repro.core.theory import delta_over_active_set
+
+from _jaxpr_scan import iter_eqns
+
+
+def _spec(**kw):
+    base = dict(task="logreg", method="marina", n_workers=16, n_byz=2,
+                p=0.3, lr=0.1, attack="ALIE", aggregator="krum",
+                bucket_size=2, steps=4, seed=3,
+                data_kwargs={"n_samples": 64, "dim": 6, "batch_size": 8,
+                             "data_seed": 0})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# resolved_participation / delta_over_active_set
+# ---------------------------------------------------------------------------
+
+def test_resolved_participation():
+    assert _spec().resolved_participation() == 16
+    assert _spec(participation=1.0).resolved_participation() == 16
+    assert _spec(participation=0.5).resolved_participation() == 8
+    assert _spec(participation=3).resolved_participation() == 3
+    # tiny fractions clamp to at least one speaker
+    assert _spec(participation=1e-6).resolved_participation() == 1
+    for bad in (0.0, -0.5, 1.5, 0, 17, -3, True):
+        with pytest.raises(ValueError, match="participation"):
+            _spec(participation=bad).resolved_participation()
+
+
+def test_delta_over_active_set():
+    assert delta_over_active_set(10, 3) == pytest.approx(0.3)
+    assert delta_over_active_set(10, 2, bucket_size=2) == pytest.approx(0.4)
+    # byz clamps to the cohort: a 3-worker cohort can't hold 5 byzantines
+    assert delta_over_active_set(3, 5) == pytest.approx(1.0)
+    # degenerate cohorts are maximally pessimistic
+    assert delta_over_active_set(0, 0) == 1.0
+    assert delta_over_active_set(-1, 0) == 1.0
+    # participation=1 reproduces the full-fleet fraction exactly
+    assert delta_over_active_set(16, 2) == 2 / 16
+
+
+def test_spec_delta_checks_cover_sampled_cohort():
+    # full fleet is fine (2/16), but a 4-worker cohort can be 2/4-byz
+    with pytest.warns(UserWarning, match="active"):
+        _spec(participation=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _spec(participation=12)          # 2/12 stays < 0.5 worst-case
+    # participation needs the masked-aggregation prologue
+    with pytest.raises(ValueError, match="participation"):
+        _spec(participation=0.5, agg_mode="all_to_all",
+              aggregator="cm", n_byz=0, attack="NA")
+
+
+# ---------------------------------------------------------------------------
+# stream independence
+# ---------------------------------------------------------------------------
+
+def test_sampling_stream_disjoint_from_attack_and_fault_streams():
+    """The per-round masks are a pure function of (step key, n, n_active) —
+    flipping the attack or the fault plan must not move them."""
+    base = _spec(participation=0.5, trace=True, steps=3)
+    variants = [
+        _spec(participation=0.5, trace=True, steps=3, attack="NA"),
+        _spec(participation=0.5, trace=True, steps=3,
+              faults={"seed": 1, "faults": [{"kind": "nan_grad",
+                                             "prob": 0.5}]},
+              fault_guard=True),
+    ]
+    masks = [np.asarray(t["sampled_mask"]) for t in run(base,
+                                                        log_every=1).traces]
+    assert len(masks) == 3
+    for v in variants:
+        got = [np.asarray(t["sampled_mask"]) for t in run(v,
+                                                          log_every=1).traces]
+        for a, b in zip(masks, got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_attack_and_compressor_streams_unmoved_by_participation():
+    """Turning the participation knob must not shift any other stream:
+    the c_k compressor coin sequence is bit-identical across settings."""
+    full = run(_spec(), log_every=1)
+    part = run(_spec(participation=0.5), log_every=1)
+    ck_full = [h.get("c_k") for h in full.history]
+    ck_part = [h.get("c_k") for h in part.history]
+    assert ck_full == ck_part
+    # ... and participation really did change the trajectory
+    assert full.history[-1]["loss"] != part.history[-1]["loss"]
+
+
+def _canon_eqns(fn, args):
+    closed = jax.make_jaxpr(fn)(*args)
+    return [(e.primitive.name,
+             tuple(str(v.aval) for v in e.invars),
+             tuple(str(v.aval) for v in e.outvars))
+            for e in iter_eqns(closed.jaxpr)]
+
+
+@pytest.mark.parametrize("agg_mode", ["gspmd", "pallas"])
+def test_zero_knob_jaxpr_identical(agg_mode):
+    """participation=1.0 compiles the exact same program as a spec that
+    never mentions participation — the knob is free when off."""
+    exp_off = build(_spec(agg_mode=agg_mode))
+    exp_on = build(_spec(agg_mode=agg_mode, participation=1.0))
+    k_init, k_run = jax.random.split(jax.random.PRNGKey(3))
+    params = exp_off.init_params(k_init)
+    state = exp_off.method.init(params, exp_off.anchor(0), k_run)
+    k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, 1))
+    args = (state, exp_off.minibatch(0, k_batch), exp_off.anchor(0), k_step)
+    assert _canon_eqns(exp_on.method.step, args) == \
+        _canon_eqns(exp_off.method.step, args)
+
+
+def test_sampled_mask_is_uniform_m_subset():
+    cfg = _spec(participation=5).build_config()
+    key = jax.random.PRNGKey(0)
+    seen = set()
+    for it in range(20):
+        m = np.asarray(engine.sampled_worker_mask(cfg, jax.random.fold_in(
+            key, it)))
+        assert m.sum() == 5
+        seen.add(tuple(m.tolist()))
+    assert len(seen) > 1                  # masks move across rounds
+    # full participation compiles the mask away entirely
+    assert engine.sampled_worker_mask(_spec().build_config(), key) is None
+
+
+# ---------------------------------------------------------------------------
+# bit-replay at the acceptance scale (n=1024, participation=0.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_bit_replay_n1024_participation_01():
+    spec = _spec(n_workers=1024, n_byz=64, participation=0.1, steps=2,
+                 trace=True, data_kwargs={"n_samples": 64, "dim": 4,
+                                          "batch_size": 8, "data_seed": 0})
+    a = run(spec, log_every=1)
+    b = run(spec, log_every=1)
+    assert [h["loss"] for h in a.history] == [h["loss"] for h in b.history]
+    for x, y in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for ta, tb in zip(a.traces, b.traces):
+        ma, mb = np.asarray(ta["sampled_mask"]), np.asarray(tb["sampled_mask"])
+        np.testing.assert_array_equal(ma, mb)
+        assert ma.sum() == 102            # round(0.1 * 1024)
+
+
+# ---------------------------------------------------------------------------
+# non-sampled estimator state carries forward untouched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,worker_key", [
+    ("diana", "worker_h"), ("byz_ef21", "worker_g"), ("mvr", "worker_v")])
+def test_unsampled_worker_state_untouched(method, worker_key):
+    kw = {}
+    if method == "byz_ef21":
+        kw = dict(compressor="topk", compressor_kwargs={"ratio": 0.5})
+    spec = _spec(method=method, participation=0.5, steps=1, trace=True, **kw)
+    exp = build(spec)
+    k_init, k_run = jax.random.split(jax.random.PRNGKey(spec.seed))
+    params = exp.init_params(k_init)
+    state0 = exp.method.init(params, exp.anchor(0), k_run)
+    assert worker_key in state0
+    k_step, k_batch = jax.random.split(jax.random.fold_in(k_run, 1))
+    state1, metrics = jax.jit(exp.method.step_traced)(
+        state0, exp.minibatch(0, k_batch), exp.anchor(0), k_step)
+    sampled = np.asarray(metrics["trace"].sampled_mask)
+    assert sampled.sum() == 8
+    changed = 0
+    for old_leaf, new_leaf in zip(jax.tree.leaves(state0[worker_key]),
+                                  jax.tree.leaves(state1[worker_key])):
+        old, new = np.asarray(old_leaf), np.asarray(new_leaf)
+        # non-sampled rows: bitwise frozen (checkpoint-identical)
+        np.testing.assert_array_equal(old[~sampled], new[~sampled])
+        changed += int((old[sampled] != new[sampled]).any())
+    assert changed > 0                    # sampled rows actually moved
